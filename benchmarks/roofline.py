@@ -1,0 +1,229 @@
+"""Three-term roofline from the dry-run's compiled artifacts.
+
+Terms (seconds, per training/serving step):
+
+  compute    = HLO_FLOPs_per_device   / 197e12  (bf16 peak per v5e chip)
+  memory     = HLO_bytes_per_device   / 819e9   (HBM bandwidth)
+  collective = coll_bytes_per_device  / 50e9    (ICI per-link bandwidth)
+
+The dry-run compiles the SPMD-partitioned module, so cost_analysis numbers
+and parsed collective shapes are already per device; dividing global totals
+by chip count (the formulas in EXPERIMENTS.md) is algebraically identical.
+
+``MODEL_FLOPS`` is the analytic 6·N_active·D (train) / 2·N_active·B (+ mixer
+sequence terms) useful-work estimate; ``MODEL_FLOPS / HLO_FLOPs`` exposes
+remat and dispatch overheads.  sLSTM recurrent flops are added analytically:
+XLA costs an inner while-loop body once (documented undercount).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+
+from repro.configs import ARCHS, SHAPES
+from repro.models.common import ModelConfig
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+MESH_CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / flops model
+# ---------------------------------------------------------------------------
+def _layer_params(cfg: ModelConfig, kind: str, is_moe: bool, d_ff: int):
+    D, Hq, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    total = active = 0
+    if kind in ("attn", "xattn"):
+        if cfg.use_mla and kind == "attn":
+            qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+            nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+            n = (D * qr + qr * Hq * (nd + rd) + D * (kr + rd)
+                 + kr * Hq * nd + kr * Hq * vd + Hq * vd * D)
+        else:
+            n = D * Hq * dh + 2 * D * Hkv * dh + Hq * dh * D
+        total += n
+        active += n
+    elif kind == "mamba":
+        dI = cfg.mamba_expand * D
+        dtr = max(1, math.ceil(D / 16))
+        n = D * 2 * dI + cfg.mamba_d_conv * dI + dI * (dtr + 2 * cfg.mamba_d_state) + dtr * dI + dI * D
+        total += n
+        active += n
+    elif kind == "mlstm":
+        n = 3 * D * Hq * dh + D * 2 * Hq + Hq * dh * D
+        total += n
+        active += n
+    elif kind == "slstm":
+        n = D * 4 * Hq * dh + 4 * Hq * dh * dh + Hq * dh * D
+        total += n
+        active += n
+    if is_moe:
+        E, K, F = cfg.num_experts, cfg.top_k, cfg.moe_d_ff or cfg.d_ff
+        total += D * E + E * 3 * D * F
+        active += D * E + K * 3 * D * F
+        if cfg.num_shared_experts:
+            s = 3 * D * F * cfg.num_shared_experts
+            total += s
+            active += s
+    elif d_ff > 0:
+        total += 3 * D * d_ff
+        active += 3 * D * d_ff
+    return total, active
+
+
+def param_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active-per-token) parameters, embeddings included once."""
+    D, V = cfg.d_model, cfg.vocab_size
+    total = active = V * D  # embedding (head param counted below)
+    if not cfg.tie_embeddings:
+        total += D * V
+    # decoder stack
+    for i in range(cfg.first_k_dense):
+        t, a = _layer_params(cfg, "attn", False, cfg.dense_d_ff or cfg.d_ff)
+        total, active = total + t, active + a
+    for _ in range(cfg.n_periods):
+        for pos, kind in enumerate(cfg.block_pattern):
+            t, a = _layer_params(cfg, kind, cfg.is_moe_layer(pos), cfg.d_ff)
+            total, active = total + t, active + a
+            if cfg.enc_layers:  # decoder cross-attention sub-block
+                t2, _ = _layer_params(cfg, "xattn", False, 0)
+                total, active = total + t2, active + t2
+    for _ in range(cfg.enc_layers):
+        t, a = _layer_params(cfg, "attn", False, cfg.d_ff)
+        total, active = total + t, active + a
+    return total, active
+
+
+def _mixer_seq_flops(cfg: ModelConfig, L_q: int, L_kv: int, per_layer=True) -> float:
+    """Attention-style O(L^2)/state flops per token-layer (fwd)."""
+    D, Hq, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    fl = 0.0
+    counts = {k: 0 for k in ("attn", "xattn", "mamba", "mlstm", "slstm")}
+    for k in cfg.block_pattern:
+        counts[k] += 1
+    n_per = cfg.n_periods
+    decode = L_q == 1
+    per = {}
+    per["attn"] = 4 * L_kv * Hq * (cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim) / 2 if cfg.use_mla else 4 * L_kv * Hq * dh
+    per["xattn"] = 4 * (cfg.num_vision_tokens or cfg.num_enc_frames or 0) * Hq * dh
+    dI = cfg.mamba_expand * D
+    per["mamba"] = 6 * dI * cfg.mamba_d_state
+    # mLSTM: O(L) parallel form in train/prefill, O(1) state update in decode
+    per["mlstm"] = 6 * Hq * dh * dh if decode else 4 * L_kv * Hq * dh
+    per["slstm"] = 8 * Hq * dh * dh
+    for k, c in counts.items():
+        fl += c * n_per * per[k] * L_q
+    if cfg.first_k_dense:
+        fl += cfg.first_k_dense * per["attn"] * L_q
+    return fl
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Useful-math FLOPs per step (fwd+bwd for train; fwd for serving)."""
+    shape = SHAPES[shape_name]
+    B, L = shape.global_batch, shape.seq_len
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = B * L
+        return 6 * active * tokens + 3 * _mixer_seq_flops(cfg, L, L // 2) * B
+    if shape.kind == "prefill":
+        tokens = B * L
+        return 2 * active * tokens + _mixer_seq_flops(cfg, L, L // 2) * B
+    # decode: one token against an L-long state
+    return B * (2 * active + _mixer_seq_flops(cfg, 1, L))
+
+
+def slstm_correction(cfg: ModelConfig, shape_name: str, chips: int) -> float:
+    """Per-device fwd(+bwd) flops of inner sLSTM time-scans (XLA counts the
+    while body once; add the missing (L-1)/L share analytically)."""
+    n_slstm = sum(1 for k in cfg.block_pattern if k == "slstm") * cfg.n_periods
+    if n_slstm == 0:
+        return 0.0
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return 0.0  # single step: no undercount
+    B, L = shape.global_batch, shape.seq_len
+    per_step = 8 * cfg.num_heads * cfg.head_dim * cfg.head_dim  # recurrent einsum
+    factor = 3 if shape.kind == "train" else 1
+    return factor * n_slstm * B * (L - 1) * per_step / chips
+
+
+# ---------------------------------------------------------------------------
+# table generation
+# ---------------------------------------------------------------------------
+def analyse_record(rec: dict) -> dict | None:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    cfg = ARCHS[rec["arch"]]
+    chips = MESH_CHIPS[rec["mesh"]]
+    flops = (rec.get("flops") or 0.0) + slstm_correction(cfg, rec["shape"], chips)
+    byts = rec.get("bytes_accessed") or 0.0
+    coll = rec.get("collective_bytes") or 0.0
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    mf = model_flops(cfg, rec["shape"]) / chips
+    hbm = (rec.get("memory") or {}).get("temp_size_in_bytes")
+    args = (rec.get("memory") or {}).get("argument_size_in_bytes")
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom[0],
+        "step_lower_bound_s": max(t_c, t_m, t_x),
+        "model_flops_per_chip": mf,
+        "useful_fraction": (mf / flops) if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) > 0 else 0.0,
+        "temp_bytes": hbm,
+        "arg_bytes": args,
+    }
+
+
+def load_table(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for f in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        row = analyse_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful frac | roofline frac | temp GiB |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_fraction']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{(r['temp_bytes'] or 0)/2**30:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import csv
+    import sys
+
+    rows = load_table(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    out = pathlib.Path("results/roofline.csv")
+    out.parent.mkdir(exist_ok=True)
+    with out.open("w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    print(markdown_table(rows))
+    print(f"\nwrote {out} ({len(rows)} cells)")

@@ -1,0 +1,180 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+Paper artefacts reproduced (on the synthetic IN2P3-calibrated dataset):
+
+  * ``bench_performance_profiles``  — Figures 14/15/16: performance profiles
+    of all 9 algorithms at U in {0, seg/2, seg}.
+  * ``bench_time_to_solution``      — §5.3 running-time table.
+  * ``bench_kernel_wavefront``      — Pallas/jnp wavefront DP throughput.
+  * ``bench_tape_restore``          — system table: LTSP-scheduled checkpoint
+    restore vs positional sweep (mean shard service time).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--full]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+RESULTS = pathlib.Path("results")
+
+
+def _emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+def bench_performance_profiles(full: bool = False):
+    """Figures 14-16: fraction of instances within tau of optimal."""
+    from repro.core import ALGORITHMS, evaluate_detours
+    from repro.data import BENCH_PROFILE, PAPER_PROFILE, generate_dataset, u_turn_values
+
+    profile = PAPER_PROFILE if full else BENCH_PROFILE
+    ds0 = generate_dataset(profile)
+    u_vals = u_turn_values(ds0)
+    taus = [0.001, 0.01, 0.025, 0.05, 0.10, 0.25]
+    out_rows = []
+    for u_name, U in u_vals.items():
+        import dataclasses
+
+        ds = [dataclasses.replace(i, u_turn=U) for i in ds0]
+        costs: dict[str, list[float]] = {a: [] for a in ALGORITHMS}
+        t_algo: dict[str, float] = {a: 0.0 for a in ALGORITHMS}
+        for inst in ds:
+            per = {}
+            for name, algo in ALGORITHMS.items():
+                t0 = time.perf_counter()
+                dets = algo(inst)
+                t_algo[name] += time.perf_counter() - t0
+                per[name] = evaluate_detours(inst, dets)
+            opt = per["dp"]
+            for name, c in per.items():
+                costs[name].append(c / opt if opt else 1.0)
+        for name in ALGORITHMS:
+            ratios = np.array(costs[name])
+            fracs = [(ratios <= 1 + tau).mean() for tau in taus]
+            row = {
+                "figure": f"perf_profile_U_{u_name}",
+                "algorithm": name,
+                "mean_ratio": float(ratios.mean()),
+                "p95_ratio": float(np.quantile(ratios, 0.95)),
+                **{f"within_{tau}": float(fr) for tau, fr in zip(taus, fracs)},
+                "total_time_s": t_algo[name],
+            }
+            out_rows.append(row)
+            _emit(
+                f"profile/{u_name}/{name}",
+                1e6 * t_algo[name] / len(ds),
+                f"mean_ratio={ratios.mean():.4f};within_2.5%={fracs[2]:.2f}",
+            )
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "performance_profiles.json").write_text(json.dumps(out_rows, indent=1))
+    return out_rows
+
+
+def bench_time_to_solution(full: bool = False):
+    """§5.3 running-time comparison (median seconds per instance)."""
+    from repro.core import ALGORITHMS
+    from repro.data import BENCH_PROFILE, generate_dataset
+
+    ds = generate_dataset(BENCH_PROFILE)[:20]
+    rows = []
+    for name, algo in ALGORITHMS.items():
+        ts = []
+        for inst in ds:
+            t0 = time.perf_counter()
+            algo(inst)
+            ts.append(time.perf_counter() - t0)
+        med = float(np.median(ts))
+        rows.append({"algorithm": name, "median_s": med, "max_s": float(max(ts))})
+        _emit(f"time_to_solution/{name}", med * 1e6, f"max_s={max(ts):.3f}")
+    (RESULTS / "time_to_solution.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def bench_kernel_wavefront(full: bool = False):
+    """Wavefront DP device throughput (jnp ref, jitted; Pallas in interpret
+    mode is correctness-only on CPU)."""
+    import jax
+
+    from repro.core import make_instance
+    from repro.kernels.ltsp_dp.ops import prepare_arrays
+    from repro.kernels.ltsp_dp.ref import ltsp_dp_table_ref
+
+    rng = np.random.default_rng(0)
+    R = 24 if not full else 48
+    sizes = rng.integers(1, 9, size=R)
+    gaps = rng.integers(0, 6, size=R + 1)
+    left, pos = [], int(gaps[0])
+    for i in range(R):
+        left.append(pos)
+        pos += int(sizes[i] + gaps[i + 1])
+    inst = make_instance(left, sizes, rng.integers(1, 4, size=R), m=pos, u_turn=3)
+    l, r, x, nl, S = prepare_arrays(inst)
+
+    fn = jax.jit(lambda: ltsp_dp_table_ref(l, r, x, nl, float(inst.u_turn), S))
+    fn()  # compile
+    t0 = time.perf_counter()
+    n_rep = 3
+    for _ in range(n_rep):
+        fn().block_until_ready()
+    dt = (time.perf_counter() - t0) / n_rep
+    cells = R * R * S / 2
+    _emit("kernel/wavefront_dp", dt * 1e6, f"R={R};S={S};cells_per_s={cells/dt:.3g}")
+    return {"R": R, "S": S, "seconds": dt, "cells_per_s": cells / dt}
+
+
+def bench_tape_restore(full: bool = False):
+    """System table: checkpoint-restore mean service time by scheduler."""
+    from repro.distributed.checkpoint import plan_restore
+    from repro.storage.tape import TapeLibrary
+
+    rng = np.random.default_rng(7)
+    lib = TapeLibrary(capacity_per_tape=2 * 10**9, u_turn=10_000_000)
+    shards = []
+    for i in range(60):
+        name = f"ckpt/shard{i:03d}"
+        lib.store(name, int(rng.integers(5_000_000, 120_000_000)))
+        shards.append(name)
+    consumers = {s: int(rng.integers(1, 9)) for s in shards}
+    rows = []
+    base = None
+    for policy in ("nodetour", "gs", "fgs", "nfgs", "simpledp", "logdp1", "dp"):
+        t0 = time.perf_counter()
+        plans = plan_restore(lib, shards, consumers, policy=policy)
+        dt = time.perf_counter() - t0
+        mean = sum(p.total_cost for p in plans) / sum(consumers.values())
+        base = base or mean
+        rows.append({"policy": policy, "mean_service": mean, "plan_s": dt})
+        _emit(f"tape_restore/{policy}", dt * 1e6, f"mean_service={mean:.3g};vs_nodetour={mean/base:.3f}")
+    (RESULTS / "tape_restore.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale dataset (slow)")
+    ap.add_argument(
+        "--only", default=None,
+        choices=["profiles", "time", "kernel", "restore"],
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.only in (None, "profiles"):
+        bench_performance_profiles(args.full)
+    if args.only in (None, "time"):
+        bench_time_to_solution(args.full)
+    if args.only in (None, "kernel"):
+        bench_kernel_wavefront(args.full)
+    if args.only in (None, "restore"):
+        bench_tape_restore(args.full)
+
+
+if __name__ == "__main__":
+    main()

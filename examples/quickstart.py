@@ -1,0 +1,55 @@
+"""Quickstart: schedule a batch of tape reads with the paper's exact DP.
+
+Builds a small tape, issues a request batch, and compares every scheduling
+policy's mean service time.  Also renders the head trajectory of the optimal
+schedule as ASCII art.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import ALGORITHMS, evaluate_detours, service_times, virtual_lb
+from repro.storage.tape import Tape, schedule_reads
+
+
+def render_trajectory(inst, detours, width=78):
+    """ASCII sketch of the head trajectory implied by a detour list."""
+    scale = width / inst.m
+    print(" tape:", "".join(
+        "#" if any(l <= p / scale < r for l, r in zip(inst.left, inst.right)) else "."
+        for p in range(width)
+    ))
+    t = service_times(inst, detours)
+    for i in np.argsort(t):
+        bar = int(inst.left[i] * scale)
+        size = max(1, int((inst.right[i] - inst.left[i]) * scale))
+        print(f"  t={int(t[i]):>8d} |{' ' * bar}{'=' * size}  x{inst.mult[i]}")
+
+
+def main():
+    rng = np.random.default_rng(42)
+    tape = Tape("DEMO", capacity=1_000_000, u_turn=2_000)
+    for i in range(14):
+        tape.append(f"file{i:02d}", int(rng.integers(10_000, 90_000)))
+
+    requests = {f"file{i:02d}": int(rng.integers(1, 9)) for i in [1, 3, 4, 7, 8, 11, 13]}
+    print("request batch:", requests, "\n")
+
+    print(f"{'policy':<10} {'mean service':>14} {'vs optimal':>11}")
+    plans = {}
+    for policy in ALGORITHMS:
+        plans[policy] = schedule_reads(tape, requests, policy=policy)
+    opt = plans["dp"].mean_service
+    for policy, plan in sorted(plans.items(), key=lambda kv: kv[1].mean_service):
+        print(f"{policy:<10} {plan.mean_service:>14.1f} {plan.mean_service / opt:>10.3f}x")
+
+    inst, _ = tape.instance(requests)
+    print(f"\nVirtualLB = {virtual_lb(inst)}, OPT = {plans['dp'].total_cost}")
+    print("optimal detours:", plans["dp"].detours)
+    print("\noptimal head trajectory (files served in this order):")
+    render_trajectory(inst, plans["dp"].detours)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Multi-pod checkpoint restore from the tape archive, scheduled by the
+paper's DP — the framework feature the paper becomes.
+
+A 2-pod cluster restores a sharded checkpoint from the tape tier.  Every
+shard is requested once per consumer pod (plus extra consumers for the
+embedding shards every host needs early).  The LTSP schedulers order the
+reads; mean shard arrival time directly bounds how soon pods can begin
+resharding/loading.
+
+Run: PYTHONPATH=src python examples/tape_restore.py
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.distributed.checkpoint import archive_to_tape, plan_restore
+from repro.models.model import init_model
+from repro.storage.tape import TapeLibrary
+
+
+def main():
+    cfg = reduced(ARCHS["deepseek-v2-236b"], periods=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    lib = TapeLibrary(capacity_per_tape=4 * 10**9, u_turn=20_000_000)
+    shards = archive_to_tape(lib, "step5000", params, bytes_per_elem=4096)
+    print(f"archived {len(shards)} shards on {len(lib.tapes)} tape(s)")
+
+    consumers = {s: 2 for s in shards}  # both pods need every shard
+    for s in shards:
+        if "embed" in s or "router" in s:
+            consumers[s] = 8  # hot shards: every host group wants them early
+
+    print(f"\n{'policy':<10} {'mean arrival':>14} {'last arrival':>14} {'vs dp':>7}")
+    results = {}
+    for policy in ("nodetour", "gs", "fgs", "simpledp", "dp"):
+        plans = plan_restore(lib, shards, consumers, policy=policy)
+        n_req = sum(consumers.values())
+        mean = sum(p.total_cost for p in plans) / n_req
+        last = max(max(p.service_time.values()) for p in plans)
+        results[policy] = (mean, last)
+        print(f"{policy:<10} {mean:>14.3g} {last:>14.3g}", end="")
+        print(f" {mean / results.get('dp', (mean,))[0]:>6.3f}x" if "dp" in results else "       ")
+
+    dp_mean = results["dp"][0]
+    nd_mean = results["nodetour"][0]
+    print(f"\nDP-scheduled restore improves mean shard arrival by "
+          f"{100 * (1 - dp_mean / nd_mean):.1f}% over the positional sweep.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""LTSP core: the paper's exact DP algorithm, heuristics, and evaluators."""
+
+from .instance import Instance, make_instance, virtual_lb
+from .schedule import evaluate_detours, service_times, no_detour_cost
+from .dp import dp_schedule, dp_value, logdp_schedule, simpledp_schedule, logdp_span
+from .heuristics import no_detour, gs, fgs, nfgs, lognfgs
+
+ALGORITHMS = {
+    "nodetour": lambda inst: no_detour(inst),
+    "gs": lambda inst: gs(inst),
+    "fgs": lambda inst: fgs(inst),
+    "nfgs": lambda inst: nfgs(inst),
+    "lognfgs5": lambda inst: lognfgs(inst, lam=5.0),
+    "logdp1": lambda inst: logdp_schedule(inst, lam=1.0)[1],
+    "logdp5": lambda inst: logdp_schedule(inst, lam=5.0)[1],
+    "simpledp": lambda inst: simpledp_schedule(inst)[1],
+    "dp": lambda inst: dp_schedule(inst)[1],
+}
+
+__all__ = [
+    "Instance",
+    "make_instance",
+    "virtual_lb",
+    "evaluate_detours",
+    "service_times",
+    "no_detour_cost",
+    "dp_schedule",
+    "dp_value",
+    "logdp_schedule",
+    "simpledp_schedule",
+    "logdp_span",
+    "no_detour",
+    "gs",
+    "fgs",
+    "nfgs",
+    "lognfgs",
+    "ALGORITHMS",
+]

@@ -1,0 +1,209 @@
+"""The paper's exact **DP** algorithm for LTSP, plus LOGDP and SIMPLEDP.
+
+``T[a, b, n_skip]`` (paper §4.3) is the impact, relative to *VirtualLB*, of
+the head movement between the first time it reaches ``r(b)`` and the first
+time it reaches ``r(b)`` again after having read ``a``, given
+
+  1. a detour ``(a, f)`` exists for some ``f >= b``,
+  2. no detour ``(f1, f2)`` with ``a < f1 < b < f2`` exists,
+  3. exactly ``n_skip`` requests are skipped when the head first reaches
+     ``r(b)``.
+
+Recurrence (files are requested-file indices, ``left(b) = b-1``)::
+
+  T[b, b, s]    = 2 s(b) (s + n_l(b))
+  skip(a,b,s)   = T[a, b-1, s + x(b)] + 2 (r(b)-r(b-1)) (s + n_l(a))
+                  + 2 (l(b)-r(b-1)) x(b)
+  detour_c(...) = T[a, c-1, s] + T[c, b, s] + 2 (r(b)-r(c-1)) (s + n_l(a))
+                  + 2 U (s + n_l(c))
+  T[a, b, s]    = min(skip, min_{a < c <= b} detour_c)
+
+and ``OPT = T[0, R-1, 0] + VirtualLB``.
+
+Exact Python-int arithmetic, memoised over reachable cells only.  LOGDP is
+the same recursion with ``c`` restricted to ``b - c <= span`` where
+``span = ceil(lambda * ln n_req)``; SIMPLEDP forbids intertwined detours which
+collapses the first index to ``f_1`` (2-dimensional table).
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+from functools import lru_cache
+
+import numpy as np
+
+from .instance import Instance, virtual_lb
+
+__all__ = ["dp_schedule", "logdp_schedule", "simpledp_schedule", "dp_value"]
+
+_RECURSION_HEADROOM = 50_000
+
+
+def _raise_recursion_limit(n_req: int) -> None:
+    need = 10 * n_req + _RECURSION_HEADROOM
+    if sys.getrecursionlimit() < need:
+        sys.setrecursionlimit(need)
+
+
+def dp_schedule(
+    inst: Instance, span: int | None = None
+) -> tuple[int, list[tuple[int, int]]]:
+    """Optimal LTSP schedule via the paper's DP.
+
+    Returns ``(opt_cost, detours)`` where ``opt_cost`` includes *VirtualLB*
+    and ``detours`` is the list of detours realising it (the implicit final
+    global pass is not listed).  ``span`` restricts detour spans (LOGDP).
+    """
+    R = inst.n_req
+    _raise_recursion_limit(R)
+    left = inst.left.tolist()
+    right = inst.right.tolist()
+    x = inst.mult.tolist()
+    nl = inst.n_left().tolist()
+    U = inst.u_turn
+    size = [r - l for l, r in zip(left, right)]
+
+    memo: dict[tuple[int, int, int], int] = {}
+    choice: dict[tuple[int, int, int], int] = {}  # -1 = skip, else c
+
+    def T(a: int, b: int, s: int) -> int:
+        if a == b:
+            return 2 * size[b] * (s + nl[b])
+        key = (a, b, s)
+        v = memo.get(key)
+        if v is not None:
+            return v
+        # --- skip b: read it on the detour starting from a -----------------
+        best = (
+            T(a, b - 1, s + x[b])
+            + 2 * (right[b] - right[b - 1]) * (s + nl[a])
+            + 2 * (left[b] - right[b - 1]) * x[b]
+        )
+        arg = -1
+        # --- or a detour (c, b) for some a < c <= b -------------------------
+        lo = a + 1 if span is None else max(a + 1, b - span)
+        snla = s + nl[a]
+        for c in range(lo, b + 1):
+            v = (
+                T(a, c - 1, s)
+                + T(c, b, s)
+                + 2 * (right[b] - right[c - 1]) * snla
+                + 2 * U * (s + nl[c])
+            )
+            if v < best:
+                best, arg = v, c
+        memo[key] = best
+        choice[key] = arg
+        return best
+
+    opt = T(0, R - 1, 0) + virtual_lb(inst)
+
+    detours: list[tuple[int, int]] = []
+
+    def collect(a: int, b: int, s: int) -> None:
+        while a < b:
+            c = choice[(a, b, s)]
+            if c == -1:  # skip b
+                s += x[b]
+                b -= 1
+                continue
+            detours.append((c, b))
+            collect(c, b, s)  # structure inside the detour (c, b)
+            b = c - 1  # continue with T[a, c-1, s]
+        # a == b: base cell, single-file handling folded into parent detour
+
+    collect(0, R - 1, 0)
+    return opt, detours
+
+
+def dp_value(inst: Instance, span: int | None = None) -> int:
+    """Optimal cost only (convenience)."""
+    return dp_schedule(inst, span=span)[0]
+
+
+def logdp_span(n_req: int, lam: float) -> int:
+    """LOGDP detour-span limit: ``ceil(lambda * ln n_req)`` (>= 1)."""
+    return max(1, math.ceil(lam * math.log(max(2, n_req))))
+
+
+def logdp_schedule(inst: Instance, lam: float = 1.0) -> tuple[int, list[tuple[int, int]]]:
+    """LOGDP(lambda): DP restricted to detours spanning <= lam*ln(n_req) files."""
+    return dp_schedule(inst, span=logdp_span(inst.n_req, lam))
+
+
+def simpledp_schedule(inst: Instance) -> tuple[int, list[tuple[int, int]]]:
+    """SIMPLEDP: DP restricted to disjoint (non-intertwined) detours.
+
+    The first DP index is always the leftmost requested file, so the table is
+    two-dimensional, and ``detour_c`` charges the whole detour ``(c, b)``
+    directly (no recursive inner structure)::
+
+      detour_c(b,s) = T[c-1, s] + 2 (r(b)-r(c-1)) s
+                      + 2 (U + r(b)-l(c)) (s + n_l(c))
+                      + sum_{c < f <= b} 2 (l(f)-l(c)) x(f)
+    """
+    R = inst.n_req
+    _raise_recursion_limit(R)
+    left = inst.left.tolist()
+    right = inst.right.tolist()
+    x = inst.mult.tolist()
+    nl = inst.n_left().tolist()
+    U = inst.u_turn
+    size = [r - l for l, r in zip(left, right)]
+
+    # prefix sums for the in-detour service cost sum (Python ints: exact,
+    # immune to int64 overflow on real tape coordinates ~2e13)
+    X = [0]
+    WL = [0]
+    for li, xi in zip(left, x):
+        X.append(X[-1] + xi)
+        WL.append(WL[-1] + li * xi)
+
+    def in_detour_cost(c: int, b: int) -> int:
+        # sum_{c < f <= b} 2 (l(f) - l(c)) x(f)
+        return 2 * ((WL[b + 1] - WL[c + 1]) - left[c] * (X[b + 1] - X[c + 1]))
+
+    memo: dict[tuple[int, int], int] = {}
+    choice: dict[tuple[int, int], int] = {}
+
+    def T(b: int, s: int) -> int:
+        if b == 0:
+            return 2 * size[0] * (s + nl[0])
+        key = (b, s)
+        v = memo.get(key)
+        if v is not None:
+            return v
+        best = (
+            T(b - 1, s + x[b])
+            + 2 * (right[b] - right[b - 1]) * s  # n_l(a=0) == 0
+            + 2 * (left[b] - right[b - 1]) * x[b]
+        )
+        arg = -1
+        for c in range(1, b + 1):
+            v = (
+                T(c - 1, s)
+                + 2 * (right[b] - right[c - 1]) * s
+                + 2 * (U + right[b] - left[c]) * (s + nl[c])
+                + in_detour_cost(c, b)
+            )
+            if v < best:
+                best, arg = v, c
+        memo[key] = best
+        choice[key] = arg
+        return best
+
+    opt = T(R - 1, 0) + virtual_lb(inst)
+
+    detours: list[tuple[int, int]] = []
+    b, s = R - 1, 0
+    while b > 0:
+        c = choice[(b, s)]
+        if c == -1:
+            s += x[b]
+            b -= 1
+        else:
+            detours.append((c, b))
+            b = c - 1
+    return opt, detours

@@ -1,0 +1,81 @@
+"""Gradient compression for cross-pod sync: top-k + error feedback, int8.
+
+At 2+ pods the gradient all-reduce over the inter-pod links is the scarce
+resource (50 GB/s/link vs 819 GB/s HBM).  Two standard compressors are
+provided as pure functions; ``compressed_grads`` wraps either around a
+gradient pytree with persistent error-feedback state so the training loop can
+compress before the pod-axis reduction and decompress after.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "topk_compress",
+    "topk_decompress",
+    "int8_compress",
+    "int8_decompress",
+    "init_error_feedback",
+    "compressed_grads",
+]
+
+
+def topk_compress(g: jax.Array, ratio: float):
+    """Keep the largest-|g| ``ratio`` fraction -> (values, flat indices)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(values, idx, shape, dtype=jnp.float32):
+    flat = jnp.zeros((int(jnp.prod(jnp.array(shape))),), dtype)
+    return flat.at[idx].set(values.astype(dtype)).reshape(shape)
+
+
+def int8_compress(g: jax.Array):
+    """Symmetric per-tensor int8 quantisation -> (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale, dtype=jnp.float32):
+    return q.astype(dtype) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_grads(grads, ef_state, method: str = "topk", ratio: float = 0.01):
+    """Compress+decompress a gradient pytree with error feedback.
+
+    Returns ``(effective_grads, new_ef_state, bytes_ratio)`` where
+    ``effective_grads`` is what the optimizer sees (decompressed), and the
+    residual (what compression dropped) is carried to the next step.
+    """
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        if method == "topk":
+            vals, idx = topk_compress(target, ratio)
+            rec = topk_decompress(vals, idx, target.shape)
+        elif method == "int8":
+            q, s = int8_compress(target)
+            rec = int8_decompress(q, s)
+        else:
+            raise ValueError(method)
+        return rec, target - rec
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    recs, resids = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    bytes_ratio = {"topk": ratio * 2.0, "int8": 0.25}[method]  # vs f32
+    return (
+        jax.tree.unflatten(treedef, recs),
+        jax.tree.unflatten(treedef, resids),
+        bytes_ratio,
+    )

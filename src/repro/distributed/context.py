@@ -1,0 +1,42 @@
+"""Active-mesh context: lets model code emit sharding hints without taking a
+mesh argument through every layer.
+
+``set_active_mesh(mesh)`` is called by the launcher (dry-run / trainer) before
+tracing; ``shard_hint(x, spec_fn)`` is a no-op when no mesh is active (CPU
+tests, single device), so model code is unchanged off-cluster.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Mesh | None = None
+
+
+def set_active_mesh(mesh: Mesh | None) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def active_mesh() -> Mesh | None:
+    return _MESH
+
+
+def shard_hint(x: jax.Array, spec_fn: Callable[[Mesh], P]) -> jax.Array:
+    """Apply ``with_sharding_constraint`` if a mesh is active (divisibility-
+    guarded); identity otherwise."""
+    if _MESH is None:
+        return x
+    from .sharding import safe_pspec
+
+    spec = safe_pspec(spec_fn(_MESH), x.shape, _MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def dp_spec(mesh: Mesh):
+    from .sharding import dp_axes
+
+    return dp_axes(mesh)

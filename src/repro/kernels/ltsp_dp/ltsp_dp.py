@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for one anti-diagonal of the LTSP DP wavefront.
+
+TPU adaptation of the paper's CPU dynamic program (DESIGN.md §Hardware
+adaptation): the O(n_req) inner minimisation of ``detour_c`` is the compute
+hot-spot (O(n_req^3 · n) total).  On TPU we turn the per-cell scalar loop into
+a dense ``[d, S]`` candidate tile in VMEM reduced with ``min`` on the VPU —
+the ``s`` axis (skip count) is the 128-lane vector axis, the ``c`` candidate
+axis is the sublane axis.  One kernel launch computes one anti-diagonal
+``d = b - a`` for every window start ``a`` (grid axis) so successive
+diagonals — which carry the loop dependency — are separate launches while all
+work inside a diagonal is embarrassingly parallel.
+
+Layout notes
+------------
+* ``T`` is the dense ``[R, R, S]`` table in HBM.  Each program DMAs one row
+  block ``T[a, :, :]`` and one column block ``T[:, b, :]`` into VMEM
+  (``2 * R * S * 4`` bytes; R ~ a few hundred requested files and S ~ a few
+  thousand skip counts fit comfortably in 16 MB VMEM for real tape workloads).
+* ``S`` should be padded to a multiple of 128 (lane width).
+* The ``skip`` term needs the shifted gather ``row[s + x_b]``; ``x_b`` is a
+  scalar per program, so it is a single dynamic-slice + clamp, not a general
+  gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["diagonal_kernel", "ltsp_dp_diagonal"]
+
+
+def diagonal_kernel(
+    # inputs
+    trow_ref,  # [1, R, S] — row a of T
+    tcol_ref,  # [R, 1, S] — column b = a + d of T
+    left_ref,  # [R] f32
+    right_ref,  # [R] f32
+    x_ref,  # [R] int32
+    nl_ref,  # [R] f32
+    # output
+    out_ref,  # [1, S] — new T[a, a+d, :]
+    *,
+    d: int,
+    u_turn: float,
+    S: int,
+):
+    a = pl.program_id(0)
+    b = a + d
+
+    svec = jax.lax.broadcasted_iota(jnp.float32, (1, S), 1)  # [1, S]
+    nl_a = pl.load(nl_ref, (pl.dslice(a, 1),))[0]
+
+    # ---------------- skip(a, b, s) ----------------------------------------
+    row_bm1 = pl.load(trow_ref, (0, pl.dslice(b - 1, 1), slice(None)))  # [1, S]
+    x_b = pl.load(x_ref, (pl.dslice(b, 1),))[0]
+    idx = jnp.clip(
+        jax.lax.broadcasted_iota(jnp.int32, (1, S), 1) + x_b, 0, S - 1
+    )
+    shifted = jnp.take_along_axis(row_bm1, idx, axis=1)  # [1, S]
+    r_b = pl.load(right_ref, (pl.dslice(b, 1),))[0]
+    r_bm1 = pl.load(right_ref, (pl.dslice(b - 1, 1),))[0]
+    l_b = pl.load(left_ref, (pl.dslice(b, 1),))[0]
+    skip = (
+        shifted
+        + 2.0 * (r_b - r_bm1) * (svec + nl_a)
+        + 2.0 * (l_b - r_bm1) * x_b.astype(jnp.float32)
+    )
+
+    # ---------------- min over detour_c, c = a+1 .. a+d --------------------
+    # T[a, c-1, s]: row-a cols [a, a+d)   |   T[c, b, s]: col-b rows [a+1, a+d]
+    t_left = pl.load(trow_ref, (0, pl.dslice(a, d), slice(None)))  # [d, S]
+    t_right = pl.load(tcol_ref, (pl.dslice(a + 1, d), 0, slice(None)))  # [d, S]
+    r_cm1 = pl.load(right_ref, (pl.dslice(a, d),))  # [d]
+    nl_c = pl.load(nl_ref, (pl.dslice(a + 1, d),))  # [d]
+    svec_d = jax.lax.broadcasted_iota(jnp.float32, (d, S), 1)
+    cand = (
+        t_left
+        + t_right
+        + 2.0 * (r_b - r_cm1)[:, None] * (svec_d + nl_a)
+        + 2.0 * u_turn * (svec_d + nl_c[:, None])
+    )
+    det = jnp.min(cand, axis=0, keepdims=True)  # [1, S]
+
+    out_ref[...] = jnp.minimum(skip, det)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "u_turn", "S", "interpret"))
+def ltsp_dp_diagonal(
+    T: jax.Array,  # [R, R, S] f32
+    left: jax.Array,  # [R] f32
+    right: jax.Array,  # [R] f32
+    x: jax.Array,  # [R] int32
+    nl: jax.Array,  # [R] f32
+    *,
+    d: int,
+    u_turn: float,
+    S: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute anti-diagonal ``d`` → array ``[R - d, S]`` of new cell values."""
+    R = T.shape[0]
+    n_a = R - d
+    kern = functools.partial(diagonal_kernel, d=d, u_turn=u_turn, S=S)
+    return pl.pallas_call(
+        kern,
+        grid=(n_a,),
+        in_specs=[
+            pl.BlockSpec((1, R, S), lambda a: (a, 0, 0)),  # row a
+            pl.BlockSpec((R, 1, S), lambda a: (0, a + d, 0)),  # column a+d
+            pl.BlockSpec((R,), lambda a: (0,)),
+            pl.BlockSpec((R,), lambda a: (0,)),
+            pl.BlockSpec((R,), lambda a: (0,)),
+            pl.BlockSpec((R,), lambda a: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, S), lambda a: (a, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_a, S), T.dtype),
+        interpret=interpret,
+    )(T, T, left, right, x, nl)

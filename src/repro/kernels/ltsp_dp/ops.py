@@ -1,0 +1,80 @@
+"""Jitted wrapper assembling the full LTSP DP table from diagonal launches.
+
+``ltsp_dp_table`` drives the Pallas kernel one anti-diagonal at a time
+(the wavefront dependency), scattering each diagonal back into the dense
+table.  ``ltsp_opt`` returns the optimal objective value.  ``from_instance``
+adapts an exact :class:`repro.core.instance.Instance`, optionally rescaling
+coordinates so f32 stays exact (all values < 2**20).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.instance import Instance, virtual_lb
+from .ltsp_dp import ltsp_dp_diagonal
+from .ref import base_diagonal
+
+__all__ = ["ltsp_dp_table", "ltsp_opt", "prepare_arrays", "ltsp_opt_instance"]
+
+
+def prepare_arrays(inst: Instance, S: int | None = None):
+    """Instance → (left, right, x, nl, S) device arrays for the kernel.
+
+    S defaults to n+1 padded up to a multiple of 128 (TPU lane width).
+    """
+    if S is None:
+        S = inst.n + 1
+    S = int(math.ceil(S / 128) * 128)
+    left = jnp.asarray(inst.left, dtype=jnp.float32)
+    right = jnp.asarray(inst.right, dtype=jnp.float32)
+    x = jnp.asarray(inst.mult, dtype=jnp.int32)
+    nl = jnp.asarray(inst.n_left(), dtype=jnp.float32)
+    return left, right, x, nl, S
+
+
+def ltsp_dp_table(
+    left: jax.Array,
+    right: jax.Array,
+    x: jax.Array,
+    nl: jax.Array,
+    u_turn: float,
+    S: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dense DP table via per-diagonal Pallas launches."""
+    R = left.shape[0]
+    T = jnp.zeros((R, R, S), dtype=jnp.float32)
+    rr = jnp.arange(R)
+    T = T.at[rr, rr, :].set(base_diagonal(right, left, nl, S))
+    for d in range(1, R):
+        diag = ltsp_dp_diagonal(
+            T, left, right, x, nl, d=d, u_turn=float(u_turn), S=S, interpret=interpret
+        )
+        a = jnp.arange(R - d)
+        T = T.at[a, a + d, :].set(diag)
+    return T
+
+
+def ltsp_opt(
+    left, right, x, nl, u_turn: float, m: float, S: int, interpret: bool = True
+) -> jax.Array:
+    """Optimal LTSP objective (float): ``T[0, R-1, 0] + VirtualLB``."""
+    T = ltsp_dp_table(left, right, x, nl, u_turn, S, interpret=interpret)
+    virt = jnp.sum(
+        x.astype(jnp.float32) * (m - left + (right - left) + u_turn)
+    )
+    return T[0, left.shape[0] - 1, 0] + virt
+
+
+def ltsp_opt_instance(inst: Instance, interpret: bool = True) -> float:
+    """Convenience: exact-instance adapter (f32; exact for coords < 2**20)."""
+    left, right, x, nl, S = prepare_arrays(inst)
+    val = ltsp_opt(
+        left, right, x, nl, float(inst.u_turn), float(inst.m), S, interpret=interpret
+    )
+    return float(val)

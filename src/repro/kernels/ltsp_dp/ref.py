@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the wavefront LTSP DP (float, bottom-up).
+
+The exact Python DP (:mod:`repro.core.dp`) memoises only reachable
+``(a, b, n_skip)`` cells; the device formulation instead materialises the full
+table ``T[R, R, S]`` over every skip count ``s in [0, S)`` and fills it one
+anti-diagonal ``d = b - a`` at a time.  Every recurrence is valid for an
+arbitrary ``s`` parameter, so the dense table contains no garbage: the only
+approximation is the clamped gather ``T[a, b-1, min(s + x_b, S-1)]``, which
+can only be hit from cells that are themselves unreachable from the root
+``(0, R-1, 0)`` (a reachable chain keeps ``s + sum(x) <= n < S``).
+
+This file is the correctness oracle for the Pallas kernel; it mirrors its
+clamping semantics exactly.  With integer-valued inputs below 2**20 the f32
+arithmetic here is exact, so the oracle can additionally be compared 1:1
+against the exact integer DP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ltsp_dp_table_ref", "ltsp_opt_ref", "base_diagonal"]
+
+
+def base_diagonal(right, left, nl, S: int, dtype=jnp.float32):
+    """``T[b, b, s] = 2 s(b) (s + n_l(b))`` for all b, s."""
+    size = (right - left).astype(dtype)  # [R]
+    svec = jnp.arange(S, dtype=dtype)  # [S]
+    return 2.0 * size[:, None] * (svec[None, :] + nl[:, None].astype(dtype))
+
+
+def _diagonal_update(T, d: int, left, right, x, nl, u_turn, S: int):
+    """Compute T[a, a+d, :] for every a via the skip/detour recurrence."""
+    R = T.shape[0]
+    dtype = T.dtype
+    n_a = R - d
+    a = jnp.arange(n_a)
+    b = a + d
+    svec = jnp.arange(S, dtype=dtype)
+
+    # ---- skip(a, b, s) = T[a, b-1, s + x_b] + 2 (r_b - r_{b-1})(s + nl_a)
+    #                      + 2 (l_b - r_{b-1}) x_b ---------------------------
+    rows_bm1 = T[a, b - 1, :]  # [n_a, S]
+    gather_idx = jnp.clip(svec[None, :].astype(jnp.int32) + x[b][:, None], 0, S - 1)
+    shifted = jnp.take_along_axis(rows_bm1, gather_idx, axis=1)
+    xb = x[b].astype(dtype)
+    skip = (
+        shifted
+        + 2.0 * (right[b] - right[b - 1]).astype(dtype)[:, None]
+        * (svec[None, :] + nl[a].astype(dtype)[:, None])
+        + (2.0 * (left[b] - right[b - 1]).astype(dtype) * xb)[:, None]
+    )
+
+    # ---- detour_c over c = a+k, k = 1..d --------------------------------
+    # candidates[k-1, a, s] = T[a, c-1, s] + T[c, b, s]
+    #   + 2 (r_b - r_{c-1}) (s + nl_a) + 2 U (s + nl_c)
+    def one_k(k):
+        c = a + k
+        t_left = T[a, c - 1, :]  # [n_a, S]
+        t_right = T[c, b, :]  # [n_a, S]
+        term = (
+            t_left
+            + t_right
+            + 2.0 * (right[b] - right[c - 1]).astype(dtype)[:, None]
+            * (svec[None, :] + nl[a].astype(dtype)[:, None])
+            + 2.0 * u_turn * (svec[None, :] + nl[c].astype(dtype)[:, None])
+        )
+        return term
+
+    det = one_k(1)
+    for k in range(2, d + 1):
+        det = jnp.minimum(det, one_k(k))
+
+    new_diag = jnp.minimum(skip, det)  # [n_a, S]
+    return T.at[a, b, :].set(new_diag)
+
+
+def ltsp_dp_table_ref(left, right, x, nl, u_turn, S: int):
+    """Full dense DP table (reference implementation, per-diagonal loop)."""
+    R = left.shape[0]
+    dtype = jnp.float32
+    T = jnp.zeros((R, R, S), dtype=dtype)
+    T = T.at[jnp.arange(R), jnp.arange(R), :].set(
+        base_diagonal(right, left, nl, S, dtype)
+    )
+    for d in range(1, R):
+        T = _diagonal_update(T, d, left, right, x, nl, u_turn, S)
+    return T
+
+
+def ltsp_opt_ref(left, right, x, nl, u_turn, m, S: int):
+    """Optimal objective value: ``T[0, R-1, 0] + VirtualLB`` (float)."""
+    R = left.shape[0]
+    T = ltsp_dp_table_ref(left, right, x, nl, u_turn, S)
+    virt = jnp.sum(
+        x.astype(jnp.float32)
+        * (m - left + (right - left) + u_turn).astype(jnp.float32)
+    )
+    return T[0, R - 1, 0] + virt

@@ -1,0 +1,327 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialisation).
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, runnable_shapes  # noqa: E402
+from ..distributed.sharding import (  # noqa: E402
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    param_pspecs,
+    to_shardings,
+)
+from ..launch.mesh import make_production_mesh  # noqa: E402
+from ..launch.specs import input_specs  # noqa: E402
+from ..models.model import decode_step, forward  # noqa: E402
+from ..training.optimizer import OptConfig  # noqa: E402
+from ..training.train_step import make_train_step  # noqa: E402
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent: shardings
+divide, collectives exist, and the compiled memory/cost analysis feeds the
+roofline (§Roofline in EXPERIMENTS.md).  Results are dumped incrementally as
+JSON under ``results/dryrun/``.
+"""
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\(?[a-z0-9\[\],{}: ]+?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, float]:
+    """Approximate per-device bytes moved by collective ops (ring model).
+
+    Shapes in the partitioned module are already per-device.  Ring factors:
+    all-reduce 2s(g-1)/g, all-gather s_out(g-1)/g, reduce-scatter s_out(g-1),
+    all-to-all s(g-1)/g, collective-permute s.
+    """
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        sig, op = m.group(1), m.group(2)
+        s = _shape_bytes(sig)
+        line = hlo_text[m.start() : hlo_text.find("\n", m.start())]
+        gm = _GROUPS_RE.search(line)
+        g = len(gm.group(1).split(",")) if gm else 2
+        if op == "all-reduce":
+            moved = 2 * s * (g - 1) / g
+        elif op == "all-gather":
+            moved = s * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = s * (g - 1)
+        elif op == "all-to-all":
+            moved = s * (g - 1) / g
+        else:  # collective-permute
+            moved = s
+        out[op] = out.get(op, 0.0) + moved
+    return out
+
+
+def _step_fn_and_shardings(cfg, shape, mesh):
+    """Build (fn, abstract args, in_shardings) for the cell."""
+    specs = input_specs(cfg, shape)
+    pspec = param_pspecs(specs["params"])
+    psh = to_shardings(pspec, mesh, specs["params"])
+    if shape.kind == "train":
+        opt_sh = {
+            "m": to_shardings(pspec, mesh, specs["params"]),
+            "v": to_shardings(pspec, mesh, specs["params"]),
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        bsh = to_shardings(batch_pspecs(specs["batch"], mesh), mesh)
+        fn = make_train_step(cfg, OptConfig())
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        in_sh = (psh, opt_sh, bsh)
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            memory = None
+            if cfg.enc_layers:
+                from ..models.model import encode
+
+                memory = encode(params, cfg, batch["enc_embeds"])
+            elif cfg.num_vision_tokens:
+                memory = batch["vision_embeds"]
+            logits, _ = forward(params, cfg, batch["tokens"], memory=memory)
+            return logits
+
+        bsh = to_shardings(batch_pspecs(specs["batch"], mesh), mesh)
+        args = (specs["params"], specs["batch"])
+        in_sh = (psh, bsh)
+    else:  # decode
+        def fn(params, cache, tokens, pos):
+            logits, new_cache = decode_step(params, cfg, tokens, cache, pos)
+            return jnp.argmax(logits[:, -1], axis=-1), new_cache
+
+        from ..distributed.sharding import safe_pspec
+
+        csh = to_shardings(cache_pspecs(specs["cache"], mesh), mesh)
+        P = jax.sharding.PartitionSpec
+        tsh = jax.sharding.NamedSharding(
+            mesh,
+            safe_pspec(P(dp_axes(mesh), None), specs["tokens"].shape, mesh),
+        )
+        possh = jax.sharding.NamedSharding(mesh, P())
+        args = (specs["params"], specs["cache"], specs["tokens"], specs["pos"])
+        in_sh = (psh, csh, tsh, possh)
+    return fn, args, in_sh
+
+
+def _depth_variant(cfg, k: int, seq_len: int):
+    """Same architecture with k periods (and k encoder layers), unrolled.
+
+    Used for two-point cost extrapolation: XLA costs a while-loop body once,
+    so the production-depth scanned compile under-counts per-layer work.  Two
+    small unrolled compiles give exact per-period deltas:
+    ``cost(L) = d1 + (n_periods - 1) * (d2 - d1)``.  Inner Mamba chunk scans
+    are widened to one chunk for the same reason.
+    """
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        num_layers=cfg.first_k_dense + k * len(cfg.block_pattern),
+        enc_layers=min(cfg.enc_layers, k),
+        scan_layers=False,
+        mamba_chunk=max(seq_len, cfg.mamba_chunk),
+    )
+
+
+def _analyse(cfg, shape, mesh):
+    """lower+compile one configuration; return (lowered, compiled) metrics."""
+    fn, args, in_sh = _step_fn_and_shardings(cfg, shape, mesh)
+    lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+    compiled = lowered.compile()
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+    except Exception as e:
+        mem = {"error": str(e)}
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {
+            k: float(v)
+            for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+        }
+    except Exception as e:
+        cost = {"error": str(e)}
+    colls = parse_collectives(compiled.as_text())
+    return {"memory": mem, "cost": cost, "collectives": colls}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             cfg_override=None):
+    cfg = cfg_override if cfg_override is not None else ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "ok": False,
+    }
+    t0 = time.time()
+    try:
+        if shape_name not in runnable_shapes(cfg):
+            rec["skipped"] = "full-attention arch: long-context decode inapplicable"
+            rec["ok"] = True
+            out_path.write_text(json.dumps(rec, indent=1))
+            print(f"SKIP {arch} {shape_name} {mesh_name}")
+            return rec
+        from ..distributed.context import set_active_mesh
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        set_active_mesh(mesh)
+        try:
+            with mesh:
+                # 1) production-depth scanned compile: proves the cell
+                #    compiles; its memory_analysis reflects the real buffers.
+                full = _analyse(cfg, shape, mesh)
+                t_full = time.time() - t0
+                # 2) two-point depth extrapolation for exact per-layer costs
+                d1 = _analyse(_depth_variant(cfg, 1, shape.seq_len), shape, mesh)
+                d2 = _analyse(_depth_variant(cfg, 2, shape.seq_len), shape, mesh)
+        finally:
+            set_active_mesh(None)
+        n = cfg.n_periods
+
+        def extrap(key):
+            a = d1["cost"].get(key, 0.0) or 0.0
+            b = d2["cost"].get(key, 0.0) or 0.0
+            # clamp: depth-2 can occasionally optimise below depth-1 on tiny
+            # terms; per-layer cost is never negative
+            return a + (n - 1) * max(0.0, b - a)
+
+        colls = {}
+        for op in set(d1["collectives"]) | set(d2["collectives"]):
+            a = d1["collectives"].get(op, 0.0)
+            b = d2["collectives"].get(op, 0.0)
+            colls[op] = a + (n - 1) * max(0.0, b - a)
+
+        rec.update(
+            ok=True,
+            total_s=round(time.time() - t0, 2),
+            full_compile_s=round(t_full, 2),
+            n_periods=n,
+            flops=extrap("flops"),
+            bytes_accessed=extrap("bytes accessed"),
+            flops_scanned=full["cost"].get("flops"),
+            memory=full["memory"],
+            collectives=colls,
+            collective_bytes=sum(colls.values()),
+            collectives_scanned=full["collectives"],
+        )
+        print(
+            f"PASS {arch} {shape_name} {mesh_name} "
+            f"({rec['total_s']:.0f}s flops={rec['flops']:.3g} "
+            f"coll={rec['collective_bytes']:.3g}B "
+            f"temp={ (full['memory'] or {}).get('temp_size_in_bytes', -1)/2**30:.1f}GiB)"
+        )
+    except Exception:
+        rec["error"] = traceback.format_exc()
+        print(f"FAIL {arch} {shape_name} {mesh_name}")
+        print(rec["error"][-2000:])
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def _parse_variant(items):
+    from .cli import parse_overrides
+
+    return parse_overrides(items)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true", help="recompute existing")
+    ap.add_argument("--set", nargs="*", default=None, metavar="K=V",
+                    help="config overrides for perf variants, e.g. "
+                         "--set logits_bf16_ce=true remat_policy=dots")
+    args = ap.parse_args()
+    overrides = _parse_variant(args.set)
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    n_pass = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                f = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+                if f.exists() and not args.force:
+                    rec = json.loads(f.read_text())
+                    print(("PASS" if rec.get("ok") else "FAIL") + f" {arch} {shape} {mesh_name} (cached)")
+                else:
+                    cfg_override = None
+                    if overrides:
+                        import dataclasses
+
+                        cfg_override = dataclasses.replace(ARCHS[arch], **overrides)
+                    rec = run_cell(arch, shape, mp, out_dir, cfg_override=cfg_override)
+                n_pass += bool(rec.get("ok"))
+                n_fail += not rec.get("ok")
+    print(f"\ndry-run complete: {n_pass} pass / {n_fail} fail")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

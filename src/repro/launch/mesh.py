@@ -1,0 +1,36 @@
+"""Production mesh construction (function, not constant: importing this module
+never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "PODS", "POD_SHAPE"]
+
+PODS = 2
+POD_SHAPE = (16, 16)  # 256 chips per pod (TPU v5e-256)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod mesh or 2x16x16 two-pod mesh.
+
+    Axis semantics: "pod" — pure data parallelism across pods (gradient
+    all-reduce over DCN/inter-pod links); "data" — in-pod data parallelism;
+    "model" — tensor/expert parallelism (and KV-cache sequence sharding for
+    decode).
+    """
+    shape = (PODS, *POD_SHAPE) if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} "
+            "(dryrun.py must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)

@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract arguments of the step
+function selected by the shape kind:
+
+* ``train``   -> (params, opt_state, batch)            for ``train_step``
+* ``prefill`` -> (params, tokens[, memory inputs])     for ``prefill``
+* ``decode``  -> (params, cache, tokens, pos)          for ``serve_step``
+
+Stub modality frontends: the audio encoder consumes precomputed frame
+embeddings, the VLM consumes precomputed projected patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape
+from ..models.common import ModelConfig
+from ..models.model import init_cache, init_model
+from ..training.optimizer import adamw_init
+
+__all__ = ["abstract_params", "abstract_opt_state", "batch_specs", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    """Parameter ShapeDtypeStructs via eval_shape (no memory)."""
+    k = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda kk: init_model(kk, cfg), k)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_abs=None):
+    params_abs = params_abs if params_abs is not None else abstract_params(cfg)
+    return jax.eval_shape(adamw_init, params_abs)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    """Training/prefill batch ShapeDtypeStructs."""
+    B, L = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, L), jnp.int32)}
+    if cfg.enc_layers:
+        batch["enc_embeds"] = _sds((B, cfg.num_enc_frames, cfg.d_model), cfg.cdtype)
+    if cfg.num_vision_tokens:
+        batch["vision_embeds"] = _sds((B, cfg.num_vision_tokens, cfg.d_model), cfg.cdtype)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract step-function arguments for a (arch x input-shape) cell."""
+    params = abstract_params(cfg)
+    if shape.kind == "train":
+        return {
+            "params": params,
+            "opt_state": abstract_opt_state(cfg, params),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        out = {"params": params, "batch": batch_specs(cfg, shape)}
+        return out
+    if shape.kind == "decode":
+        B = shape.global_batch
+        return {
+            "params": params,
+            "cache": abstract_cache(cfg, B, shape.seq_len),
+            "tokens": _sds((B, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,518 @@
+"""Sequence-mixer and FFN blocks with train (full-sequence) and decode paths.
+
+Every mixer exposes::
+
+  init_<kind>(key, cfg)                          -> params
+  apply_<kind>(p, x, cfg, ctx, cache=None)       -> (y, new_cache)
+
+``cache is None`` selects the parallel full-sequence path (train/prefill);
+otherwise the single-token decode path is used.  ``ctx`` carries side inputs
+(positions, encoder output / vision embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ModelConfig,
+    apply_rope,
+    causal_attention,
+    chunked_causal_attention,
+    dense_init,
+    rms_norm,
+    rope_freqs,
+    swiglu,
+)
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Side inputs threaded through the layer stack."""
+
+    positions: jax.Array | None = None  # [B, L] token positions
+    pos: jax.Array | None = None  # scalar decode position
+    memory: jax.Array | None = None  # encoder output / vision embeddings
+    causal: bool = True
+
+
+# ---------------------------------------------------------------------------
+# grouped-query attention (optionally with QKV bias — Qwen2.5)
+# ---------------------------------------------------------------------------
+def init_attn(key, cfg: ModelConfig, cross: bool = False):
+    D, Hq, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * dh), cfg.pdtype),
+        "wk": dense_init(ks[1], (D, Hkv * dh), cfg.pdtype),
+        "wv": dense_init(ks[2], (D, Hkv * dh), cfg.pdtype),
+        "wo": dense_init(ks[3], (Hq * dh, D), cfg.pdtype, scale=(Hq * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * dh,), cfg.pdtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), cfg.pdtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), cfg.pdtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def apply_attn(p, x, cfg: ModelConfig, ctx: Ctx, cache=None):
+    B, L, D = x.shape
+    Hq, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, L, Hq, dh)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(B, L, Hkv, dh)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(B, L, Hkv, dh)
+
+    scale = dh**-0.5
+    if cache is None:
+        cos, sin = rope_freqs(ctx.positions, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if cfg.attn_q_chunk and ctx.causal and L % cfg.attn_q_chunk == 0 and L > cfg.attn_q_chunk:
+            out = chunked_causal_attention(
+                q, k, v, scale=scale, chunk=cfg.attn_q_chunk,
+                scores_f32=cfg.attn_scores_f32)
+        else:
+            out = causal_attention(q, k, v, scale=scale, causal=ctx.causal,
+                                   scores_f32=cfg.attn_scores_f32)
+        new_cache = None
+    else:
+        # decode: append one token to the cache, attend over the full cache
+        pos = ctx.pos
+        cos, sin = rope_freqs(pos[None, None].astype(jnp.float32), dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        S = k_cache.shape[1]
+        mask = jnp.arange(S) <= pos  # valid prefix
+        qg = q.reshape(B, 1, Hkv, Hq // Hkv, dh)
+        logits = jnp.einsum("blhgd,bmhd->bhglm", qg, k_cache).astype(jnp.float32) * scale
+        logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhglm,bmhd->blhgd", w.astype(v_cache.dtype), v_cache)
+        out = out.reshape(B, 1, Hq, dh)
+        new_cache = {"k": k_cache, "v": v_cache}
+    y = out.reshape(B, -1, Hq * dh) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.cdtype), "v": jnp.zeros(shape, cfg.cdtype)}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention to a static memory (VLM image layers / enc-dec decoder)
+# ---------------------------------------------------------------------------
+def apply_xattn(p, x, cfg: ModelConfig, ctx: Ctx, cache=None):
+    B, L, D = x.shape
+    Hq, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, L, Hq, dh)
+    if cache is None or "k" not in cache:
+        mem = ctx.memory.astype(x.dtype)
+        M = mem.shape[1]
+        k = _proj(mem, p["wk"], p.get("bk")).reshape(B, M, Hkv, dh)
+        v = _proj(mem, p["wv"], p.get("bv")).reshape(B, M, Hkv, dh)
+    else:
+        k, v = cache["k"], cache["v"]
+    out = causal_attention(q, k, v, scale=dh**-0.5, causal=False,
+                           scores_f32=cfg.attn_scores_f32)
+    y = out.reshape(B, L, Hq * dh) @ p["wo"].astype(x.dtype)
+    new_cache = None if cache is None else {"k": k, "v": v}
+    return y, new_cache
+
+
+def init_xattn_cache(cfg: ModelConfig, batch: int, mem_len: int):
+    shape = (batch, mem_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.cdtype), "v": jnp.zeros(shape, cfg.cdtype)}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2; absorbed decode)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], (D, qr), cfg.pdtype),
+        "q_norm": jnp.ones((qr,), cfg.pdtype),
+        "wq_b": dense_init(ks[1], (qr, H * (nd + rd)), cfg.pdtype),
+        "wkv_a": dense_init(ks[2], (D, kr + rd), cfg.pdtype),
+        "kv_norm": jnp.ones((kr,), cfg.pdtype),
+        "wk_b": dense_init(ks[3], (kr, H * nd), cfg.pdtype),
+        "wv_b": dense_init(ks[4], (kr, H * vd), cfg.pdtype),
+        "wo": dense_init(ks[5], (H * vd, D), cfg.pdtype, scale=(H * vd) ** -0.5),
+    }
+
+
+def apply_mla(p, x, cfg: ModelConfig, ctx: Ctx, cache=None):
+    B, L, D = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    scale = (nd + rd) ** -0.5
+
+    q = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+    q = (q @ p["wq_b"].astype(x.dtype)).reshape(B, L, H, nd + rd)
+    qn, qr_ = q[..., :nd], q[..., nd:]
+
+    kv_a = x @ p["wkv_a"].astype(x.dtype)
+    ckv = rms_norm(kv_a[..., :kr], p["kv_norm"])  # [B, L, kr]
+    k_rope = kv_a[..., kr:].reshape(B, L, 1, rd)
+
+    if cache is None:
+        cos, sin = rope_freqs(ctx.positions, rd, cfg.rope_theta)
+        qr_ = apply_rope(qr_, cos, sin)
+        k_rope = apply_rope(k_rope, cos, sin)
+        kn = (ckv @ p["wk_b"].astype(x.dtype)).reshape(B, L, H, nd)
+        v = (ckv @ p["wv_b"].astype(x.dtype)).reshape(B, L, H, vd)
+        k = jnp.concatenate([kn, jnp.broadcast_to(k_rope, (B, L, H, rd))], -1)
+        qcat = jnp.concatenate([qn, qr_], -1)
+        if cfg.attn_q_chunk and ctx.causal and L % cfg.attn_q_chunk == 0 and L > cfg.attn_q_chunk:
+            out = chunked_causal_attention(
+                qcat, k, v, scale=scale, chunk=cfg.attn_q_chunk,
+                scores_f32=cfg.attn_scores_f32)
+        else:
+            out = causal_attention(qcat, k, v, scale=scale, causal=ctx.causal,
+                                   scores_f32=cfg.attn_scores_f32)
+        y = out.reshape(B, L, H * vd) @ p["wo"].astype(x.dtype)
+        return y, None
+
+    # ---- absorbed decode over the compressed cache -------------------------
+    pos = ctx.pos
+    cos, sin = rope_freqs(pos[None, None].astype(jnp.float32), rd, cfg.rope_theta)
+    qr_ = apply_rope(qr_, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)
+    )
+    kr_cache = jax.lax.dynamic_update_slice(
+        cache["kr"], k_rope[:, :, 0].astype(cache["kr"].dtype), (0, pos, 0)
+    )
+    S = ckv_cache.shape[1]
+    wk_b = p["wk_b"].astype(x.dtype).reshape(kr, H, nd)
+    q_abs = jnp.einsum("blhn,khn->blhk", qn, wk_b)  # [B, 1, H, kr]
+    logits = (
+        jnp.einsum("blhk,bsk->bhls", q_abs, ckv_cache)
+        + jnp.einsum("blhr,bsr->bhls", qr_, kr_cache)
+    ).astype(jnp.float32) * scale
+    mask = jnp.arange(S) <= pos
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out_c = jnp.einsum("bhls,bsk->blhk", w.astype(ckv_cache.dtype), ckv_cache)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(kr, H, vd)
+    out = jnp.einsum("blhk,khv->blhv", out_c, wv_b)
+    y = out.reshape(B, 1, H * vd) @ p["wo"].astype(x.dtype)
+    return y, {"ckv": ckv_cache, "kr": kr_cache}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cfg.cdtype),
+        "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), cfg.cdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective scan, chunked associative scan)
+# ---------------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig):
+    D = cfg.d_model
+    dI = cfg.mamba_expand * D
+    dS = cfg.mamba_d_state
+    dC = cfg.mamba_d_conv
+    dt_rank = max(1, math.ceil(D / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * dI), cfg.pdtype),
+        "conv_w": dense_init(ks[1], (dC, dI), cfg.pdtype, scale=dC**-0.5),
+        "conv_b": jnp.zeros((dI,), cfg.pdtype),
+        "x_proj": dense_init(ks[2], (dI, dt_rank + 2 * dS), cfg.pdtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, dI), cfg.pdtype),
+        "dt_bias": jnp.zeros((dI,), cfg.pdtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, dS + 1, dtype=jnp.float32), (dI, dS))
+        ).astype(jnp.float32),
+        "D_skip": jnp.ones((dI,), cfg.pdtype),
+        "out_proj": dense_init(ks[4], (dI, D), cfg.pdtype, scale=dI**-0.5),
+    }
+
+
+def _mamba_ssm_inputs(p, u, cfg: ModelConfig):
+    """u [B, L, dI] -> (dA, dBu, C) selective-scan elements (f32)."""
+    dS = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = u @ p["x_proj"].astype(u.dtype)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"].astype(u.dtype)
+        + p["dt_bias"].astype(u.dtype)
+    ).astype(jnp.float32)  # [B, L, dI]
+    Bc = proj[..., dt_rank : dt_rank + dS].astype(jnp.float32)  # [B, L, dS]
+    Cc = proj[..., dt_rank + dS :].astype(jnp.float32)  # [B, L, dS]
+    A = -jnp.exp(p["A_log"])  # [dI, dS]
+    dA = jnp.exp(dt[..., None] * A)  # [B, L, dI, dS]
+    dBu = (dt * u.astype(jnp.float32))[..., None] * Bc[..., None, :]  # [B,L,dI,dS]
+    return dA, dBu, Cc
+
+
+def _conv1d_causal(u, w, b, state=None):
+    """Depthwise causal conv; ``state`` [B, dC-1, dI] enables streaming."""
+    dC = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], dC - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(
+        full[:, i : i + u.shape[1]] * w[i].astype(u.dtype) for i in range(dC)
+    ) + b.astype(u.dtype)
+    new_state = full[:, -(dC - 1) :] if dC > 1 else pad
+    return out, new_state
+
+
+def apply_mamba(p, x, cfg: ModelConfig, ctx: Ctx, cache=None):
+    B, L, D = x.shape
+    dI = cfg.mamba_expand * D
+    uz = x @ p["in_proj"].astype(x.dtype)
+    u, z = uz[..., :dI], uz[..., dI:]
+
+    if cache is None:
+        u, _ = _conv1d_causal(u, p["conv_w"], p["conv_b"])
+        u = jax.nn.silu(u)
+        dA, dBu, Cc = _mamba_ssm_inputs(p, u, cfg)
+        Ck = min(cfg.mamba_chunk, L)
+        assert L % Ck == 0
+        nCh = L // Ck
+        dS = cfg.mamba_d_state
+
+        def chunk(h0, elems):
+            dA_c, dBu_c, C_c = elems  # [B, Ck, ...]
+
+            def comb(l, r):
+                return (r[0] * l[0], r[0] * l[1] + r[1])
+
+            Acum, Bcum = jax.lax.associative_scan(comb, (dA_c, dBu_c), axis=1)
+            h_all = Acum * h0[:, None] + Bcum  # [B, Ck, dI, dS]
+            y = jnp.einsum("blds,bls->bld", h_all, C_c)
+            return h_all[:, -1], y
+
+        if cfg.remat:
+            chunk = jax.checkpoint(chunk)
+        h0 = jnp.zeros((B, dI, dS), jnp.float32)
+        elems = (
+            dA.reshape(B, nCh, Ck, dI, dS).swapaxes(0, 1),
+            dBu.reshape(B, nCh, Ck, dI, dS).swapaxes(0, 1),
+            Cc.reshape(B, nCh, Ck, dS).swapaxes(0, 1),
+        )
+        _, ys = jax.lax.scan(chunk, h0, elems)
+        y = ys.swapaxes(0, 1).reshape(B, L, dI)
+        y = y.astype(x.dtype) + u * p["D_skip"].astype(x.dtype)
+        new_cache = None
+    else:
+        u_c, conv_state = _conv1d_causal(u, p["conv_w"], p["conv_b"], cache["conv"])
+        u_c = jax.nn.silu(u_c)
+        dA, dBu, Cc = _mamba_ssm_inputs(p, u_c, cfg)
+        h = cache["ssm"] * dA[:, 0] + dBu[:, 0]  # [B, dI, dS]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])[:, None]
+        y = y.astype(x.dtype) + u_c * p["D_skip"].astype(x.dtype)
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    dI = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, dI), cfg.cdtype),
+        "ssm": jnp.zeros((batch, dI, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM cells
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig):
+    D, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (D, H * dh), cfg.pdtype),
+        "wk": dense_init(ks[1], (D, H * dh), cfg.pdtype),
+        "wv": dense_init(ks[2], (D, H * dh), cfg.pdtype),
+        "w_if": dense_init(ks[3], (D, 2 * H), cfg.pdtype, scale=0.02),
+        "b_if": jnp.zeros((2 * H,), cfg.pdtype),
+        "wo": dense_init(ks[4], (H * dh, D), cfg.pdtype, scale=(H * dh) ** -0.5),
+        "ln_out": jnp.ones((H * dh,), cfg.pdtype),
+    }
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, ctx: Ctx, cache=None):
+    """Matrix-memory LSTM; parallel (stabilised) form for training, O(1)
+    recurrent form for decode.  [arXiv:2405.04517]"""
+    B, L, D = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, L, H, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, L, H, dh) * dh**-0.5
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, L, H, dh)
+    gates = (x @ p["w_if"].astype(x.dtype) + p["b_if"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    i_raw, f_raw = gates[..., :H], gates[..., H:]  # [B, L, H]
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid(f)
+
+    if cache is None:
+        F = jnp.cumsum(log_f, axis=1)  # [B, L, H]
+        a = i_raw - F  # i[s] - F[s]
+        amax = jax.lax.cummax(a, axis=1)
+        # Dmat[t, s] = exp(F[t]-F[s]+i[s]-m[t]), m[t] = F[t] + amax[t]
+        dmat = jnp.exp(a[:, None] - amax[:, :, None])  # [B, t, s, H]
+        t_idx = jnp.arange(L)
+        causal = (t_idx[:, None] >= t_idx[None, :])[None, :, :, None]
+        dmat = jnp.where(causal, dmat, 0.0)
+        scores = jnp.einsum("blhd,bmhd->blmh", q, k).astype(jnp.float32) * dmat
+        norm = jnp.maximum(
+            jnp.abs(scores.sum(axis=2)), jnp.exp(-(F + amax))
+        )  # [B, L, H]
+        h = jnp.einsum("blmh,bmhd->blhd", (scores / norm[:, :, None]).astype(v.dtype), v)
+        new_cache = None
+    else:
+        m0, C0, n0 = cache["m"], cache["C"], cache["n"]
+        lf, ii = log_f[:, 0], i_raw[:, 0]  # [B, H]
+        m1 = jnp.maximum(lf + m0, ii)
+        c_f = jnp.exp(lf + m0 - m1)[..., None, None]
+        c_i = jnp.exp(ii - m1)[..., None, None]
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32))
+        C1 = c_f * C0 + c_i * kv
+        n1 = c_f[..., 0] * n0 + c_i[..., 0] * k[:, 0].astype(jnp.float32)
+        qh = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qh, C1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qh, n1)), jnp.exp(-m1))
+        h = (num / den[..., None]).astype(x.dtype)[:, None]
+        new_cache = {"m": m1, "C": C1, "n": n1}
+    h = rms_norm(h.reshape(B, -1, H * dh), p["ln_out"])
+    return h @ p["wo"].astype(x.dtype), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    H, dh = cfg.num_heads, cfg.head_dim
+    return {
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+    }
+
+
+def init_slstm(key, cfg: ModelConfig):
+    D, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for (z, i, f, o)
+        "w_in": dense_init(ks[0], (D, 4 * H * dh), cfg.pdtype),
+        "b_in": jnp.zeros((4 * H * dh,), cfg.pdtype),
+        # per-head recurrent (block-diagonal) matrices for (z, i, f, o)
+        "r": dense_init(ks[1], (4, H, dh, dh), cfg.pdtype),
+        "wo": dense_init(ks[2], (H * dh, D), cfg.pdtype, scale=(H * dh) ** -0.5),
+    }
+
+
+def _slstm_step(p, carry, xt, cfg: ModelConfig):
+    """One sLSTM step; xt [B, 4*H*dh] pre-projected inputs (f32 math)."""
+    H, dh = cfg.num_heads, cfg.head_dim
+    c0, n0, h0, m0 = carry  # [B, H, dh] each, m0 [B, H, dh]
+    r = p["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->gbhe", h0, r)  # [4, B, H, dh]
+    pre = xt.reshape(xt.shape[0], 4, H, dh).swapaxes(0, 1) + rec
+    z = jnp.tanh(pre[0])
+    i_t, f_t, o_t = pre[1], pre[2], jax.nn.sigmoid(pre[3])
+    lf = -jax.nn.softplus(-f_t)  # log sigmoid(f)
+    m1 = jnp.maximum(lf + m0, i_t)
+    c1 = jnp.exp(lf + m0 - m1) * c0 + jnp.exp(i_t - m1) * z
+    n1 = jnp.exp(lf + m0 - m1) * n0 + jnp.exp(i_t - m1)
+    h1 = o_t * c1 / jnp.maximum(n1, 1e-6)
+    return (c1, n1, h1, m1), h1
+
+
+def apply_slstm(p, x, cfg: ModelConfig, ctx: Ctx, cache=None):
+    B, L, D = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    pre = (x @ p["w_in"].astype(x.dtype) + p["b_in"].astype(x.dtype)).astype(jnp.float32)
+
+    if cache is None:
+        carry = (
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H, dh), -1e30, jnp.float32),
+        )
+        step = lambda c, xt: _slstm_step(p, c, xt, cfg)
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        _, hs = jax.lax.scan(step, carry, pre.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1).reshape(B, L, H * dh).astype(x.dtype)
+        new_cache = None
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        carry, h1 = _slstm_step(p, carry, pre[:, 0], cfg)
+        h = h1.reshape(B, 1, H * dh).astype(x.dtype)
+        new_cache = dict(zip(("c", "n", "h", "m"), carry))
+    return h @ p["wo"].astype(x.dtype), new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    H, dh = cfg.num_heads, cfg.head_dim
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), cfg.pdtype),
+        "w_in": dense_init(ks[1], (D, F), cfg.pdtype),
+        "w_out": dense_init(ks[2], (F, D), cfg.pdtype, scale=F**-0.5),
+    }
+
+
+def apply_ffn(p, x, cfg: ModelConfig):
+    return swiglu(
+        x,
+        p["w_gate"].astype(x.dtype),
+        p["w_in"].astype(x.dtype),
+        p["w_out"].astype(x.dtype),
+    )
+
+
+MIXER_INIT = {
+    "attn": init_attn,
+    "xattn": init_attn,
+    "mla": init_mla,
+    "mamba": init_mamba,
+    "mlstm": init_mlstm,
+    "slstm": init_slstm,
+}
+MIXER_APPLY = {
+    "attn": apply_attn,
+    "xattn": apply_xattn,
+    "mla": apply_mla,
+    "mamba": apply_mamba,
+    "mlstm": apply_mlstm,
+    "slstm": apply_slstm,
+}

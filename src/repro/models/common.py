@@ -1,0 +1,395 @@
+"""Shared model substrate: config, primitives, attention, MoE, SSM cells.
+
+Pure JAX (no flax): parameters are plain pytrees of ``jnp.ndarray`` built by
+``init_*`` functions; every ``apply`` is a pure function.  Layer stacks are
+stored with a leading layer axis and executed with ``jax.lax.scan`` so the
+compiled HLO is O(1) in depth (critical for the 512-device dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 500000.0
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0  # leading dense layers (DeepSeek/Kimi style)
+    moe_every: int = 1  # MoE on layers with (idx % moe_every == moe_every-1)
+    dense_d_ff: int = 0  # FFN width of the leading dense layers
+    # --- MLA (DeepSeek-V2 / Kimi) -------------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- layer pattern (one period, scanned) --------------------------------
+    # entries: "attn" | "mamba" | "mlstm" | "slstm" | "xattn" (vision cross)
+    block_pattern: tuple[str, ...] = ("attn",)
+    # --- Mamba --------------------------------------------------------------
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_chunk: int = 256
+    # --- encoder-decoder (audio) / VLM stub frontends -----------------------
+    enc_layers: int = 0  # >0: enc-dec; num_layers counts decoder layers
+    num_vision_tokens: int = 0  # VLM: precomputed patch embeddings
+    num_enc_frames: int = 0  # audio: precomputed frame embeddings
+    # --- numerics / training -----------------------------------------------
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    capacity_factor: float = 1.25
+    tie_embeddings: bool = False
+    # beyond-paper perf knobs (see EXPERIMENTS.md §Perf)
+    remat_policy: str = "full"  # full | dots | none
+    decode_mla_absorb: bool = True  # absorbed MLA decode (compressed cache)
+    logits_bf16_ce: bool = False  # vocab-sharded bf16 logits + fused-onehot CE
+    act_hints: bool = False  # with_sharding_constraint on block boundaries
+    seq_parallel: bool = False  # shard sequence over "model" between blocks
+    moe_hints: bool = False  # constrain MoE dispatch buffers (EP placement)
+    attn_scores_f32: bool = True  # False: bf16 score materialisation (HLO
+    # proxy for the fused flash-attention kernel's VMEM-resident scores)
+    microbatches: int = 1  # gradient-accumulation microbatches per step
+    moe_gather_dispatch: bool = False  # permutation-gather MoE dispatch with
+    # custom VJP: fwd AND bwd move tokens by gathers (never buffer-sized
+    # scatters, which GSPMD lowers to all-reduces over the full expert buffer)
+    attn_q_chunk: int = 0  # >0: chunked (flash-style) causal attention with
+    # per-chunk KV prefix slices — triangular compute, bounded score buffers
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.num_heads
+
+    @property
+    def n_periods(self) -> int:
+        assert self.layers_after_prologue % len(self.block_pattern) == 0, (
+            self.arch_id,
+            self.layers_after_prologue,
+            self.block_pattern,
+        )
+        return self.layers_after_prologue // len(self.block_pattern)
+
+    @property
+    def layers_after_prologue(self) -> int:
+        return self.num_layers - self.first_k_dense
+
+    def is_moe_layer(self, pos_in_pattern: int) -> bool:
+        """Static MoE placement within one scanned period."""
+        if self.num_experts == 0:
+            return False
+        return pos_in_pattern % self.moe_every == self.moe_every - 1
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Supports the 500k-token long-context decode shape."""
+        return any(k in ("mamba", "mlstm", "slstm") for k in self.block_pattern)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(positions, dim: int, theta: float):
+    """positions [*, L] -> (cos, sin) [*, L, dim/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., L, H, D] with (cos, sin) [..., L, D/2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def causal_attention(q, k, v, *, scale: float, causal: bool = True,
+                     q_offset=None, scores_f32: bool = True):
+    """Grouped-query attention.
+
+    q [B, Lq, Hq, D], k/v [B, Lk, Hkv, D(v)] with Hq % Hkv == 0.
+    ``q_offset``: position of q_i is ``q_offset + i`` (decode: the current
+    position; None means Lq == Lk aligned).  ``scores_f32=False``
+    materialises scores in bf16 — the HLO-cost proxy for a fused attention
+    kernel whose f32 accumulator never leaves VMEM.
+    """
+    B, Lq, Hq, D = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Lq, Hkv, G, D)
+    sdt = jnp.float32 if scores_f32 else q.dtype
+    logits = jnp.einsum(
+        "blhgd,bmhd->bhglm", qg, k, preferred_element_type=sdt
+    ).astype(sdt) * jnp.asarray(scale, sdt)
+    if causal:
+        qpos = jnp.arange(Lq)[:, None] + (0 if q_offset is None else q_offset)
+        mask = qpos >= jnp.arange(Lk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, jnp.asarray(-30000.0, sdt))
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhglm,bmhe->blhge", w.astype(v.dtype), v)
+    return out.reshape(B, Lq, Hq, v.shape[-1])
+
+
+def chunked_causal_attention(q, k, v, *, scale: float, chunk: int,
+                             scores_f32: bool = True):
+    """Causal attention computed one query chunk at a time.
+
+    Chunk ``i`` attends only to the key prefix ``[: (i+1)*chunk]`` (a static
+    slice), so compute is triangular (~half of the dense mask) and the live
+    score buffer is ``chunk x Lk`` instead of ``Lq x Lk`` — the flash-
+    attention schedule expressed at the XLA level.
+    """
+    B, Lq, Hq, Dh = q.shape
+    Lk = k.shape[1]
+    assert Lq == Lk and Lq % chunk == 0, (Lq, Lk, chunk)
+    outs = []
+    for i in range(Lq // chunk):
+        hi = (i + 1) * chunk
+        qc = q[:, i * chunk : hi]
+        out = causal_attention(
+            qc, k[:, :hi], v[:, :hi], scale=scale, causal=True,
+            q_offset=i * chunk, scores_f32=scores_f32,
+        )
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1)
+
+
+def swiglu(x, w_gate, w_in, w_out):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+    return h @ w_out
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 1e-4,
+                          sharded_vocab: bool = False):
+    """Mean next-token loss with z-loss; logits [B, L, V], labels [B, L].
+
+    ``sharded_vocab=True`` replaces the label gather with a fused
+    iota-select-reduce so the vocab axis can stay model-sharded (the gather
+    would otherwise force an all-gather of the full logits).
+    """
+    if sharded_vocab:
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        onehot_sel = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            == labels[..., None],
+            logits.astype(jnp.float32),
+            0.0,
+        )
+        ll = onehot_sel.sum(axis=-1)
+    else:
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    return loss.mean()
+
+
+# ---------------------------------------------------------------------------
+# permutation gather/ungather with cheap transposes (MoE dispatch primitive)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def _perm_gather(src, idx, inv_idx, k_axis):
+    """``out[i] = src[idx[i]]`` whose VJP is ALSO a gather (via ``inv_idx``).
+
+    ``src`` [N+1, D] (last row is a zero pad for sentinel indices);
+    ``idx`` [M] indices into src; ``inv_idx`` carries the inverse mapping the
+    backward pass needs:
+      * if ``k_axis == 0``: ``inv_idx`` [N, K] lists the ≤K output rows fed by
+        each src row (sentinel M) -> bwd sums K gathered cotangents;
+      * if ``k_axis < 0``:  ``inv_idx`` [N] is a plain inverse permutation
+        (sentinel M) -> bwd is a single gather.
+    """
+    return src[idx]
+
+
+def _perm_gather_fwd(src, idx, inv_idx, k_axis):
+    return src[idx], (inv_idx, k_axis, src.shape[0])
+
+
+def _perm_gather_bwd(res, g):
+    inv_idx, k_axis, n1 = res
+    gpad = jnp.concatenate([g, jnp.zeros((1, g.shape[1]), g.dtype)], axis=0)
+    if k_axis == 0:  # [N, K] -> sum over K contributions
+        contrib = gpad[inv_idx]  # [N, K, D]
+        dsrc = contrib.sum(axis=1)
+    else:
+        dsrc = gpad[inv_idx]  # [N, D]
+    dsrc = jnp.concatenate([dsrc, jnp.zeros((1, g.shape[1]), g.dtype)], axis=0)[:n1]
+    return dsrc, None, None, None
+
+
+_perm_gather.defvjp(_perm_gather_fwd, _perm_gather_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch with capacity, EP-shardable)
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig):
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),  # router in f32
+        "w_gate": dense_init(ks[1], (E, D, F), cfg.pdtype),
+        "w_in": dense_init(ks[2], (E, D, F), cfg.pdtype),
+        "w_out": dense_init(ks[3], (E, F, D), cfg.pdtype, scale=F**-0.5),
+    }
+    if cfg.num_shared_experts:
+        Fs = F * cfg.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, (D, Fs), cfg.pdtype),
+            "w_in": dense_init(k2, (D, Fs), cfg.pdtype),
+            "w_out": dense_init(k3, (Fs, D), cfg.pdtype, scale=Fs**-0.5),
+        }
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """Top-k token-choice MoE with sort-based dispatch and capacity drop.
+
+    x [B, L, D] -> [B, L, D] plus the load-balancing aux loss.
+    The [E, C, D] expert buffer is the EP-shardable tensor.
+    """
+    B, L, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * L
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [T, K]
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)  # renormalise
+
+    # aux load-balancing loss (Switch-style)
+    density = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(density * probs.mean(0))
+
+    # ---- sort-based dispatch ------------------------------------------------
+    S = T * K
+    flat_e = top_e.reshape(S)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    flat_w = top_p.reshape(S)
+    order = jnp.argsort(flat_e)  # stable
+    se, stok, sw = flat_e[order], flat_tok[order], flat_w[order]
+    # rank within expert group
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(S) - starts[se]
+    C = max(1, int(cfg.capacity_factor * S / E))
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)  # overflow -> dropped row
+
+    if cfg.moe_gather_dispatch:
+        # --- permutation-gather dispatch (cheap fwd AND bwd) ---------------
+        # integer index maps (scatters on int vectors only: ~MBs, not the
+        # token-buffer-sized scatters GSPMD turns into giant all-reduces)
+        inv_tok = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(stok.astype(jnp.int32))
+        slot_per_flat = jnp.full((S,), E * C, jnp.int32).at[order].set(slot.astype(jnp.int32))
+        slot_tk = slot_per_flat.reshape(T, K)  # token -> its <=K slots
+        inv_flat = jnp.full((E * C + 1,), S, jnp.int32).at[slot].set(order.astype(jnp.int32))
+
+        xt1 = jnp.concatenate([xt.astype(cfg.cdtype), jnp.zeros((1, D), cfg.cdtype)], 0)
+        buf = _perm_gather(xt1, inv_tok[: E * C], slot_tk, 0).reshape(E, C, D)
+    else:
+        buf = jnp.zeros((E * C + 1, D), cfg.cdtype)
+        buf = buf.at[slot].set(xt[stok].astype(cfg.cdtype))
+        buf = buf[: E * C].reshape(E, C, D)
+    if cfg.moe_hints:
+        from ..distributed.context import shard_hint
+        from jax.sharding import PartitionSpec as P
+
+        # pin the dispatch buffer to expert-parallel placement
+        buf = shard_hint(buf, lambda m: P("model", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(cfg.cdtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(cfg.cdtype))
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(cfg.cdtype))
+
+    y_flat = y.reshape(E * C, D)
+    if cfg.moe_gather_dispatch:
+        # combine: gather each token's <=K expert outputs back (bwd: gather
+        # cotangents through inv_flat — again no buffer-sized scatter)
+        y1 = jnp.concatenate([y_flat, jnp.zeros((1, D), y_flat.dtype)], 0)
+        z = _perm_gather(y1, slot_tk.reshape(-1), inv_flat[: E * C], -1)
+        z = z.reshape(T, K, D)
+        out = (z * top_p[..., None].astype(z.dtype)).sum(axis=1)
+    else:
+        gathered = jnp.where(
+            keep[:, None], y_flat[jnp.clip(slot, 0, E * C - 1)], 0.0
+        )
+        out = jnp.zeros((T, D), cfg.cdtype).at[stok].add(
+            gathered * sw[:, None].astype(cfg.cdtype)
+        )
+    if cfg.moe_hints:
+        from ..distributed.context import dp_spec, shard_hint
+        from jax.sharding import PartitionSpec as P
+
+        out = shard_hint(out, lambda m: P(dp_spec(m), None))
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(
+            xt.astype(cfg.cdtype),
+            p["shared"]["w_gate"].astype(cfg.cdtype),
+            p["shared"]["w_in"].astype(cfg.cdtype),
+            p["shared"]["w_out"].astype(cfg.cdtype),
+        )
+    return out.reshape(B, L, D), aux

@@ -1,0 +1,362 @@
+"""Model assembly: embeddings + scanned layer periods + head.
+
+One code path covers all ten assigned architectures:
+
+* decoder-only LMs (dense / MoE / MLA) — uniform ``("attn",)`` pattern,
+* hybrids (Jamba) — ``("attn","mamba",...)`` period patterns with MoE
+  interleave,
+* SSM stacks (xLSTM) — ``("mlstm",...,"slstm")`` patterns,
+* VLM (Llama-3.2-Vision) — ``xattn`` period entries attending to stub patch
+  embeddings,
+* encoder-decoder (Seamless) — encoder stack + decoder stack whose layers
+  carry an extra cross-attention sub-block.
+
+Layers inside one period may be heterogeneous; periods are homogeneous, so
+the whole stack is a single ``lax.scan`` over stacked period parameters with
+optional remat — the compiled HLO is O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (
+    MIXER_APPLY,
+    MIXER_INIT,
+    Ctx,
+    apply_ffn,
+    apply_xattn,
+    init_attn,
+    init_attn_cache,
+    init_ffn,
+    init_mamba_cache,
+    init_mla_cache,
+    init_mlstm_cache,
+    init_slstm_cache,
+    init_xattn_cache,
+)
+from .common import ModelConfig, apply_moe, embed_init, init_moe, rms_norm
+
+Params = Any
+
+
+def _resolved_kind(cfg: ModelConfig, kind: str) -> str:
+    return "mla" if (kind == "attn" and cfg.use_mla) else kind
+
+
+def _layer_has_cross(cfg: ModelConfig) -> bool:
+    """Enc-dec decoders put a cross-attention sub-block in every layer."""
+    return cfg.enc_layers > 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str, *, is_moe: bool, cross: bool,
+                d_ff: int | None = None):
+    ks = jax.random.split(key, 4)
+    rk = _resolved_kind(cfg, kind)
+    p = {"ln1": jnp.ones((cfg.d_model,), cfg.pdtype), "mixer": MIXER_INIT[rk](ks[0], cfg)}
+    if cross and kind != "xattn":
+        p["lnx"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+        p["xmixer"] = init_attn(ks[1], cfg)
+    if is_moe:
+        p["ln2"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+        p["moe"] = init_moe(ks[2], cfg)
+    elif (d_ff or cfg.d_ff) > 0:
+        p["ln2"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+        p["ffn"] = init_ffn(ks[3], cfg, d_ff=d_ff)
+    return p
+
+
+def _init_period(key, cfg: ModelConfig):
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {
+        f"l{i}": _init_layer(
+            ks[i], cfg, kind, is_moe=cfg.is_moe_layer(i), cross=_layer_has_cross(cfg)
+        )
+        for i, kind in enumerate(cfg.block_pattern)
+    }
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], (V, D), cfg.pdtype),
+        "final_norm": jnp.ones((D,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], (D, V), cfg.pdtype)
+
+    # prologue: leading dense layers outside the scan (DeepSeek/Kimi style)
+    if cfg.first_k_dense:
+        pks = jax.random.split(keys[2], cfg.first_k_dense)
+        params["prologue"] = [
+            _init_layer(pks[i], cfg, "attn", is_moe=False,
+                        cross=_layer_has_cross(cfg),
+                        d_ff=cfg.dense_d_ff or cfg.d_ff)
+            for i in range(cfg.first_k_dense)
+        ]
+
+    # scanned periods (stacked leading axis)
+    pkeys = jax.random.split(keys[3], cfg.n_periods)
+    params["periods"] = jax.vmap(lambda k: _init_period(k, cfg))(pkeys)
+
+    # encoder stack (enc-dec only): uniform self-attention layers
+    if cfg.enc_layers:
+        ekeys = jax.random.split(keys[4], cfg.enc_layers)
+        enc_cfg = cfg  # same dims
+        params["encoder"] = jax.vmap(
+            lambda k: _init_layer(k, enc_cfg, "attn", is_moe=False, cross=False)
+        )(ekeys)
+        params["enc_norm"] = jnp.ones((D,), cfg.pdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+def _apply_layer(lp, x, cfg: ModelConfig, kind: str, ctx: Ctx, cache):
+    rk = _resolved_kind(cfg, kind)
+    y, new_cache = MIXER_APPLY[rk](lp["mixer"], rms_norm(x, lp["ln1"]), cfg, ctx, cache=cache.get("mix") if cache else None)
+    x = x + y
+    new_cache = {"mix": new_cache} if new_cache is not None else {}
+    if "xmixer" in lp:
+        y, xc = apply_xattn(
+            lp["xmixer"], rms_norm(x, lp["lnx"]), cfg, ctx,
+            cache=cache.get("cross") if cache else None,
+        )
+        x = x + y
+        if xc is not None:
+            new_cache["cross"] = xc
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        y, aux = apply_moe(lp["moe"], rms_norm(x, lp["ln2"]), cfg)
+        x = x + y
+    elif "ffn" in lp:
+        x = x + apply_ffn(lp["ffn"], rms_norm(x, lp["ln2"]), cfg)
+    return x, (new_cache if new_cache else None), aux
+
+
+def _apply_period(pp, x, cfg: ModelConfig, ctx: Ctx, caches):
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        c = caches[f"l{i}"] if caches is not None else None
+        x, nc, aux = _apply_layer(pp[f"l{i}"], x, cfg, kind, ctx, c)
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[f"l{i}"] = nc
+    if (cfg.act_hints or cfg.seq_parallel) and x.ndim == 3:
+        from ..distributed.context import dp_spec, shard_hint
+        from jax.sharding import PartitionSpec as P
+
+        if cfg.seq_parallel:
+            x = shard_hint(x, lambda m: P(dp_spec(m), "model", None))
+        else:
+            x = shard_hint(x, lambda m: P(dp_spec(m), None, None))
+    return x, (new_caches if new_caches else None), aux_total
+
+
+def _remat(fn, cfg: ModelConfig):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _run_stack(params, x, cfg: ModelConfig, ctx: Ctx):
+    """Train/prefill pass over prologue + scanned periods."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for lp in params.get("prologue", []):
+        x, _, aux = _apply_layer(lp, x, cfg, "attn", ctx, None)
+        aux_total = aux_total + aux
+
+    def body(carry, pp):
+        h, aux = carry
+        h, _, a = _apply_period(pp, h, cfg, ctx, None)
+        return (h, aux + a), None
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["periods"])
+    else:
+        # unrolled: identical math/params; used by the dry-run so that
+        # cost_analysis counts every layer (XLA counts a while body once)
+        for i in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a: a[i], params["periods"])
+            (x, aux_total), _ = body((x, aux_total), pp)
+    return x, aux_total
+
+
+def encode(params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Encoder stack over stub frontend embeddings (enc-dec models)."""
+    ctx = Ctx(positions=jnp.broadcast_to(
+        jnp.arange(enc_embeds.shape[1]), enc_embeds.shape[:2]), causal=False)
+
+    def body(h, lp):
+        h, _, _ = _apply_layer(lp, h, cfg, "attn", ctx, None)
+        return h, None
+
+    body = _remat(body, cfg)
+    x = enc_embeds.astype(cfg.cdtype)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    else:
+        for i in range(cfg.enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    return rms_norm(x, params["enc_norm"])
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    memory: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits [B, L, V] f32, moe aux loss)."""
+    B, L = tokens.shape
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+    ctx = Ctx(positions=positions, memory=memory, causal=True)
+    x, aux = _run_stack(params, x, cfg, ctx)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.logits_bf16_ce:
+        # keep logits in compute dtype, model-sharded over the vocab axis;
+        # the fused-onehot CE never gathers the full vocabulary
+        from ..distributed.context import dp_spec, shard_hint
+        from jax.sharding import PartitionSpec as P
+
+        logits = shard_hint(logits, lambda m: P(dp_spec(m), None, "model"))
+    else:
+        logits = logits.astype(jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, cached)
+# ---------------------------------------------------------------------------
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      cross_len: int):
+    rk = _resolved_kind(cfg, kind)
+    c: dict[str, Any] = {}
+    if rk == "attn":
+        c["mix"] = init_attn_cache(cfg, batch, max_len)
+    elif rk == "mla":
+        c["mix"] = init_mla_cache(cfg, batch, max_len)
+    elif rk == "mamba":
+        c["mix"] = init_mamba_cache(cfg, batch)
+    elif rk == "mlstm":
+        c["mix"] = init_mlstm_cache(cfg, batch)
+    elif rk == "slstm":
+        c["mix"] = init_slstm_cache(cfg, batch)
+    elif rk == "xattn":
+        c["mix"] = init_xattn_cache(cfg, batch, cross_len)
+    if _layer_has_cross(cfg) and kind != "xattn":
+        c["cross"] = init_xattn_cache(cfg, batch, cross_len)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache pytree; period caches stacked to match scanned params."""
+    cross_len = cfg.num_vision_tokens or cfg.num_enc_frames or 1
+
+    def one_period(_):
+        return {
+            f"l{i}": _init_layer_cache(cfg, kind, batch, max_len, cross_len)
+            for i, kind in enumerate(cfg.block_pattern)
+        }
+
+    periods = jax.vmap(one_period)(jnp.arange(cfg.n_periods))
+    cache = {"periods": periods}
+    if cfg.first_k_dense:
+        cache["prologue"] = [
+            _init_layer_cache(cfg, "attn", batch, max_len, cross_len)
+            for _ in range(cfg.first_k_dense)
+        ]
+    return cache
+
+
+def warm_cross_cache(params, cfg: ModelConfig, cache, memory: jax.Array):
+    """Fill cross-attention K/V caches from the static memory.
+
+    Run once before decoding (the serving stack's prefill of encoder output /
+    vision embeddings); afterwards ``decode_step`` never touches ``memory``.
+    """
+    from .blocks import _proj  # local import to avoid cycle at module load
+
+    mem = memory.astype(cfg.cdtype)
+    B, M, _ = mem.shape
+    Hkv, dh = cfg.num_kv_heads, cfg.head_dim
+
+    def kv_of(attn_p):
+        k = _proj(mem, attn_p["wk"], attn_p.get("bk")).reshape(B, M, Hkv, dh)
+        v = _proj(mem, attn_p["wv"], attn_p.get("bv")).reshape(B, M, Hkv, dh)
+        return {"k": k.astype(cfg.cdtype), "v": v.astype(cfg.cdtype)}
+
+    new_cache = jax.tree.map(lambda x: x, cache)  # shallow-copy containers
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"l{i}"
+        pp = params["periods"][key]
+        if kind == "xattn":  # VLM image layers: memory KV is the mixer cache
+            new_cache["periods"][key]["mix"] = jax.vmap(kv_of)(pp["mixer"])
+        if _layer_has_cross(cfg) and kind != "xattn":
+            new_cache["periods"][key]["cross"] = jax.vmap(kv_of)(pp["xmixer"])
+    if cfg.first_k_dense and _layer_has_cross(cfg):
+        for j, lp in enumerate(params["prologue"]):
+            new_cache["prologue"][j]["cross"] = kv_of(lp["xmixer"])
+    return new_cache
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, 1]
+    cache,
+    pos: jax.Array,  # scalar int32 current position
+    *,
+    memory: jax.Array | None = None,
+):
+    """One decode step -> (logits [B, 1, V] f32, new cache)."""
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    ctx = Ctx(pos=pos, memory=memory, causal=True)
+
+    new_cache: dict[str, Any] = {}
+    if cfg.first_k_dense:
+        new_pro = []
+        for lp, lc in zip(params["prologue"], cache["prologue"]):
+            x, nc, _ = _apply_layer(lp, x, cfg, "attn", ctx, lc)
+            new_pro.append(nc)
+        new_cache["prologue"] = new_pro
+
+    def body(h, scanned):
+        pp, pc = scanned
+        h, nc, _ = _apply_period(pp, h, cfg, ctx, pc)
+        return h, nc
+
+    if cfg.scan_layers:
+        x, new_periods = jax.lax.scan(body, x, (params["periods"], cache["periods"]))
+    else:
+        ncs = []
+        for i in range(cfg.n_periods):
+            sl = jax.tree.map(lambda a: a[i], (params["periods"], cache["periods"]))
+            x, nc = body(x, sl)
+            ncs.append(nc)
+        new_periods = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    new_cache["periods"] = new_periods
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,37 @@
+"""Serve-step factory: batched single-token decode with greedy sampling.
+
+``make_serve_step(cfg)`` returns ``(params, cache, tokens, pos) ->
+(next_tokens, logits, cache)``; the KV/recurrent cache layout and sharding is
+described in :mod:`repro.distributed.sharding` (sequence-sharded split-K
+decode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ModelConfig
+from ..models.model import decode_step, init_cache, warm_cross_cache
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = decode_step(params, cfg, tokens, cache, pos)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens[:, None], logits, cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """Full-sequence forward used for prompt processing (no grads)."""
+    from ..models.model import forward
+
+    def prefill(params, tokens, memory=None):
+        logits, _ = forward(params, cfg, tokens, memory=memory)
+        return logits
+
+    return prefill
+
+
+__all__ = ["make_serve_step", "make_prefill", "init_cache", "warm_cross_cache"]

@@ -1,0 +1,152 @@
+"""Tape-tier model: linear cartridges + LTSP-scheduled batch reads.
+
+This is the system integration of the paper: the framework's cold tier
+(training corpora, checkpoint archives) lives on linear tape cartridges; any
+batch of read requests against one cartridge is an LTSP instance, and the
+mass-storage scheduler orders the reads with the paper's algorithms
+(``policy="dp"`` optimal, ``"logdp*"``/``"simpledp"`` low-cost, plus all
+baselines) to minimise the mean service time experienced by consumers.
+
+Everything is integer-exact and simulation-backed: ``read_batch`` returns the
+service time of every request as produced by the trajectory simulator in
+:mod:`repro.core.schedule`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import ALGORITHMS, evaluate_detours, make_instance, service_times, virtual_lb
+from ..core.instance import Instance
+
+__all__ = ["TapeFile", "Tape", "TapeLibrary", "ReadPlan", "schedule_reads"]
+
+#: head repositioning penalty per U-turn, in position units (bytes here).
+DEFAULT_U_TURN = 2_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class TapeFile:
+    name: str
+    left: int
+    size: int
+
+    @property
+    def right(self) -> int:
+        return self.left + self.size
+
+
+class Tape:
+    """One cartridge: files appended left-to-right (sequential writes)."""
+
+    def __init__(self, tape_id: str, capacity: int, u_turn: int = DEFAULT_U_TURN):
+        self.tape_id = tape_id
+        self.capacity = capacity
+        self.u_turn = u_turn
+        self.files: dict[str, TapeFile] = {}
+        self._cursor = 0
+
+    @property
+    def used(self) -> int:
+        return self._cursor
+
+    def append(self, name: str, size: int) -> TapeFile:
+        if name in self.files:
+            raise ValueError(f"duplicate file {name!r} on {self.tape_id}")
+        if self._cursor + size > self.capacity:
+            raise ValueError(f"tape {self.tape_id} full")
+        f = TapeFile(name, self._cursor, size)
+        self.files[name] = f
+        self._cursor += size
+        return f
+
+    def instance(self, requests: dict[str, int]) -> tuple[Instance, list[str]]:
+        """Build the LTSP instance for a request batch {name: multiplicity}."""
+        names = sorted(requests, key=lambda n: self.files[n].left)
+        fs = [self.files[n] for n in names]
+        inst = make_instance(
+            left=[f.left for f in fs],
+            size=[f.size for f in fs],
+            mult=[requests[n] for n in names],
+            m=self.capacity,
+            u_turn=self.u_turn,
+        )
+        return inst, names
+
+
+@dataclasses.dataclass
+class ReadPlan:
+    """Scheduled batch read for one tape."""
+
+    tape_id: str
+    policy: str
+    order: list[str]  # file names in service order
+    service_time: dict[str, int]  # per-file completion time
+    total_cost: int  # sum over requests (the LTSP objective)
+    mean_service: float  # total_cost / n requests
+    virtual_lb: int
+    detours: list[tuple[int, int]]
+
+
+def schedule_reads(
+    tape: Tape, requests: dict[str, int], policy: str = "simpledp"
+) -> ReadPlan:
+    """Order a batch of reads on one tape with an LTSP policy."""
+    if policy not in ALGORITHMS:
+        raise KeyError(f"unknown policy {policy!r}; choose from {sorted(ALGORITHMS)}")
+    inst, names = tape.instance(requests)
+    detours = ALGORITHMS[policy](inst)
+    t = service_times(inst, detours)
+    cost = evaluate_detours(inst, detours)
+    order = [names[i] for i in np.argsort(t, kind="stable")]
+    return ReadPlan(
+        tape_id=tape.tape_id,
+        policy=policy,
+        order=order,
+        service_time={names[i]: int(t[i]) for i in range(len(names))},
+        total_cost=cost,
+        mean_service=cost / inst.n,
+        virtual_lb=virtual_lb(inst),
+        detours=list(detours),
+    )
+
+
+class TapeLibrary:
+    """A robotic library: many cartridges, simple fill placement."""
+
+    def __init__(self, capacity_per_tape: int, u_turn: int = DEFAULT_U_TURN):
+        self.capacity = capacity_per_tape
+        self.u_turn = u_turn
+        self.tapes: list[Tape] = []
+        self.location: dict[str, str] = {}  # file -> tape_id
+
+    def _tape_with_room(self, size: int) -> Tape:
+        for t in self.tapes:
+            if t.used + size <= t.capacity:
+                return t
+        t = Tape(f"TAPE{len(self.tapes):03d}", self.capacity, self.u_turn)
+        self.tapes.append(t)
+        return t
+
+    def store(self, name: str, size: int) -> TapeFile:
+        t = self._tape_with_room(size)
+        f = t.append(name, size)
+        self.location[name] = t.tape_id
+        return f
+
+    def tape_of(self, name: str) -> Tape:
+        tid = self.location[name]
+        return next(t for t in self.tapes if t.tape_id == tid)
+
+    def schedule(self, requests: dict[str, int], policy: str = "simpledp") -> list[ReadPlan]:
+        """Split a request batch per tape and schedule each (one drive per
+        cartridge; cartridges are independent LTSP instances)."""
+        per_tape: dict[str, dict[str, int]] = {}
+        for name, k in requests.items():
+            per_tape.setdefault(self.location[name], {})[name] = k
+        return [
+            schedule_reads(next(t for t in self.tapes if t.tape_id == tid), reqs, policy)
+            for tid, reqs in sorted(per_tape.items())
+        ]

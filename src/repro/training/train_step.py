@@ -1,0 +1,94 @@
+"""Train-step factory: loss, grad accumulation (microbatching), optimizer.
+
+``make_train_step(cfg, opt_cfg, microbatches=k)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with explicit in/out shardings.  Gradient accumulation runs as a
+``lax.scan`` over k micro-slices of the global batch — the standard memory/
+throughput trade-off knob on HBM-bound trainers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ModelConfig, softmax_cross_entropy
+from ..models.model import forward
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jax.Array, dict[str, Any]]:
+    memory = None
+    if cfg.enc_layers:  # enc-dec: encoder runs inside the loss (end-to-end)
+        from ..models.model import encode
+
+        memory = encode(params, cfg, batch["enc_embeds"])
+    elif cfg.num_vision_tokens:  # VLM: stub frontend supplies patch embeddings
+        memory = batch["vision_embeds"]
+    logits, aux = forward(params, cfg, batch["tokens"], memory=memory)
+    loss = softmax_cross_entropy(
+        logits[:, :-1], batch["tokens"][:, 1:], sharded_vocab=cfg.logits_bf16_ce
+    )
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, microbatches: int | None = None):
+    """Build the jittable train step (optionally gradient-accumulated)."""
+
+    microbatches = microbatches if microbatches is not None else cfg.microbatches
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b), has_aux=True
+    )
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def micro(b, i):
+            # split the batch axis with batch OUTERMOST so the data-parallel
+            # sharding of dim 0 survives the reshape (innermost-split would
+            # make GSPMD replicate every microbatch across the data axis)
+            return jax.tree.map(
+                lambda x: x.reshape(-1, microbatches, *x.shape[1:])[:, i]
+                if x.ndim >= 1
+                else x,
+                b,
+            )
+
+        def body(carry, i):
+            acc, _ = carry
+            (_, metrics), grads = grad_fn(params, micro(batch, i))
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, metrics), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        init = (zeros, {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(())})
+        if cfg.scan_layers:
+            (grads, metrics), _ = jax.lax.scan(body, init, jnp.arange(microbatches))
+        else:  # unrolled (dry-run cost accounting: a scan body is costed once)
+            carry = init
+            for i in range(microbatches):
+                carry, _ = body(carry, i)
+            grads, metrics = carry
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = accumulate(params, batch)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from ..models.model import init_model
+
+    params = init_model(key, cfg)
+    return params, adamw_init(params)

@@ -1,0 +1,39 @@
+"""Shared test fixtures: random LTSP instance strategies (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import strategies as st
+
+from repro.core import make_instance
+
+
+@st.composite
+def ltsp_instances(draw, min_files=1, max_files=6, max_size=25, max_mult=6, max_u=15):
+    """Random valid LTSP instance (integer coordinates, disjoint files)."""
+    R = draw(st.integers(min_files, max_files))
+    sizes = [draw(st.integers(1, max_size)) for _ in range(R)]
+    gaps = [draw(st.integers(0, max_size)) for _ in range(R + 1)]
+    left, pos = [], gaps[0]
+    for i in range(R):
+        left.append(pos)
+        pos += sizes[i] + gaps[i + 1]
+    mult = [draw(st.integers(1, max_mult)) for _ in range(R)]
+    u = draw(st.integers(0, max_u))
+    return make_instance(left, sizes, mult, m=pos, u_turn=u)
+
+
+def random_instance(rng: np.random.Generator, lo=2, hi=30, max_u=30):
+    R = int(rng.integers(lo, hi))
+    sizes = rng.integers(1, 50, size=R)
+    gaps = rng.integers(0, 40, size=R + 1)
+    left, pos = [], int(gaps[0])
+    for i in range(R):
+        left.append(pos)
+        pos += int(sizes[i] + gaps[i + 1])
+    mult = rng.integers(1, 10, size=R)
+    return make_instance(left, sizes, mult, m=pos, u_turn=int(rng.integers(0, max_u)))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)

@@ -1,0 +1,59 @@
+"""Pallas LTSP-DP kernel: shape/dtype sweep vs the pure-jnp oracle and the
+exact integer DP (f32 is exact for the small-integer instances used here)."""
+
+import numpy as np
+import pytest
+
+from conftest import random_instance
+from repro.core import dp_schedule, make_instance
+from repro.kernels.ltsp_dp.ops import ltsp_dp_table, ltsp_opt_instance, prepare_arrays
+from repro.kernels.ltsp_dp.ref import ltsp_dp_table_ref, ltsp_opt_ref
+
+
+def _small_instance(rng, R):
+    sizes = rng.integers(1, 9, size=R)
+    gaps = rng.integers(0, 6, size=R + 1)
+    left, pos = [], int(gaps[0])
+    for i in range(R):
+        left.append(pos)
+        pos += int(sizes[i] + gaps[i + 1])
+    mult = rng.integers(1, 4, size=R)
+    return make_instance(left, sizes, mult, m=pos, u_turn=int(rng.integers(0, 5)))
+
+
+@pytest.mark.parametrize("R", [2, 3, 5, 9, 14])
+def test_kernel_matches_ref_exactly(R, rng):
+    inst = _small_instance(rng, R)
+    l, r, x, nl, S = prepare_arrays(inst)
+    T_kernel = ltsp_dp_table(l, r, x, nl, float(inst.u_turn), S, interpret=True)
+    T_ref = ltsp_dp_table_ref(l, r, x, nl, float(inst.u_turn), S)
+    np.testing.assert_array_equal(np.asarray(T_kernel), np.asarray(T_ref))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_kernel_opt_equals_exact_dp(seed):
+    rng = np.random.default_rng(seed)
+    inst = _small_instance(rng, int(rng.integers(2, 10)))
+    opt_exact, _ = dp_schedule(inst)
+    assert ltsp_opt_instance(inst) == float(opt_exact)
+
+
+def test_ref_opt_equals_exact_dp(rng):
+    inst = _small_instance(rng, 7)
+    l, r, x, nl, S = prepare_arrays(inst)
+    v = ltsp_opt_ref(l, r, x, nl, float(inst.u_turn), float(inst.m), S)
+    assert float(v) == float(dp_schedule(inst)[0])
+
+
+def test_kernel_s_padding_invariance(rng):
+    """Padding the skip-count axis must not change reachable cells."""
+    inst = _small_instance(rng, 6)
+    l, r, x, nl, S = prepare_arrays(inst)
+    T1 = ltsp_dp_table(l, r, x, nl, float(inst.u_turn), S, interpret=True)
+    T2 = ltsp_dp_table(l, r, x, nl, float(inst.u_turn), S + 128, interpret=True)
+    R = inst.n_req
+    # reachable skip counts never exceed n; compare that slab
+    n = inst.n
+    np.testing.assert_array_equal(
+        np.asarray(T1[..., : n + 1]), np.asarray(T2[..., : n + 1])
+    )

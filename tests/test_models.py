@@ -1,0 +1,216 @@
+"""Per-architecture smoke tests (reduced configs) + decode parity + MoE
+properties.  Everything runs on CPU with the same code paths the dry-run
+lowers at production scale."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, reduced, runnable_shapes
+from repro.models.common import ModelConfig, apply_moe, init_moe
+from repro.models.model import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_model,
+    warm_cross_cache,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _memory_for(cfg, B, dtype=jnp.bfloat16):
+    if cfg.num_vision_tokens:
+        return jax.random.normal(KEY, (B, cfg.num_vision_tokens, cfg.d_model), dtype=dtype)
+    return None
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_smoke_forward_and_train_shapes(arch_id):
+    cfg = reduced(ARCHS[arch_id])
+    B, L = 2, 32
+    params = init_model(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, L), 0, cfg.vocab_size)
+    memory = _memory_for(cfg, B)
+    if cfg.enc_layers:
+        enc_in = jax.random.normal(KEY, (B, cfg.num_enc_frames, cfg.d_model), dtype=jnp.bfloat16)
+        memory = encode(params, cfg, enc_in)
+        assert memory.shape == (B, cfg.num_enc_frames, cfg.d_model)
+    logits, aux = forward(params, cfg, tokens, memory=memory)
+    assert logits.shape == (B, L, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_smoke_one_train_step(arch_id):
+    from repro.training.optimizer import OptConfig
+    from repro.training.train_step import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(reduced(ARCHS[arch_id], periods=1), remat=False)
+    B, L = 2, 16
+    params, opt_state = init_train_state(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (B, L), 0, cfg.vocab_size)}
+    if cfg.enc_layers:
+        batch["enc_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_enc_frames, cfg.d_model), dtype=jnp.bfloat16
+        )
+    if cfg.num_vision_tokens:
+        batch["vision_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_vision_tokens, cfg.d_model), dtype=jnp.bfloat16
+        )
+    step = make_train_step(cfg, OptConfig(warmup_steps=1, total_steps=10))
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert float(metrics["loss"]) > 0 and np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), params, new_params
+    )
+    assert any(jax.tree.leaves(moved))
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    ["granite-8b", "jamba-v0.1-52b", "xlstm-1.3b", "deepseek-v2-236b",
+     "seamless-m4t-large-v2", "llama-3.2-vision-90b"],
+)
+def test_decode_matches_forward(arch_id):
+    """Step-by-step cached decode reproduces the full-sequence forward."""
+    cfg = dataclasses.replace(
+        reduced(ARCHS[arch_id]),
+        compute_dtype="float32",
+        mamba_chunk=8,
+        capacity_factor=16.0,  # avoid prefill/decode capacity-drop mismatch
+    )
+    B, L = 2, 16
+    params = init_model(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, L), 0, cfg.vocab_size)
+    memory = _memory_for(cfg, B, dtype=jnp.float32)
+    if cfg.enc_layers:
+        enc_in = jax.random.normal(KEY, (B, cfg.num_enc_frames, cfg.d_model), dtype=jnp.float32)
+        memory = encode(params, cfg, enc_in)
+    full, _ = forward(params, cfg, tokens, memory=memory)
+    cache = init_cache(cfg, B, max_len=L)
+    if memory is not None:
+        cache = warm_cross_cache(params, cfg, cache, memory)
+    outs = []
+    for t in range(L):
+        lg, cache = decode_step(params, cfg, tokens[:, t : t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-3, rel
+
+
+def test_scan_equals_unrolled():
+    """cfg.scan_layers only changes compilation strategy, not the math."""
+    cfg = dataclasses.replace(reduced(ARCHS["granite-8b"]), compute_dtype="float32")
+    params = init_model(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    a, _ = forward(params, cfg, tokens)
+    b, _ = forward(params, dataclasses.replace(cfg, scan_layers=False), tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE properties
+# ---------------------------------------------------------------------------
+def _moe_cfg(**kw):
+    base = dict(
+        arch_id="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=4, top_k=2,
+        moe_d_ff=32, compute_dtype="float32", capacity_factor=8.0,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_identical_tokens_identical_outputs():
+    cfg = _moe_cfg()
+    p = init_moe(KEY, cfg)
+    x = jnp.broadcast_to(jax.random.normal(KEY, (1, 1, 16)), (2, 8, 16))
+    y, aux = apply_moe(p, x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y), np.broadcast_to(np.asarray(y[:1, :1]), y.shape), rtol=2e-5, atol=2e-5
+    )
+    assert float(aux) >= 1.0 - 1e-6  # aux loss is >= 1 at any routing
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_cfg(capacity_factor=0.25)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, 16))
+    y, _ = apply_moe(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_runnable_shapes_rules():
+    assert "long_500k" not in runnable_shapes(ARCHS["granite-8b"])
+    assert "long_500k" in runnable_shapes(ARCHS["jamba-v0.1-52b"])
+    assert "long_500k" in runnable_shapes(ARCHS["xlstm-1.3b"])
+    assert set(runnable_shapes(ARCHS["yi-34b"])) == {"train_4k", "prefill_32k", "decode_32k"}
+    assert len(SHAPES) == 4 and len(ARCHS) == 10
+
+
+def test_moe_gather_dispatch_equals_scatter():
+    """The permutation-gather dispatch (custom VJP) is exactly the scatter
+    path: forward, parameter grads and input grads, with and without drops."""
+    import jax
+
+    for cf in (8.0, 0.3):
+        cfg0 = _moe_cfg(capacity_factor=cf, num_shared_experts=1)
+        cfg1 = dataclasses.replace(cfg0, moe_gather_dispatch=True)
+        p = init_moe(KEY, cfg0)
+        x = jax.random.normal(KEY, (2, 8, 16))
+        y0, a0 = apply_moe(p, x, cfg0)
+        y1, a1 = apply_moe(p, x, cfg1)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5, atol=1e-6)
+        assert float(a0) == float(a1)
+        g0 = jax.grad(lambda pp: (apply_moe(pp, x, cfg0)[0] ** 2).sum())(p)
+        g1 = jax.grad(lambda pp: (apply_moe(pp, x, cfg1)[0] ** 2).sum())(p)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+        gx0 = jax.grad(lambda xx: (apply_moe(p, xx, cfg0)[0] ** 2).sum())(x)
+        gx1 = jax.grad(lambda xx: (apply_moe(p, xx, cfg1)[0] ** 2).sum())(x)
+        np.testing.assert_allclose(np.asarray(gx0), np.asarray(gx1), rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_attention_equals_dense():
+    from repro.models.common import causal_attention, chunked_causal_attention
+
+    q = jax.random.normal(KEY, (2, 64, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 2, 8))
+    a = causal_attention(q, k, v, scale=8**-0.5)
+    for chunk in (8, 16, 32):
+        b = chunked_causal_attention(q, k, v, scale=8**-0.5, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    ga = jax.grad(lambda q: causal_attention(q, k, v, scale=8**-0.5).sum())(q)
+    gb = jax.grad(lambda q: chunked_causal_attention(q, k, v, scale=8**-0.5, chunk=16).sum())(q)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), rtol=1e-5, atol=1e-6)
+
+
+def test_perf_knobs_preserve_forward():
+    """Every perf knob combination produces the same logits as the baseline
+    (they change HLO structure, never math)."""
+    cfg = dataclasses.replace(reduced(ARCHS["granite-8b"]), compute_dtype="float32")
+    params = init_model(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    base, _ = forward(params, cfg, tokens)
+    for kw in (
+        {"remat_policy": "dots"},
+        {"remat_policy": "none"},
+        {"attn_q_chunk": 8},
+        {"logits_bf16_ce": True},  # logits stay f32-accurate in f32 compute
+    ):
+        variant = dataclasses.replace(cfg, **kw)
+        out, _ = forward(params, variant, tokens)
+        np.testing.assert_allclose(
+            np.asarray(base), np.asarray(out), rtol=1e-4, atol=1e-4
+        ), kw
