@@ -7,21 +7,32 @@ embedding shards every host needs early).  The LTSP schedulers order the
 reads; mean shard arrival time directly bounds how soon pods can begin
 resharding/loading.
 
-Run: PYTHONPATH=src python examples/tape_restore.py
+Policies and backends come from the solver registry
+(:mod:`repro.core.solver`); pass ``--backend pallas-interpret`` to plan every
+cartridge in one padded device launch.
+
+Run: PYTHONPATH=src python examples/tape_restore.py [--backend python]
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import numpy as np
 
 from repro.configs import ARCHS, reduced
+from repro.core.solver import BACKENDS, DEFAULT_BACKEND
 from repro.distributed.checkpoint import archive_to_tape, plan_restore
 from repro.models.model import init_model
 from repro.storage.tape import TapeLibrary
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=DEFAULT_BACKEND, choices=list(BACKENDS),
+                    help="solver backend for the DP policies")
+    args = ap.parse_args()
     cfg = reduced(ARCHS["deepseek-v2-236b"], periods=2)
     params = init_model(jax.random.PRNGKey(0), cfg)
 
@@ -37,7 +48,14 @@ def main():
     print(f"\n{'policy':<10} {'mean arrival':>14} {'last arrival':>14} {'vs dp':>7}")
     results = {}
     for policy in ("nodetour", "gs", "fgs", "simpledp", "dp"):
-        plans = plan_restore(lib, shards, consumers, policy=policy)
+        backend = args.backend if policy in ("dp",) else "python"
+        try:
+            plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+        except ValueError as e:
+            # e.g. the int32 device-DP magnitude guard on byte-scale tapes
+            print(f"[{policy}/{backend}] {e}\n -> falling back to backend='python'")
+            backend = "python"
+            plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
         n_req = sum(consumers.values())
         mean = sum(p.total_cost for p in plans) / n_req
         last = max(max(p.service_time.values()) for p in plans)

@@ -1,21 +1,33 @@
-"""LTSP core: the paper's exact DP algorithm, heuristics, and evaluators."""
+"""LTSP core: the paper's exact DP algorithm, heuristics, and evaluators.
+
+Scheduling dispatch goes through the solver engine (:mod:`.solver`): pick a
+*policy* (algorithm) and a *backend* (``"python"`` | ``"pallas"`` |
+``"pallas-interpret"``) via :func:`solve`/:func:`solve_batch`, or register
+new policies with :func:`repro.core.solver.register_solver`.  The legacy
+``ALGORITHMS`` mapping is a thin read-only view over the registry.
+"""
 
 from .instance import Instance, make_instance, virtual_lb
-from .schedule import evaluate_detours, service_times, no_detour_cost
+from .schedule import (
+    evaluate_detours,
+    lower_bound_gap,
+    no_detour_cost,
+    schedule_makespan,
+    service_times,
+)
 from .dp import dp_schedule, dp_value, logdp_schedule, simpledp_schedule, logdp_span
 from .heuristics import no_detour, gs, fgs, nfgs, lognfgs
-
-ALGORITHMS = {
-    "nodetour": lambda inst: no_detour(inst),
-    "gs": lambda inst: gs(inst),
-    "fgs": lambda inst: fgs(inst),
-    "nfgs": lambda inst: nfgs(inst),
-    "lognfgs5": lambda inst: lognfgs(inst, lam=5.0),
-    "logdp1": lambda inst: logdp_schedule(inst, lam=1.0)[1],
-    "logdp5": lambda inst: logdp_schedule(inst, lam=5.0)[1],
-    "simpledp": lambda inst: simpledp_schedule(inst)[1],
-    "dp": lambda inst: dp_schedule(inst)[1],
-}
+from .solver import (
+    ALGORITHMS,
+    BACKENDS,
+    SolveResult,
+    Solver,
+    get_solver,
+    list_solvers,
+    register_solver,
+    solve,
+    solve_batch,
+)
 
 __all__ = [
     "Instance",
@@ -24,6 +36,8 @@ __all__ = [
     "evaluate_detours",
     "service_times",
     "no_detour_cost",
+    "schedule_makespan",
+    "lower_bound_gap",
     "dp_schedule",
     "dp_value",
     "logdp_schedule",
@@ -34,5 +48,13 @@ __all__ = [
     "fgs",
     "nfgs",
     "lognfgs",
+    "BACKENDS",
+    "SolveResult",
+    "Solver",
+    "register_solver",
+    "get_solver",
+    "list_solvers",
+    "solve",
+    "solve_batch",
     "ALGORITHMS",
 ]

@@ -20,8 +20,15 @@ Recurrence (files are requested-file indices, ``left(b) = b-1``)::
 
 and ``OPT = T[0, R-1, 0] + VirtualLB``.
 
-Exact Python-int arithmetic, memoised over reachable cells only.  LOGDP is
-the same recursion with ``c`` restricted to ``b - c <= span`` where
+Exact Python-int arithmetic over reachable cells only.  The evaluation is
+**iterative**: an explicit post-order work stack expands a cell's
+dependencies, then folds them once every one is memoised, so arbitrarily
+large instances run without touching the interpreter recursion limit (the
+seed implementation had to raise it ~10x n_req).  Cell values
+and tie-breaking are bit-identical to the recursive formulation: ``skip``
+wins ties, and among detours the smallest ``c`` achieving the minimum wins.
+
+LOGDP is the same recursion with ``c`` restricted to ``b - c <= span`` where
 ``span = ceil(lambda * ln n_req)``; SIMPLEDP forbids intertwined detours which
 collapses the first index to ``f_1`` (2-dimensional table).
 """
@@ -29,22 +36,10 @@ collapses the first index to ``f_1`` (2-dimensional table).
 from __future__ import annotations
 
 import math
-import sys
-from functools import lru_cache
-
-import numpy as np
 
 from .instance import Instance, virtual_lb
 
-__all__ = ["dp_schedule", "logdp_schedule", "simpledp_schedule", "dp_value"]
-
-_RECURSION_HEADROOM = 50_000
-
-
-def _raise_recursion_limit(n_req: int) -> None:
-    need = 10 * n_req + _RECURSION_HEADROOM
-    if sys.getrecursionlimit() < need:
-        sys.setrecursionlimit(need)
+__all__ = ["dp_schedule", "logdp_schedule", "simpledp_schedule", "dp_value", "logdp_span"]
 
 
 def dp_schedule(
@@ -57,7 +52,6 @@ def dp_schedule(
     global pass is not listed).  ``span`` restricts detour spans (LOGDP).
     """
     R = inst.n_req
-    _raise_recursion_limit(R)
     left = inst.left.tolist()
     right = inst.right.tolist()
     x = inst.mult.tolist()
@@ -68,41 +62,74 @@ def dp_schedule(
     memo: dict[tuple[int, int, int], int] = {}
     choice: dict[tuple[int, int, int], int] = {}  # -1 = skip, else c
 
-    def T(a: int, b: int, s: int) -> int:
-        if a == b:
-            return 2 * size[b] * (s + nl[b])
-        key = (a, b, s)
-        v = memo.get(key)
-        if v is not None:
-            return v
-        # --- skip b: read it on the detour starting from a -----------------
+    def base(b: int, s: int) -> int:
+        return 2 * size[b] * (s + nl[b])
+
+    def deps(a: int, b: int, s: int):
+        """Non-base cells the recurrence for ``(a, b, s)`` reads."""
+        out = []
+        if a < b - 1:
+            out.append((a, b - 1, s + x[b]))  # skip
+        lo = a + 1 if span is None else max(a + 1, b - span)
+        for c in range(lo, b + 1):
+            if a < c - 1:
+                out.append((a, c - 1, s))
+            if c < b:
+                out.append((c, b, s))
+        return out
+
+    def value(a: int, b: int, s: int) -> tuple[int, int]:
+        """Fold the recurrence assuming every dependency is memoised."""
+        t_skip = base(b - 1, s + x[b]) if a == b - 1 else memo[(a, b - 1, s + x[b])]
         best = (
-            T(a, b - 1, s + x[b])
+            t_skip
             + 2 * (right[b] - right[b - 1]) * (s + nl[a])
             + 2 * (left[b] - right[b - 1]) * x[b]
         )
         arg = -1
-        # --- or a detour (c, b) for some a < c <= b -------------------------
         lo = a + 1 if span is None else max(a + 1, b - span)
         snla = s + nl[a]
         for c in range(lo, b + 1):
+            t_left = base(a, s) if c - 1 == a else memo[(a, c - 1, s)]
+            t_right = base(b, s) if c == b else memo[(c, b, s)]
             v = (
-                T(a, c - 1, s)
-                + T(c, b, s)
+                t_left
+                + t_right
                 + 2 * (right[b] - right[c - 1]) * snla
                 + 2 * U * (s + nl[c])
             )
             if v < best:
                 best, arg = v, c
-        memo[key] = best
-        choice[key] = arg
-        return best
+        return best, arg
 
-    opt = T(0, R - 1, 0) + virtual_lb(inst)
+    root = (0, R - 1, 0)
+    if R == 1:
+        opt_rel = base(0, 0)
+    else:
+        # Post-order over the dependency DAG with an explicit stack: a cell is
+        # pushed unexpanded, re-pushed expanded together with its unresolved
+        # dependencies, and folded when seen expanded (all deps then memoised).
+        stack: list[tuple[int, int, int, bool]] = [(*root, False)]
+        while stack:
+            a, b, s, expanded = stack.pop()
+            if (a, b, s) in memo:
+                continue
+            if expanded:
+                memo[(a, b, s)], choice[(a, b, s)] = value(a, b, s)
+                continue
+            stack.append((a, b, s, True))
+            for cell in deps(a, b, s):
+                if cell not in memo:
+                    stack.append((*cell, False))
+        opt_rel = memo[root]
 
+    opt = opt_rel + virtual_lb(inst)
+
+    # -- traceback: pre-order replay of the recorded choices ------------------
     detours: list[tuple[int, int]] = []
-
-    def collect(a: int, b: int, s: int) -> None:
+    work: list[tuple[int, int, int]] = [root]
+    while work:
+        a, b, s = work.pop()
         while a < b:
             c = choice[(a, b, s)]
             if c == -1:  # skip b
@@ -110,11 +137,12 @@ def dp_schedule(
                 b -= 1
                 continue
             detours.append((c, b))
-            collect(c, b, s)  # structure inside the detour (c, b)
-            b = c - 1  # continue with T[a, c-1, s]
+            # detour (c, b): descend into its inner structure first, then
+            # continue with T[a, c-1, s] (pushed for later — preserves the
+            # recursive emission order).
+            work.append((a, c - 1, s))
+            a = c
         # a == b: base cell, single-file handling folded into parent detour
-
-    collect(0, R - 1, 0)
     return opt, detours
 
 
@@ -143,9 +171,11 @@ def simpledp_schedule(inst: Instance) -> tuple[int, list[tuple[int, int]]]:
       detour_c(b,s) = T[c-1, s] + 2 (r(b)-r(c-1)) s
                       + 2 (U + r(b)-l(c)) (s + n_l(c))
                       + sum_{c < f <= b} 2 (l(f)-l(c)) x(f)
+
+    Evaluated iteratively like :func:`dp_schedule` (explicit work stack over
+    reachable ``(b, s)`` cells, exact Python ints).
     """
     R = inst.n_req
-    _raise_recursion_limit(R)
     left = inst.left.tolist()
     right = inst.right.tolist()
     x = inst.mult.tolist()
@@ -168,33 +198,49 @@ def simpledp_schedule(inst: Instance) -> tuple[int, list[tuple[int, int]]]:
     memo: dict[tuple[int, int], int] = {}
     choice: dict[tuple[int, int], int] = {}
 
-    def T(b: int, s: int) -> int:
-        if b == 0:
-            return 2 * size[0] * (s + nl[0])
-        key = (b, s)
-        v = memo.get(key)
-        if v is not None:
-            return v
+    def base0(s: int) -> int:
+        return 2 * size[0] * (s + nl[0])
+
+    def value(b: int, s: int) -> tuple[int, int]:
+        t_skip = base0(s + x[b]) if b == 1 else memo[(b - 1, s + x[b])]
         best = (
-            T(b - 1, s + x[b])
+            t_skip
             + 2 * (right[b] - right[b - 1]) * s  # n_l(a=0) == 0
             + 2 * (left[b] - right[b - 1]) * x[b]
         )
         arg = -1
         for c in range(1, b + 1):
+            t_left = base0(s) if c == 1 else memo[(c - 1, s)]
             v = (
-                T(c - 1, s)
+                t_left
                 + 2 * (right[b] - right[c - 1]) * s
                 + 2 * (U + right[b] - left[c]) * (s + nl[c])
                 + in_detour_cost(c, b)
             )
             if v < best:
                 best, arg = v, c
-        memo[key] = best
-        choice[key] = arg
-        return best
+        return best, arg
 
-    opt = T(R - 1, 0) + virtual_lb(inst)
+    if R == 1:
+        opt_rel = base0(0)
+    else:
+        stack: list[tuple[int, int, bool]] = [(R - 1, 0, False)]
+        while stack:
+            b, s, expanded = stack.pop()
+            if (b, s) in memo:
+                continue
+            if expanded:
+                memo[(b, s)], choice[(b, s)] = value(b, s)
+                continue
+            stack.append((b, s, True))
+            if b - 1 > 0 and (b - 1, s + x[b]) not in memo:
+                stack.append((b - 1, s + x[b], False))
+            for c in range(2, b + 1):
+                if (c - 1, s) not in memo:
+                    stack.append((c - 1, s, False))
+        opt_rel = memo[(R - 1, 0)]
+
+    opt = opt_rel + virtual_lb(inst)
 
     detours: list[tuple[int, int]] = []
     b, s = R - 1, 0

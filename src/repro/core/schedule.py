@@ -24,7 +24,13 @@ import numpy as np
 
 from .instance import Instance, virtual_lb
 
-__all__ = ["evaluate_detours", "service_times", "no_detour_cost"]
+__all__ = [
+    "evaluate_detours",
+    "service_times",
+    "no_detour_cost",
+    "schedule_makespan",
+    "lower_bound_gap",
+]
 
 
 def _normalise(detours: Iterable[tuple[int, int]], n_req: int) -> list[tuple[int, int]]:

@@ -1,0 +1,321 @@
+"""First-class solver engine: a ``Solver`` protocol + policy registry.
+
+Every scheduling caller in the repo (``storage/tape.py``, ``benchmarks/run.py``,
+``launch/serve.py``, the examples) dispatches through this module instead of a
+flat name→lambda dict.  A *policy* names an algorithm from the paper (``"dp"``,
+``"simpledp"``, ``"logdp1"``, heuristics …); a *backend* names an execution
+engine for it:
+
+* ``"python"`` — exact Python-int CPU implementation (default, always
+  available, arbitrary magnitudes);
+* ``"pallas"`` — the compiled Pallas TPU wavefront (int32-exact under the
+  magnitude guard in :mod:`repro.kernels.ltsp_dp.ops`);
+* ``"pallas-interpret"`` — the same kernel through the Pallas interpreter
+  (runs on CPU; the validated device path in this repo).
+
+Both device backends return full ``(cost, detours)`` solutions via the
+kernel's argmin planes + host traceback, and batch several instances into a
+single launch through :meth:`Solver.solve_batch`.
+
+Usage::
+
+    from repro.core import solve, solve_batch, get_solver, list_solvers
+
+    res = solve(inst, policy="dp", backend="pallas-interpret")
+    res.cost, res.detours
+
+Registering a custom policy::
+
+    from repro.core.solver import DPSolver, register_solver
+
+    register_solver(DPSolver("logdp2", kind="restricted-dp",
+                             span_policy=lambda n_req: logdp_span(n_req, 2.0),
+                             description="LOGDP with lambda=2"))
+
+The legacy ``ALGORITHMS`` mapping is kept as a read-only view over the
+registry (name → ``inst -> detours`` callable) for downstream code that only
+wants detour lists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Mapping
+from typing import Callable, Protocol, runtime_checkable
+
+from .dp import dp_schedule, logdp_span, simpledp_schedule
+from .heuristics import fgs, gs, lognfgs, nfgs, no_detour
+from .instance import Instance
+from .schedule import evaluate_detours
+
+__all__ = [
+    "BACKENDS",
+    "DEFAULT_BACKEND",
+    "SolveResult",
+    "Solver",
+    "HeuristicSolver",
+    "DPSolver",
+    "SimpleDPSolver",
+    "register_solver",
+    "get_solver",
+    "list_solvers",
+    "solve",
+    "solve_batch",
+    "ALGORITHMS",
+]
+
+BACKENDS = ("python", "pallas", "pallas-interpret")
+DEFAULT_BACKEND = "python"
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """One solved instance: the policy's reported cost and its detour list.
+
+    ``cost`` includes *VirtualLB* (it is the LTSP objective of ``detours`` —
+    the parity tests assert it equals the exact simulator score).
+    """
+
+    policy: str
+    backend: str
+    cost: int
+    detours: list[tuple[int, int]]
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """Protocol every registered policy implements."""
+
+    name: str
+    kind: str  # "heuristic" | "restricted-dp" | "exact-dp"
+    description: str
+
+    @property
+    def backends(self) -> tuple[str, ...]:
+        """Backends this solver accepts (subset of :data:`BACKENDS`)."""
+
+    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
+        """Solve one instance."""
+
+    def solve_batch(
+        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+    ) -> list[SolveResult]:
+        """Solve several instances (device backends: one padded launch)."""
+
+
+def _check_backend(solver: "Solver", backend: str) -> None:
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    if backend not in solver.backends:
+        raise ValueError(
+            f"policy {solver.name!r} has no {backend!r} backend "
+            f"(supported: {solver.backends})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicSolver:
+    """Detour-list heuristic (NODETOUR/GS/FGS/NFGS/…); python backend only.
+
+    The reported cost is the exact simulator score of the emitted detours.
+    """
+
+    name: str
+    fn: Callable[[Instance], list[tuple[int, int]]]
+    description: str = ""
+    kind: str = "heuristic"
+
+    @property
+    def backends(self) -> tuple[str, ...]:
+        return ("python",)
+
+    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
+        _check_backend(self, backend)
+        detours = self.fn(inst)
+        return SolveResult(self.name, backend, evaluate_detours(inst, detours), detours)
+
+    def solve_batch(
+        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+    ) -> list[SolveResult]:
+        return [self.solve(inst, backend) for inst in instances]
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSolver:
+    """The paper's exact DP, optionally span-restricted (LOGDP family).
+
+    ``span_policy`` maps ``n_req`` to the maximum detour span (``None`` =
+    unrestricted = exact DP).  All three backends are available; the device
+    backends batch by span value so one launch serves every instance that
+    shares a span.
+    """
+
+    name: str
+    span_policy: Callable[[int], int | None] | None = None
+    description: str = ""
+    kind: str = "exact-dp"
+
+    @property
+    def backends(self) -> tuple[str, ...]:
+        return BACKENDS
+
+    def _span(self, inst: Instance) -> int | None:
+        return None if self.span_policy is None else self.span_policy(inst.n_req)
+
+    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
+        _check_backend(self, backend)
+        if backend == "python":
+            cost, detours = dp_schedule(inst, span=self._span(inst))
+        else:
+            from ..kernels.ltsp_dp.ops import ltsp_solve_instance
+
+            cost, detours = ltsp_solve_instance(
+                inst, span=self._span(inst), interpret=backend == "pallas-interpret"
+            )
+        return SolveResult(self.name, backend, cost, detours)
+
+    def solve_batch(
+        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+    ) -> list[SolveResult]:
+        _check_backend(self, backend)
+        if backend == "python":
+            return [self.solve(inst, backend) for inst in instances]
+        from ..kernels.ltsp_dp.ops import ltsp_solve_batch
+
+        # one padded launch per distinct span (the span is a static kernel
+        # parameter; unrestricted DP always groups into a single launch)
+        groups: dict[int | None, list[int]] = {}
+        for i, inst in enumerate(instances):
+            groups.setdefault(self._span(inst), []).append(i)
+        results: list[SolveResult | None] = [None] * len(instances)
+        for span, idxs in groups.items():
+            solved = ltsp_solve_batch(
+                [instances[i] for i in idxs],
+                span=span,
+                interpret=backend == "pallas-interpret",
+            )
+            for i, (cost, detours) in zip(idxs, solved):
+                results[i] = SolveResult(self.name, backend, cost, detours)
+        return results  # type: ignore[return-value]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimpleDPSolver:
+    """SIMPLEDP (disjoint detours, 2-D table); python backend only today.
+
+    A device formulation exists on paper (the table is a strict restriction
+    of the full DP's) but is not implemented — tracked in ROADMAP.
+    """
+
+    name: str = "simpledp"
+    description: str = "DP restricted to non-intertwined detours"
+    kind: str = "restricted-dp"
+
+    @property
+    def backends(self) -> tuple[str, ...]:
+        return ("python",)
+
+    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
+        _check_backend(self, backend)
+        cost, detours = simpledp_schedule(inst)
+        return SolveResult(self.name, backend, cost, detours)
+
+    def solve_batch(
+        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+    ) -> list[SolveResult]:
+        return [self.solve(inst, backend) for inst in instances]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Solver] = {}
+
+
+def register_solver(solver: Solver, overwrite: bool = False) -> Solver:
+    """Add a solver to the registry (name collisions require ``overwrite``)."""
+    if solver.name in _REGISTRY and not overwrite:
+        raise ValueError(f"solver {solver.name!r} already registered")
+    _REGISTRY[solver.name] = solver
+    return solver
+
+
+def get_solver(name: str) -> Solver:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; choose from {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_solvers() -> list[str]:
+    """Registered policy names, in registration order."""
+    return list(_REGISTRY)
+
+
+def solve(
+    inst: Instance, policy: str = "dp", backend: str = DEFAULT_BACKEND
+) -> SolveResult:
+    """Solve one instance with a registered policy."""
+    return get_solver(policy).solve(inst, backend)
+
+
+def solve_batch(
+    instances: list[Instance], policy: str = "dp", backend: str = DEFAULT_BACKEND
+) -> list[SolveResult]:
+    """Solve a batch; device backends pack it into one padded launch."""
+    return get_solver(policy).solve_batch(instances, backend)
+
+
+# the paper's nine policies
+register_solver(HeuristicSolver("nodetour", no_detour, "single left-to-right sweep"))
+register_solver(HeuristicSolver("gs", gs, "greedy: one atomic detour per file"))
+register_solver(HeuristicSolver("fgs", fgs, "GS filtered by Lemma 3"))
+register_solver(HeuristicSolver("nfgs", nfgs, "non-atomic FGS (corrected)"))
+register_solver(
+    HeuristicSolver(
+        "lognfgs5", lambda inst: lognfgs(inst, lam=5.0), "NFGS, spans <= 5 ln n"
+    )
+)
+register_solver(
+    DPSolver(
+        "logdp1",
+        span_policy=lambda n_req: logdp_span(n_req, 1.0),
+        description="DP, spans <= ln n",
+        kind="restricted-dp",
+    )
+)
+register_solver(
+    DPSolver(
+        "logdp5",
+        span_policy=lambda n_req: logdp_span(n_req, 5.0),
+        description="DP, spans <= 5 ln n",
+        kind="restricted-dp",
+    )
+)
+register_solver(SimpleDPSolver())
+register_solver(DPSolver("dp", description="the paper's exact DP (optimal)"))
+
+
+class _AlgorithmsView(Mapping):
+    """Legacy ``ALGORITHMS`` shim: registry view as name → ``inst -> detours``.
+
+    Prefer :func:`solve`/:func:`get_solver`; this exists so downstream code
+    and the seed tests that only want detour lists keep working.
+    """
+
+    def __getitem__(self, name: str) -> Callable[[Instance], list[tuple[int, int]]]:
+        solver = get_solver(name)
+        if isinstance(solver, HeuristicSolver):
+            return solver.fn  # detours directly, no throwaway simulator score
+        return lambda inst: solver.solve(inst).detours
+
+    def __iter__(self):
+        return iter(_REGISTRY)
+
+    def __len__(self) -> int:
+        return len(_REGISTRY)
+
+
+ALGORITHMS = _AlgorithmsView()

@@ -1,22 +1,44 @@
-"""Pallas TPU kernel for one anti-diagonal of the LTSP DP wavefront.
+"""Pallas TPU kernel for the LTSP DP wavefront — single-trace, batched,
+traceback-capable.
 
 TPU adaptation of the paper's CPU dynamic program (DESIGN.md §Hardware
 adaptation): the O(n_req) inner minimisation of ``detour_c`` is the compute
-hot-spot (O(n_req^3 · n) total).  On TPU we turn the per-cell scalar loop into
-a dense ``[d, S]`` candidate tile in VMEM reduced with ``min`` on the VPU —
-the ``s`` axis (skip count) is the 128-lane vector axis, the ``c`` candidate
-axis is the sublane axis.  One kernel launch computes one anti-diagonal
-``d = b - a`` for every window start ``a`` (grid axis) so successive
-diagonals — which carry the loop dependency — are separate launches while all
-work inside a diagonal is embarrassingly parallel.
+hot-spot (O(n_req^3 · n) total).  On TPU the per-cell scalar loop becomes a
+dense ``[R-1, S]`` candidate tile in VMEM reduced with ``min``/``argmin`` on
+the VPU — the ``s`` axis (skip count) is the 128-lane vector axis, the ``c``
+candidate axis is the sublane axis.
+
+Unlike the seed implementation (one Python-level ``pallas_call`` per
+anti-diagonal, retraced R times with a full-table ``T.at[...]`` copy each), the
+whole table is now built in **one trace**: :func:`ltsp_dp_tables` runs a jitted
+``lax.fori_loop`` over the diagonal index ``d`` whose carry is the table
+workspace ``(T, C)``; XLA double-buffers/donates the carry so each diagonal is
+an in-place scatter, and the kernel receives ``d`` as a scalar (SMEM) operand,
+masking the candidate range instead of re-specialising shapes per diagonal.
+
+The kernel additionally emits a per-cell **argmin plane** ``C[a, b, s]``
+(-1 = "skip b", else the winning detour start ``c``), matching the exact
+Python DP's tie-breaking (skip wins ties; the smallest minimising ``c`` wins
+among detours), so a host-side traceback (:mod:`.ops`) can reconstruct the
+optimal detour list — the device path is a complete solver, not a value oracle.
+
+Batching: the grid is ``(B, R)`` — several padded instances solve in one
+launch.  Padded files (zero width, zero multiplicity, at the rightmost
+coordinate) provably never win a detour choice, so padding changes neither the
+root value nor the traceback.
 
 Layout notes
 ------------
-* ``T`` is the dense ``[R, R, S]`` table in HBM.  Each program DMAs one row
-  block ``T[a, :, :]`` and one column block ``T[:, b, :]`` into VMEM
-  (``2 * R * S * 4`` bytes; R ~ a few hundred requested files and S ~ a few
-  thousand skip counts fit comfortably in 16 MB VMEM for real tape workloads).
+* ``T``/``C`` are dense ``[B, R, R, S]`` tables.  Each program reads row ``a``
+  and column ``b = a + d`` of its instance's table (``2 * R * S * 4`` bytes of
+  live values; R ~ a few hundred requested files and S ~ a few thousand skip
+  counts fit in 16 MB VMEM for real tape workloads).  Compiled-TPU runs at
+  scale still need a row/column BlockSpec DMA split so only those slices are
+  resident — tracked in ROADMAP as an open item; interpret mode (CPU) is the
+  validated path today.
 * ``S`` should be padded to a multiple of 128 (lane width).
+* ``dtype`` is ``float32`` (exact for values < 2**24, the oracle-comparison
+  path) or ``int32`` (exact for values < 2**31, the solver path).
 * The ``skip`` term needs the shifted gather ``row[s + x_b]``; ``x_b`` is a
   scalar per program, so it is a single dynamic-slice + clamp, not a general
   gather.
@@ -29,94 +51,181 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["diagonal_kernel", "ltsp_dp_diagonal"]
+__all__ = ["wavefront_kernel", "ltsp_dp_wavefront", "ltsp_dp_tables"]
 
 
-def diagonal_kernel(
-    # inputs
-    trow_ref,  # [1, R, S] — row a of T
-    tcol_ref,  # [R, 1, S] — column b = a + d of T
-    left_ref,  # [R] f32
-    right_ref,  # [R] f32
-    x_ref,  # [R] int32
-    nl_ref,  # [R] f32
-    # output
-    out_ref,  # [1, S] — new T[a, a+d, :]
+def wavefront_kernel(
+    # scalar inputs
+    d_ref,  # [1] int32 (SMEM) — current anti-diagonal
+    u_ref,  # [1] dtype (SMEM) — U-turn penalty of this instance
+    # tensor inputs
+    t_ref,  # [1, R, R, S] — this instance's table, diagonals < d filled
+    left_ref,  # [1, R] dtype
+    right_ref,  # [1, R] dtype
+    x_ref,  # [1, R] int32
+    nl_ref,  # [1, R] dtype
+    # outputs
+    val_ref,  # [1, 1, S] — new T[a, a+d, :]
+    cho_ref,  # [1, 1, S] int32 — argmin plane (-1 = skip, else c)
     *,
-    d: int,
-    u_turn: float,
     S: int,
+    span: int | None,
 ):
-    a = pl.program_id(0)
-    b = a + d
+    a = pl.program_id(1)
+    R = t_ref.shape[1]
+    d = d_ref[0]
+    # programs with a + d >= R are out of this diagonal: compute at a clamped
+    # b (cheap, garbage) and let the host-side scatter drop the result.
+    b = jnp.minimum(a + d, R - 1)
+    dtype = t_ref.dtype
+    big = jnp.asarray(
+        jnp.iinfo(jnp.int32).max // 2 if dtype == jnp.int32 else jnp.inf, dtype
+    )
+    two = jnp.asarray(2, dtype)
 
-    svec = jax.lax.broadcasted_iota(jnp.float32, (1, S), 1)  # [1, S]
-    nl_a = pl.load(nl_ref, (pl.dslice(a, 1),))[0]
+    u = u_ref[0]
+    lefts = left_ref[0]  # [R]
+    rights = right_ref[0]  # [R]
+    xs = x_ref[0]  # [R]
+    nls = nl_ref[0]  # [R]
+    tbl = t_ref[0]  # [R, R, S]
+
+    def at(vec, i):
+        return jax.lax.dynamic_index_in_dim(vec, i, keepdims=False)
+
+    nl_a = at(nls, a)
+    svec = jax.lax.broadcasted_iota(dtype, (1, S), 1)
+
+    row = jax.lax.dynamic_index_in_dim(tbl, a, 0, keepdims=False)  # [R, S]
+    col = jax.lax.dynamic_index_in_dim(tbl, b, 1, keepdims=False)  # [R, S]
 
     # ---------------- skip(a, b, s) ----------------------------------------
-    row_bm1 = pl.load(trow_ref, (0, pl.dslice(b - 1, 1), slice(None)))  # [1, S]
-    x_b = pl.load(x_ref, (pl.dslice(b, 1),))[0]
-    idx = jnp.clip(
-        jax.lax.broadcasted_iota(jnp.int32, (1, S), 1) + x_b, 0, S - 1
-    )
-    shifted = jnp.take_along_axis(row_bm1, idx, axis=1)  # [1, S]
-    r_b = pl.load(right_ref, (pl.dslice(b, 1),))[0]
-    r_bm1 = pl.load(right_ref, (pl.dslice(b - 1, 1),))[0]
-    l_b = pl.load(left_ref, (pl.dslice(b, 1),))[0]
+    row_bm1 = jax.lax.dynamic_slice(row, (b - 1, 0), (1, S))  # [1, S]
+    x_b = at(xs, b)
+    idx = jnp.clip(jax.lax.broadcasted_iota(jnp.int32, (1, S), 1) + x_b, 0, S - 1)
+    shifted = jnp.take_along_axis(row_bm1, idx, axis=1)  # T[a, b-1, s + x_b]
+    r_b = at(rights, b)
+    r_bm1 = at(rights, b - 1)
+    l_b = at(lefts, b)
     skip = (
         shifted
-        + 2.0 * (r_b - r_bm1) * (svec + nl_a)
-        + 2.0 * (l_b - r_bm1) * x_b.astype(jnp.float32)
+        + two * (r_b - r_bm1) * (svec + nl_a)
+        + two * (l_b - r_bm1) * x_b.astype(dtype)
     )
 
-    # ---------------- min over detour_c, c = a+1 .. a+d --------------------
-    # T[a, c-1, s]: row-a cols [a, a+d)   |   T[c, b, s]: col-b rows [a+1, a+d]
-    t_left = pl.load(trow_ref, (0, pl.dslice(a, d), slice(None)))  # [d, S]
-    t_right = pl.load(tcol_ref, (pl.dslice(a + 1, d), 0, slice(None)))  # [d, S]
-    r_cm1 = pl.load(right_ref, (pl.dslice(a, d),))  # [d]
-    nl_c = pl.load(nl_ref, (pl.dslice(a + 1, d),))  # [d]
-    svec_d = jax.lax.broadcasted_iota(jnp.float32, (d, S), 1)
+    # ---------------- min over detour_c, masked to a < c <= b --------------
+    # Candidates are materialised for every c in 1..R-1 (static shape) and
+    # invalid ones masked to +inf; T rows outside the wavefront are zeros, so
+    # masked candidates stay finite/representable before the mask applies.
+    t_left = row[: R - 1, :]  # T[a, c-1, s] for c = 1..R-1
+    t_right = col[1:, :]  # T[c, b, s]
+    r_cm1 = rights[: R - 1]  # r(c-1)
+    nl_c = nls[1:]
+    svec_d = jax.lax.broadcasted_iota(dtype, (R - 1, S), 1)
     cand = (
         t_left
         + t_right
-        + 2.0 * (r_b - r_cm1)[:, None] * (svec_d + nl_a)
-        + 2.0 * u_turn * (svec_d + nl_c[:, None])
+        + two * (r_b - r_cm1)[:, None] * (svec_d + nl_a)
+        + two * u * (svec_d + nl_c[:, None])
     )
+    cvec = jax.lax.broadcasted_iota(jnp.int32, (R - 1, S), 0) + 1
+    mask = (cvec > a) & (cvec <= b)
+    if span is not None:  # LOGDP restriction: b - c <= span
+        mask = mask & (b - cvec <= span)
+    cand = jnp.where(mask, cand, big)
     det = jnp.min(cand, axis=0, keepdims=True)  # [1, S]
+    # argmin returns the FIRST minimising index == the smallest c, matching
+    # the exact DP's ascending-c strict-improvement scan.
+    argc = jnp.argmin(cand, axis=0).astype(jnp.int32)[None, :] + 1
 
-    out_ref[...] = jnp.minimum(skip, det)
+    val_ref[0] = jnp.minimum(skip, det)
+    cho_ref[0] = jnp.where(skip <= det, jnp.int32(-1), argc)
 
 
-@functools.partial(jax.jit, static_argnames=("d", "u_turn", "S", "interpret"))
-def ltsp_dp_diagonal(
-    T: jax.Array,  # [R, R, S] f32
-    left: jax.Array,  # [R] f32
-    right: jax.Array,  # [R] f32
-    x: jax.Array,  # [R] int32
-    nl: jax.Array,  # [R] f32
+def ltsp_dp_wavefront(
+    T: jax.Array,  # [B, R, R, S]
+    left: jax.Array,  # [B, R]
+    right: jax.Array,  # [B, R]
+    x: jax.Array,  # [B, R] int32
+    nl: jax.Array,  # [B, R]
+    u: jax.Array,  # [B]
+    d: jax.Array,  # scalar int32 (traced — same kernel serves every diagonal)
     *,
-    d: int,
-    u_turn: float,
     S: int,
+    span: int | None,
     interpret: bool = True,
-) -> jax.Array:
-    """Compute anti-diagonal ``d`` → array ``[R - d, S]`` of new cell values."""
-    R = T.shape[0]
-    n_a = R - d
-    kern = functools.partial(diagonal_kernel, d=d, u_turn=u_turn, S=S)
+) -> tuple[jax.Array, jax.Array]:
+    """One anti-diagonal for every instance: ``([B, R, S], [B, R, S])``."""
+    B, R = left.shape
+    kern = functools.partial(wavefront_kernel, S=S, span=span)
     return pl.pallas_call(
         kern,
-        grid=(n_a,),
+        grid=(B, R),
         in_specs=[
-            pl.BlockSpec((1, R, S), lambda a: (a, 0, 0)),  # row a
-            pl.BlockSpec((R, 1, S), lambda a: (0, a + d, 0)),  # column a+d
-            pl.BlockSpec((R,), lambda a: (0,)),
-            pl.BlockSpec((R,), lambda a: (0,)),
-            pl.BlockSpec((R,), lambda a: (0,)),
-            pl.BlockSpec((R,), lambda a: (0,)),
+            pl.BlockSpec((1,), lambda i, a: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i, a: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, R, R, S), lambda i, a: (i, 0, 0, 0)),
+            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
+            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
+            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
+            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, S), lambda a: (a, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_a, S), T.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, S), lambda i, a: (i, a, 0)),
+            pl.BlockSpec((1, 1, S), lambda i, a: (i, a, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R, S), T.dtype),
+            jax.ShapeDtypeStruct((B, R, S), jnp.int32),
+        ],
         interpret=interpret,
-    )(T, T, left, right, x, nl)
+    )(jnp.asarray([d], jnp.int32).reshape(1), u, T, left, right, x, nl)
+
+
+@functools.partial(jax.jit, static_argnames=("S", "span", "interpret"))
+def ltsp_dp_tables(
+    left: jax.Array,  # [B, R]
+    right: jax.Array,  # [B, R]
+    x: jax.Array,  # [B, R] int32
+    nl: jax.Array,  # [B, R]
+    u: jax.Array,  # [B]
+    *,
+    S: int,
+    span: int | None = None,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full batched DP tables ``(T, C)`` in a single jitted wavefront.
+
+    ``T[i, a, b, s]`` is the DP value table of instance ``i`` and
+    ``C[i, a, b, s]`` the argmin plane (-1 = skip, else detour start ``c``)
+    that the host traceback consumes.  One ``lax.fori_loop`` over the diagonal
+    index carries the ``(T, C)`` workspace; each iteration is one Pallas
+    launch over the ``(instance, window-start)`` grid plus an in-place
+    diagonal scatter (``mode="drop"`` discards the clamped windows past the
+    diagonal's end).
+    """
+    B, R = left.shape
+    dtype = left.dtype
+    rr = jnp.arange(R)
+    # base diagonal T[b, b, s] = 2 s(b) (s + n_l(b)), batched (same op order
+    # as ref.base_diagonal so the f32 path stays bit-identical to the oracle)
+    svec = jnp.arange(S, dtype=dtype)
+    base = 2 * (right - left)[:, :, None] * (svec[None, None, :] + nl[:, :, None])
+    T = jnp.zeros((B, R, R, S), dtype)
+    T = T.at[:, rr, rr, :].set(base)
+    C = jnp.full((B, R, R, S), -1, jnp.int32)
+    if R == 1:
+        return T, C
+
+    def body(d, carry):
+        T, C = carry
+        vals, chos = ltsp_dp_wavefront(
+            T, left, right, x, nl, u, d, S=S, span=span, interpret=interpret
+        )
+        T = T.at[:, rr, rr + d, :].set(vals, mode="drop")
+        C = C.at[:, rr, rr + d, :].set(chos, mode="drop")
+        return T, C
+
+    return jax.lax.fori_loop(1, R, body, (T, C))

@@ -1,73 +1,216 @@
-"""Jitted wrapper assembling the full LTSP DP table from diagonal launches.
+"""Host-side drivers for the Pallas LTSP wavefront: adapters, traceback,
+single- and batched-instance solving.
 
-``ltsp_dp_table`` drives the Pallas kernel one anti-diagonal at a time
-(the wavefront dependency), scattering each diagonal back into the dense
-table.  ``ltsp_opt`` returns the optimal objective value.  ``from_instance``
-adapts an exact :class:`repro.core.instance.Instance`, optionally rescaling
-coordinates so f32 stays exact (all values < 2**20).
+The device path is a **complete solver**: :func:`ltsp_dp_tables` (one jitted
+wavefront, see :mod:`.ltsp_dp`) returns the value table *and* per-cell argmin
+planes; :func:`traceback_detours` replays the argmin planes on the host to
+reconstruct the optimal detour list, exactly like the Python DP's traceback.
+
+Two numeric modes:
+
+* ``int32`` (solver default) — bit-exact while every table value fits in
+  int32; :func:`_check_int32_safe` guards a conservative magnitude bound and
+  raises with a rescaling hint otherwise.
+* ``float32`` (oracle-comparison default, exact for values < 2**24) — used by
+  the seed-compatible :func:`ltsp_dp_table`/:func:`ltsp_opt` wrappers that the
+  kernel tests diff against :mod:`.ref`.
+
+Batching (:func:`ltsp_solve_batch`): instances are right-padded with
+zero-width, zero-multiplicity phantom files at the rightmost coordinate.  A
+phantom file's ``skip`` transition is free and never loses to a detour
+(detours only add nonnegative terms there, and skip wins ties), so neither
+the root value nor the traceback changes — several tapes' instances solve in
+one device launch.
 """
 
 from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ...core.instance import Instance, virtual_lb
-from .ltsp_dp import ltsp_dp_diagonal
-from .ref import base_diagonal
+from .ltsp_dp import ltsp_dp_tables
 
-__all__ = ["ltsp_dp_table", "ltsp_opt", "prepare_arrays", "ltsp_opt_instance"]
+__all__ = [
+    "prepare_arrays",
+    "prepare_batch",
+    "traceback_detours",
+    "ltsp_dp_table",
+    "ltsp_opt",
+    "ltsp_opt_instance",
+    "ltsp_solve_instance",
+    "ltsp_solve_batch",
+]
 
 
-def prepare_arrays(inst: Instance, S: int | None = None):
+def _pad_s(S: int) -> int:
+    return int(math.ceil(S / 128) * 128)
+
+
+def prepare_arrays(inst: Instance, S: int | None = None, dtype=jnp.float32):
     """Instance → (left, right, x, nl, S) device arrays for the kernel.
 
     S defaults to n+1 padded up to a multiple of 128 (TPU lane width).
     """
     if S is None:
         S = inst.n + 1
-    S = int(math.ceil(S / 128) * 128)
-    left = jnp.asarray(inst.left, dtype=jnp.float32)
-    right = jnp.asarray(inst.right, dtype=jnp.float32)
+    S = _pad_s(S)
+    left = jnp.asarray(inst.left, dtype=dtype)
+    right = jnp.asarray(inst.right, dtype=dtype)
     x = jnp.asarray(inst.mult, dtype=jnp.int32)
-    nl = jnp.asarray(inst.n_left(), dtype=jnp.float32)
+    nl = jnp.asarray(inst.n_left(), dtype=dtype)
     return left, right, x, nl, S
 
 
+def prepare_batch(instances: list[Instance], dtype=jnp.int32):
+    """Pack instances into padded ``[B, R_max]`` arrays + shared ``S``.
+
+    Padding appends phantom files (zero width, zero multiplicity) at each
+    instance's rightmost coordinate; see the module docstring for why this is
+    result-preserving.
+    """
+    B = len(instances)
+    R = max(i.n_req for i in instances)
+    S = _pad_s(max(i.n for i in instances) + 1)
+    left = np.zeros((B, R), dtype=np.int64)
+    right = np.zeros((B, R), dtype=np.int64)
+    x = np.zeros((B, R), dtype=np.int64)
+    u = np.zeros((B,), dtype=np.int64)
+    for i, inst in enumerate(instances):
+        r = inst.n_req
+        left[i, :r] = inst.left
+        right[i, :r] = inst.right
+        left[i, r:] = inst.right[-1]
+        right[i, r:] = inst.right[-1]
+        x[i, :r] = inst.mult
+        u[i] = inst.u_turn
+    nl = np.concatenate(
+        [np.zeros((B, 1), np.int64), np.cumsum(x, axis=1)[:, :-1]], axis=1
+    )
+    return (
+        jnp.asarray(left, dtype),
+        jnp.asarray(right, dtype),
+        jnp.asarray(x, jnp.int32),
+        jnp.asarray(nl, dtype),
+        jnp.asarray(u, dtype),
+        S,
+    )
+
+
+def _check_int32_safe(instances: list[Instance]) -> None:
+    """Conservative guard: every table value must stay well inside int32.
+
+    Expanding any cell's recursion, the ``2 Δr (s + n_l)`` movement terms
+    telescope to at most ``2n * 2m``, the base terms add at most ``2n * m``,
+    and at most R detours each add ``2 U * 2n`` — so every cell is below
+    ``2n (3m + R U)`` and every candidate sum below
+    ``2n (7m + (2R + 1) U)``; we require ``2n (8m + (2R + 2) U) < 2**31``.
+    Exact tape byte-coordinates overflow this; rescale coordinates (they
+    share the tape's block granularity) or use the ``python`` backend.
+    """
+    for inst in instances:
+        bound = 2 * inst.n * (8 * inst.m + (2 * inst.n_req + 2) * inst.u_turn)
+        if bound >= 2**31:
+            raise ValueError(
+                f"instance too large for the int32 device DP "
+                f"(m={inst.m}, n={inst.n}, R={inst.n_req}): rescale coordinates "
+                f"to a coarser grain or use backend='python'"
+            )
+
+
+def traceback_detours(choice: np.ndarray, mult: np.ndarray) -> list[tuple[int, int]]:
+    """Replay an argmin plane ``choice[R, R, S]`` into the detour list.
+
+    Iterative pre-order walk from the root cell ``(0, R-1, 0)``: ``-1`` means
+    "skip b" (descend to ``(a, b-1, s + x_b)``), ``c`` means detour ``(c, b)``
+    (emit it, descend into its inner structure ``(c, b, s)``, then resume with
+    ``(a, c-1, s)``).  Matches the exact Python DP's emission order.
+    """
+    R = choice.shape[0]
+    x = [int(v) for v in mult]
+    detours: list[tuple[int, int]] = []
+    work: list[tuple[int, int, int]] = [(0, R - 1, 0)]
+    while work:
+        a, b, s = work.pop()
+        while a < b:
+            c = int(choice[a, b, s])
+            if c == -1:
+                s += x[b]
+                b -= 1
+                continue
+            detours.append((c, b))
+            work.append((a, c - 1, s))
+            a = c
+    return detours
+
+
+# ---------------------------------------------------------------------------
+# solver entry points (int32, exact)
+# ---------------------------------------------------------------------------
+def ltsp_solve_instance(
+    inst: Instance, span: int | None = None, interpret: bool = True
+) -> tuple[int, list[tuple[int, int]]]:
+    """Device-solved ``(opt_cost, detours)`` for one instance (exact int32)."""
+    return ltsp_solve_batch([inst], span=span, interpret=interpret)[0]
+
+
+def ltsp_solve_batch(
+    instances: list[Instance], span: int | None = None, interpret: bool = True
+) -> list[tuple[int, list[tuple[int, int]]]]:
+    """Solve several instances in one padded device launch.
+
+    Returns one ``(opt_cost, detours)`` per instance, in order.  ``opt_cost``
+    is ``VirtualLB + T[0, R_pad-1, 0]`` taken from the int32 device table —
+    exact under the :func:`_check_int32_safe` bound; detour indices refer to
+    each instance's own (unpadded) requested files.
+    """
+    if not instances:
+        return []
+    _check_int32_safe(instances)
+    left, right, x, nl, u, S = prepare_batch(instances, dtype=jnp.int32)
+    T, C = ltsp_dp_tables(left, right, x, nl, u, S=S, span=span, interpret=interpret)
+    R_pad = left.shape[1]
+    C_host = np.asarray(C)
+    T_root = np.asarray(T[:, 0, R_pad - 1, 0])
+    out = []
+    for i, inst in enumerate(instances):
+        dets = traceback_detours(C_host[i], np.asarray(x[i]))
+        # padding only ever skips, so emitted detours stay within the real
+        # files; guard the invariant anyway.
+        assert all(b < inst.n_req for _, b in dets)
+        cost = int(T_root[i]) + virtual_lb(inst)
+        out.append((cost, dets))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# value-only f32 wrappers (seed-compatible API, diffed against ref.py)
+# ---------------------------------------------------------------------------
 def ltsp_dp_table(
-    left: jax.Array,
-    right: jax.Array,
-    x: jax.Array,
-    nl: jax.Array,
-    u_turn: float,
-    S: int,
-    interpret: bool = True,
-) -> jax.Array:
-    """Dense DP table via per-diagonal Pallas launches."""
-    R = left.shape[0]
-    T = jnp.zeros((R, R, S), dtype=jnp.float32)
-    rr = jnp.arange(R)
-    T = T.at[rr, rr, :].set(base_diagonal(right, left, nl, S))
-    for d in range(1, R):
-        diag = ltsp_dp_diagonal(
-            T, left, right, x, nl, d=d, u_turn=float(u_turn), S=S, interpret=interpret
-        )
-        a = jnp.arange(R - d)
-        T = T.at[a, a + d, :].set(diag)
-    return T
+    left, right, x, nl, u_turn: float, S: int, interpret: bool = True
+):
+    """Dense single-instance DP table (f32) via the single-trace wavefront."""
+    dtype = left.dtype
+    T, _ = ltsp_dp_tables(
+        left[None],
+        right[None],
+        x[None],
+        nl[None],
+        jnp.asarray([u_turn], dtype),
+        S=S,
+        interpret=interpret,
+    )
+    return T[0]
 
 
 def ltsp_opt(
     left, right, x, nl, u_turn: float, m: float, S: int, interpret: bool = True
-) -> jax.Array:
+):
     """Optimal LTSP objective (float): ``T[0, R-1, 0] + VirtualLB``."""
     T = ltsp_dp_table(left, right, x, nl, u_turn, S, interpret=interpret)
-    virt = jnp.sum(
-        x.astype(jnp.float32) * (m - left + (right - left) + u_turn)
-    )
+    virt = jnp.sum(x.astype(jnp.float32) * (m - left + (right - left) + u_turn))
     return T[0, left.shape[0] - 1, 0] + virt
 
 

@@ -1,7 +1,15 @@
-"""Production serving launcher: batched greedy decoding with sharded caches.
+"""Production serving launcher: batched greedy decoding with sharded caches,
+optionally warm-started from the tape-archive tier.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
       --batch 8 --new-tokens 32
+
+``--restore-from-tape`` simulates the cold-start path: the checkpoint shards
+are archived to the tape library and the restore reads are ordered by an LTSP
+solver from the registry (``--tape-policy``, any of
+``repro.core.list_solvers()``; ``--tape-backend`` python / pallas /
+pallas-interpret), reporting the mean shard arrival time the serving fleet
+would observe before weights are resident.
 """
 
 from __future__ import annotations
@@ -15,11 +23,41 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, reduced
+from ..core.solver import BACKENDS, DEFAULT_BACKEND, list_solvers
 from ..distributed.context import set_active_mesh
 from ..distributed.sharding import cache_pspecs, param_pspecs, to_shardings
 from ..models.model import init_cache, init_model
 from ..serving.serve import make_serve_step
 from .train import _auto_mesh
+
+
+def _restore_from_tape(params, policy: str, backend: str) -> None:
+    """Archive ``params`` to a simulated tape library and plan the restore."""
+    from ..distributed.checkpoint import archive_to_tape, plan_restore
+    from ..storage.tape import TapeLibrary
+
+    lib = TapeLibrary(capacity_per_tape=4 * 10**6, u_turn=20_000)
+    shards = archive_to_tape(lib, "serve-warmup", params, bytes_per_elem=1)
+    consumers = {s: 2 for s in shards}  # every host group needs every shard
+    t0 = time.time()
+    try:
+        plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+    except ValueError as e:
+        # unsupported policy/backend combo or the int32 device-DP magnitude
+        # guard — cold-start planning must not kill the serving launcher
+        print(f"tape restore [{policy}/{backend}] unavailable: {e}\n"
+              f" -> falling back to backend='python'")
+        backend = "python"
+        plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+    dt = time.time() - t0
+    n_req = sum(consumers.values())
+    mean = sum(p.total_cost for p in plans) / n_req
+    last = max(max(p.service_time.values()) for p in plans)
+    print(
+        f"tape restore [{policy}/{backend}]: {len(shards)} shards on "
+        f"{len(lib.tapes)} tape(s), mean arrival {mean:.3g}, last {last:.3g} "
+        f"(planned in {dt * 1e3:.0f} ms)"
+    )
 
 
 def main() -> None:
@@ -30,6 +68,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--mesh", default="auto", choices=["auto", "pod", "multipod"])
+    ap.add_argument("--restore-from-tape", action="store_true",
+                    help="simulate an LTSP-scheduled checkpoint restore first")
+    ap.add_argument("--tape-policy", default="dp", choices=list_solvers())
+    ap.add_argument("--tape-backend", default=DEFAULT_BACKEND, choices=list(BACKENDS))
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -42,6 +84,8 @@ def main() -> None:
     max_len = args.prompt_len + args.new_tokens
 
     params = init_model(jax.random.PRNGKey(0), cfg)
+    if args.restore_from_tape:
+        _restore_from_tape(params, args.tape_policy, args.tape_backend)
     params = jax.device_put(params, to_shardings(param_pspecs(params), mesh, params))
     cache = init_cache(cfg, args.batch, max_len=max_len)
     cache = jax.device_put(cache, to_shardings(cache_pspecs(cache, mesh), mesh))

@@ -7,9 +7,22 @@ mass-storage scheduler orders the reads with the paper's algorithms
 (``policy="dp"`` optimal, ``"logdp*"``/``"simpledp"`` low-cost, plus all
 baselines) to minimise the mean service time experienced by consumers.
 
+Policy and backend selection
+----------------------------
+Scheduling dispatches through the solver engine
+(:mod:`repro.core.solver`): ``policy`` names any registered solver
+(``repro.core.list_solvers()``) and ``backend`` picks its execution engine —
+``"python"`` (exact CPU, default), ``"pallas"`` (compiled TPU wavefront) or
+``"pallas-interpret"`` (same kernel, interpreter).  On the device backends
+:meth:`TapeLibrary.schedule` packs every cartridge's instance into a single
+padded device launch (one wavefront solves the whole robotic-library batch)
+and reconstructs each cartridge's detour schedule from the kernel's argmin
+planes.
+
 Everything is integer-exact and simulation-backed: ``read_batch`` returns the
 service time of every request as produced by the trajectory simulator in
-:mod:`repro.core.schedule`.
+:mod:`repro.core.schedule`, and every plan's ``total_cost`` equals the
+simulator's score of its detours regardless of policy or backend.
 """
 
 from __future__ import annotations
@@ -18,8 +31,9 @@ import dataclasses
 
 import numpy as np
 
-from ..core import ALGORITHMS, evaluate_detours, make_instance, service_times, virtual_lb
+from ..core import make_instance, service_times, solve, solve_batch, virtual_lb
 from ..core.instance import Instance
+from ..core.solver import DEFAULT_BACKEND, SolveResult
 
 __all__ = ["TapeFile", "Tape", "TapeLibrary", "ReadPlan", "schedule_reads"]
 
@@ -88,29 +102,37 @@ class ReadPlan:
     mean_service: float  # total_cost / n requests
     virtual_lb: int
     detours: list[tuple[int, int]]
+    backend: str = DEFAULT_BACKEND
 
 
-def schedule_reads(
-    tape: Tape, requests: dict[str, int], policy: str = "simpledp"
+def _plan_from_result(
+    tape: Tape, inst: Instance, names: list[str], res: SolveResult
 ) -> ReadPlan:
-    """Order a batch of reads on one tape with an LTSP policy."""
-    if policy not in ALGORITHMS:
-        raise KeyError(f"unknown policy {policy!r}; choose from {sorted(ALGORITHMS)}")
-    inst, names = tape.instance(requests)
-    detours = ALGORITHMS[policy](inst)
-    t = service_times(inst, detours)
-    cost = evaluate_detours(inst, detours)
+    t = service_times(inst, res.detours)
     order = [names[i] for i in np.argsort(t, kind="stable")]
     return ReadPlan(
         tape_id=tape.tape_id,
-        policy=policy,
+        policy=res.policy,
         order=order,
         service_time={names[i]: int(t[i]) for i in range(len(names))},
-        total_cost=cost,
-        mean_service=cost / inst.n,
+        total_cost=res.cost,
+        mean_service=res.cost / inst.n,
         virtual_lb=virtual_lb(inst),
-        detours=list(detours),
+        detours=list(res.detours),
+        backend=res.backend,
     )
+
+
+def schedule_reads(
+    tape: Tape,
+    requests: dict[str, int],
+    policy: str = "simpledp",
+    backend: str = DEFAULT_BACKEND,
+) -> ReadPlan:
+    """Order a batch of reads on one tape with an LTSP policy/backend."""
+    inst, names = tape.instance(requests)
+    res = solve(inst, policy=policy, backend=backend)
+    return _plan_from_result(tape, inst, names, res)
 
 
 class TapeLibrary:
@@ -140,13 +162,28 @@ class TapeLibrary:
         tid = self.location[name]
         return next(t for t in self.tapes if t.tape_id == tid)
 
-    def schedule(self, requests: dict[str, int], policy: str = "simpledp") -> list[ReadPlan]:
+    def schedule(
+        self,
+        requests: dict[str, int],
+        policy: str = "simpledp",
+        backend: str = DEFAULT_BACKEND,
+    ) -> list[ReadPlan]:
         """Split a request batch per tape and schedule each (one drive per
-        cartridge; cartridges are independent LTSP instances)."""
+        cartridge; cartridges are independent LTSP instances).
+
+        Device backends solve every cartridge's instance in one padded
+        multi-instance launch (:func:`repro.core.solve_batch`).
+        """
         per_tape: dict[str, dict[str, int]] = {}
         for name, k in requests.items():
             per_tape.setdefault(self.location[name], {})[name] = k
+        tapes = {t.tape_id: t for t in self.tapes}
+        triples = []
+        for tid, reqs in sorted(per_tape.items()):
+            inst, names = tapes[tid].instance(reqs)
+            triples.append((tapes[tid], inst, names))
+        results = solve_batch([inst for _, inst, _ in triples], policy, backend)
         return [
-            schedule_reads(next(t for t in self.tapes if t.tape_id == tid), reqs, policy)
-            for tid, reqs in sorted(per_tape.items())
+            _plan_from_result(tape, inst, names, res)
+            for (tape, inst, names), res in zip(triples, results)
         ]

@@ -3,9 +3,8 @@ worst-case families, and hypothesis property tests of the simulator."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
-from conftest import ltsp_instances, random_instance
+from conftest import given, ltsp_instances, random_instance, settings
 from repro.core import (
     ALGORITHMS,
     dp_schedule,

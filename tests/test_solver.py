@@ -1,0 +1,247 @@
+"""Solver engine: registry behaviour, backend parity (Pallas-interpret vs the
+exact Python DP, traceback included), batched solving, and the iterative DP's
+independence from the interpreter recursion limit."""
+
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import random_instance
+from repro.core import (
+    ALGORITHMS,
+    dp_schedule,
+    evaluate_detours,
+    get_solver,
+    list_solvers,
+    lower_bound_gap,
+    make_instance,
+    schedule_makespan,
+    solve,
+    solve_batch,
+    virtual_lb,
+)
+from repro.core.solver import BACKENDS, DPSolver, register_solver
+
+POLICIES = [
+    "nodetour", "gs", "fgs", "nfgs", "lognfgs5",
+    "logdp1", "logdp5", "simpledp", "dp",
+]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_has_all_nine_policies():
+    assert list_solvers() == POLICIES
+    assert sorted(ALGORITHMS) == sorted(POLICIES)
+
+
+def test_unknown_policy_and_backend_raise(rng):
+    inst = random_instance(rng, hi=5)
+    with pytest.raises(KeyError, match="unknown policy"):
+        solve(inst, policy="nope")
+    with pytest.raises(KeyError, match="unknown backend"):
+        solve(inst, policy="dp", backend="cuda")
+    # heuristics and simpledp have no device backend (yet): loud error
+    for policy in ("gs", "simpledp"):
+        with pytest.raises(ValueError, match="backend"):
+            solve(inst, policy=policy, backend="pallas-interpret")
+
+
+def test_register_custom_solver(rng):
+    s = DPSolver("dp-span3", span_policy=lambda n: 3, description="test-only")
+    register_solver(s)
+    try:
+        inst = random_instance(rng, hi=8)
+        res = solve(inst, policy="dp-span3")
+        assert res.cost == dp_schedule(inst, span=3)[0]
+        with pytest.raises(ValueError):
+            register_solver(DPSolver("dp-span3"))
+    finally:
+        from repro.core.solver import _REGISTRY
+
+        _REGISTRY.pop("dp-span3")
+
+
+def test_algorithms_shim_returns_detours(rng):
+    inst = random_instance(rng, hi=6)
+    for name, algo in ALGORITHMS.items():
+        dets = algo(inst)
+        assert isinstance(dets, list)
+        assert evaluate_detours(inst, dets) == solve(inst, policy=name).cost
+
+
+# ---------------------------------------------------------------------------
+# reported cost == simulator-scored cost for every policy (python backend)
+# ---------------------------------------------------------------------------
+def test_all_policies_cost_matches_simulator(rng):
+    for _ in range(6):
+        inst = random_instance(rng, hi=18)
+        for policy in POLICIES:
+            res = solve(inst, policy=policy)
+            assert res.cost == evaluate_detours(inst, res.detours), policy
+            assert res.cost >= virtual_lb(inst)
+
+
+def test_all_policies_cost_matches_simulator_on_bench_dataset():
+    from repro.data import BENCH_PROFILE, generate_instance
+
+    for seed in range(4):
+        inst = generate_instance(BENCH_PROFILE, seed=20210917 + seed, u_turn=1000)
+        opt = None
+        for policy in POLICIES:
+            res = solve(inst, policy=policy)
+            assert res.cost == evaluate_detours(inst, res.detours), policy
+            if policy == "dp":
+                opt = res.cost
+        assert opt is not None and all(
+            solve(inst, policy=p).cost >= opt for p in ("gs", "nodetour")
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend parity: full (cost, detours) vs the exact DP
+# ---------------------------------------------------------------------------
+def test_pallas_interpret_parity_50_instances():
+    """>= 50 random instances: device detour cost == exact optimum.
+
+    Mix of U = 0 and U > 0 instances, coordinates up to ~2**19 in the tail
+    (int32-table-safe with small multiplicities), every instance exercising
+    the argmin-plane traceback.
+    """
+    rng = np.random.default_rng(20260731)
+    checked = 0
+    with_u = 0
+    for trial in range(52):
+        if trial % 4 == 0:  # large coordinates, small n: stress magnitudes
+            R = int(rng.integers(2, 7))
+            sizes = rng.integers(1, 2**16, size=R)
+            gaps = rng.integers(0, 2**16, size=R + 1)
+            mult = rng.integers(1, 3, size=R)
+            u = int(rng.integers(0, 2**14))
+        else:
+            R = int(rng.integers(2, 11))
+            sizes = rng.integers(1, 60, size=R)
+            gaps = rng.integers(0, 50, size=R + 1)
+            mult = rng.integers(1, 6, size=R)
+            u = int(rng.integers(0, 40))
+        left, pos = [], int(gaps[0])
+        for i in range(R):
+            left.append(pos)
+            pos += int(sizes[i] + gaps[i + 1])
+        inst = make_instance(left, sizes, mult, m=pos, u_turn=u)
+        with_u += u > 0
+
+        opt, _ = dp_schedule(inst)
+        res = solve(inst, policy="dp", backend="pallas-interpret")
+        assert res.cost == opt, (trial, res.cost, opt)
+        assert evaluate_detours(inst, res.detours) == opt, (trial, res.detours)
+        checked += 1
+    assert checked >= 50
+    assert with_u >= 10  # the U-turn penalty path is genuinely exercised
+
+
+def test_pallas_interpret_logdp_span_parity(rng):
+    for _ in range(8):
+        inst = random_instance(rng, hi=10)
+        for policy in ("logdp1", "logdp5"):
+            py = solve(inst, policy=policy, backend="python")
+            dev = solve(inst, policy=policy, backend="pallas-interpret")
+            assert dev.cost == py.cost, policy
+            assert evaluate_detours(inst, dev.detours) == py.cost
+
+
+def test_solve_batch_one_launch_matches_per_instance(rng):
+    insts = [random_instance(rng, lo=1, hi=9) for _ in range(6)]
+    batched = solve_batch(insts, policy="dp", backend="pallas-interpret")
+    for inst, res in zip(insts, batched):
+        assert res.cost == dp_schedule(inst)[0]
+        assert evaluate_detours(inst, res.detours) == res.cost
+        assert res.backend == "pallas-interpret"
+
+
+def test_int32_guard_rejects_tape_scale_coordinates():
+    inst = make_instance([0, 2 * 10**9], [10**6, 10**6], [3, 3], u_turn=10**7)
+    with pytest.raises(ValueError, match="int32"):
+        solve(inst, policy="dp", backend="pallas-interpret")
+    # same instance is fine on the exact python backend
+    res = solve(inst, policy="dp", backend="python")
+    assert res.cost == evaluate_detours(inst, res.detours)
+
+
+# ---------------------------------------------------------------------------
+# storage integration: backend selector through schedule_reads / TapeLibrary
+# ---------------------------------------------------------------------------
+def test_schedule_reads_backend_selector():
+    from repro.storage.tape import Tape, schedule_reads
+
+    rng = np.random.default_rng(5)
+    t = Tape("T0", capacity=500_000, u_turn=900)
+    for i in range(12):
+        t.append(f"f{i:02d}", int(rng.integers(1_000, 40_000)))
+    reqs = {f"f{i:02d}": int(rng.integers(1, 5)) for i in range(0, 12, 2)}
+    py = schedule_reads(t, reqs, policy="dp", backend="python")
+    dev = schedule_reads(t, reqs, policy="dp", backend="pallas-interpret")
+    assert dev.total_cost == py.total_cost
+    assert dev.service_time == py.service_time
+    assert dev.backend == "pallas-interpret"
+
+
+def test_library_schedule_batches_on_device():
+    from repro.storage.tape import TapeLibrary
+
+    lib = TapeLibrary(capacity_per_tape=120_000, u_turn=500)
+    for i in range(12):
+        lib.store(f"shard{i:02d}", 25_000)  # ~4 shards per tape
+    assert len(lib.tapes) >= 3
+    reqs = {f"shard{i:02d}": 1 + i % 3 for i in range(12)}
+    py = lib.schedule(reqs, policy="dp", backend="python")
+    dev = lib.schedule(reqs, policy="dp", backend="pallas-interpret")
+    assert [p.total_cost for p in py] == [p.total_cost for p in dev]
+    assert sum(len(p.order) for p in dev) == 12
+
+
+# ---------------------------------------------------------------------------
+# iterative DP: no recursion-limit dependence
+# ---------------------------------------------------------------------------
+def test_dp_runs_under_tiny_recursion_limit():
+    """The seed's recursive DP needed ~10x n_req stack depth; the iterative
+    rewrite must solve an R >> limit instance without touching the limit."""
+    R = 150
+    rng = np.random.default_rng(9)
+    sizes = rng.integers(1, 4, size=R)
+    gaps = rng.integers(0, 3, size=R + 1)
+    left, pos = [], int(gaps[0])
+    for i in range(R):
+        left.append(pos)
+        pos += int(sizes[i] + gaps[i + 1])
+    inst = make_instance(left, sizes, np.ones(R, np.int64), m=pos, u_turn=2)
+
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(120)
+    try:
+        from repro.core import simpledp_schedule
+
+        opt, dets = dp_schedule(inst, span=4)
+        sdp, sdets = simpledp_schedule(inst)
+    finally:
+        sys.setrecursionlimit(old)
+    assert opt == evaluate_detours(inst, dets)
+    assert sdp == evaluate_detours(inst, sdets)
+    import repro.core.dp
+
+    src = open(repro.core.dp.__file__).read()
+    assert "setrecursionlimit" not in src
+
+
+# ---------------------------------------------------------------------------
+# satellite: schedule metric exports
+# ---------------------------------------------------------------------------
+def test_schedule_metric_exports(rng):
+    inst = random_instance(rng, hi=8)
+    res = solve(inst, policy="dp")
+    mk = schedule_makespan(inst, res.detours)
+    assert mk >= max(inst.m - int(inst.left[0]), 1)
+    gap = lower_bound_gap(inst, res.cost)
+    assert gap >= 1.0 or virtual_lb(inst) == 0
