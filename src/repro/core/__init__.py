@@ -20,6 +20,7 @@ from .heuristics import no_detour, gs, fgs, nfgs, lognfgs
 from .solver import (
     ALGORITHMS,
     BACKENDS,
+    SolveCache,
     SolveResult,
     Solver,
     get_solver,
@@ -49,6 +50,7 @@ __all__ = [
     "nfgs",
     "lognfgs",
     "BACKENDS",
+    "SolveCache",
     "SolveResult",
     "Solver",
     "register_solver",

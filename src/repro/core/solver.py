@@ -32,6 +32,27 @@ Registering a custom policy::
                              span_policy=lambda n_req: logdp_span(n_req, 2.0),
                              description="LOGDP with lambda=2"))
 
+Memoising repeated solves
+-------------------------
+Serving and restore loops frequently re-plan *identical* tapes (the same
+request multiset against the same cartridge).  :class:`SolveCache` is a
+bounded LRU memo for those: pass one to :func:`solve`/:func:`solve_batch`
+(or hang it on a ``TapeLibrary``) and repeated identical solves return the
+stored result without touching a backend.
+
+The cache key is the **canonicalized request multiset**:
+``(policy, backend, m, u_turn, left.tobytes(), right.tobytes(),
+mult.tobytes())``.  An :class:`~repro.core.instance.Instance` already stores
+requested files sorted by position with aggregated multiplicities, so two
+request batches that read the same files the same number of times on the same
+cartridge canonicalize to the same key regardless of arrival order.  The key
+captures array *contents* at call time and hits return a fresh
+:class:`SolveResult` (detours copied), so mutating an instance or a returned
+schedule never aliases into — or invalidates silently — a cached entry.
+``backend`` is part of the key because a hit reports the backend that
+actually computed it; all backends are bit-identical, so sharing keys across
+backends would be sound but would misreport provenance.
+
 The legacy ``ALGORITHMS`` mapping is kept as a read-only view over the
 registry (name → ``inst -> detours`` callable) for downstream code that only
 wants detour lists.
@@ -40,6 +61,7 @@ wants detour lists.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from collections.abc import Mapping
 from typing import Callable, Protocol, runtime_checkable
 
@@ -52,6 +74,7 @@ __all__ = [
     "BACKENDS",
     "DEFAULT_BACKEND",
     "SolveResult",
+    "SolveCache",
     "Solver",
     "HeuristicSolver",
     "DPSolver",
@@ -80,6 +103,65 @@ class SolveResult:
     backend: str
     cost: int
     detours: list[tuple[int, int]]
+
+
+class SolveCache:
+    """Bounded LRU memo of solved instances (see the module docstring).
+
+    Keys canonicalize the request multiset plus ``(policy, backend)``; values
+    are immutable snapshots (detours stored as tuples), re-materialised into a
+    fresh :class:`SolveResult` on every hit.  ``hits``/``misses`` counters
+    feed the benchmark summaries.
+    """
+
+    def __init__(self, maxsize: int = 4096):
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._store: OrderedDict[tuple, tuple] = OrderedDict()
+
+    @staticmethod
+    def key(inst: Instance, policy: str, backend: str) -> tuple:
+        """Canonical cache key; captures array contents at call time."""
+        return (
+            policy,
+            backend,
+            inst.m,
+            inst.u_turn,
+            inst.left.tobytes(),
+            inst.right.tobytes(),
+            inst.mult.tobytes(),
+        )
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, inst: Instance, policy: str, backend: str) -> SolveResult | None:
+        key = self.key(inst, policy, backend)
+        entry = self._store.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        cost, detours = entry
+        return SolveResult(policy, backend, cost, [tuple(d) for d in detours])
+
+    def put(self, inst: Instance, policy: str, backend: str, res: SolveResult) -> None:
+        self._store[self.key(inst, policy, backend)] = (
+            res.cost,
+            tuple((int(c), int(b)) for c, b in res.detours),
+        )
+        while len(self._store) > self.maxsize:
+            self._store.popitem(last=False)
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "entries": len(self)}
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0
 
 
 @runtime_checkable
@@ -255,17 +337,46 @@ def list_solvers() -> list[str]:
 
 
 def solve(
-    inst: Instance, policy: str = "dp", backend: str = DEFAULT_BACKEND
+    inst: Instance,
+    policy: str = "dp",
+    backend: str = DEFAULT_BACKEND,
+    cache: SolveCache | None = None,
 ) -> SolveResult:
-    """Solve one instance with a registered policy."""
-    return get_solver(policy).solve(inst, backend)
+    """Solve one instance with a registered policy (optionally memoised)."""
+    if cache is not None:
+        hit = cache.get(inst, policy, backend)
+        if hit is not None:
+            return hit
+    res = get_solver(policy).solve(inst, backend)
+    if cache is not None:
+        cache.put(inst, policy, backend, res)
+    return res
 
 
 def solve_batch(
-    instances: list[Instance], policy: str = "dp", backend: str = DEFAULT_BACKEND
+    instances: list[Instance],
+    policy: str = "dp",
+    backend: str = DEFAULT_BACKEND,
+    cache: SolveCache | None = None,
 ) -> list[SolveResult]:
-    """Solve a batch; device backends pack it into one padded launch."""
-    return get_solver(policy).solve_batch(instances, backend)
+    """Solve a batch; device backends pack it into size-bucketed launches.
+
+    With a ``cache``, hits are served from the memo and only the misses go to
+    the backend (in one bucketed batch), so re-planning a mostly-repeated
+    request mix only pays for the novel tapes.
+    """
+    if cache is None:
+        return get_solver(policy).solve_batch(instances, backend)
+    results: list[SolveResult | None] = [
+        cache.get(inst, policy, backend) for inst in instances
+    ]
+    miss = [i for i, r in enumerate(results) if r is None]
+    if miss:
+        solved = get_solver(policy).solve_batch([instances[i] for i in miss], backend)
+        for i, res in zip(miss, solved):
+            cache.put(instances[i], policy, backend, res)
+            results[i] = res
+    return results  # type: ignore[return-value]
 
 
 # the paper's nine policies

@@ -105,17 +105,20 @@ def plan_restore(
     consumers_per_shard: int | dict[str, int] = 1,
     policy: str = "simpledp",
     backend: str = "python",
+    cache=None,
 ) -> list[ReadPlan]:
     """LTSP-scheduled restore: order shard reads to minimise mean arrival.
 
     ``consumers_per_shard`` is the request multiplicity (e.g. the number of
     pods that need the shard before they can start their reshard step).
     ``policy``/``backend`` select any registered solver and execution engine
-    (see :mod:`repro.core.solver`); device backends plan every cartridge in
-    one padded launch.
+    (see :mod:`repro.core.solver`); device backends plan every cartridge in a
+    few size-bucketed launches.  ``cache`` (a :class:`repro.core.SolveCache`,
+    defaulting to the library's own) memoises the per-cartridge solutions so
+    a restore re-planned against an unchanged archive is pure cache hits.
     """
     if isinstance(consumers_per_shard, int):
         requests = {n: consumers_per_shard for n in shard_names}
     else:
         requests = dict(consumers_per_shard)
-    return library.schedule(requests, policy=policy, backend=backend)
+    return library.schedule(requests, policy=policy, backend=backend, cache=cache)

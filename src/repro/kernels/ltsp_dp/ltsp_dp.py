@@ -1,42 +1,75 @@
 """Pallas TPU kernel for the LTSP DP wavefront — single-trace, batched,
-traceback-capable.
+traceback-capable, with a banded candidate scan and per-program DMA slices.
 
 TPU adaptation of the paper's CPU dynamic program (DESIGN.md §Hardware
 adaptation): the O(n_req) inner minimisation of ``detour_c`` is the compute
 hot-spot (O(n_req^3 · n) total).  On TPU the per-cell scalar loop becomes a
-dense ``[R-1, S]`` candidate tile in VMEM reduced with ``min``/``argmin`` on
-the VPU — the ``s`` axis (skip count) is the 128-lane vector axis, the ``c``
-candidate axis is the sublane axis.
+dense candidate tile in VMEM reduced with ``min``/``argmin`` on the VPU — the
+``s`` axis (skip count) is the 128-lane vector axis, the ``c`` candidate axis
+is the sublane axis.
 
 Unlike the seed implementation (one Python-level ``pallas_call`` per
 anti-diagonal, retraced R times with a full-table ``T.at[...]`` copy each), the
-whole table is now built in **one trace**: :func:`ltsp_dp_tables` runs a jitted
+whole table is built in **one trace**: :func:`ltsp_dp_tables` runs a jitted
 ``lax.fori_loop`` over the diagonal index ``d`` whose carry is the table
 workspace ``(T, C)``; XLA double-buffers/donates the carry so each diagonal is
-an in-place scatter, and the kernel receives ``d`` as a scalar (SMEM) operand,
-masking the candidate range instead of re-specialising shapes per diagonal.
+an in-place scatter, and the kernel receives ``d`` as a scalar-prefetch
+operand, so the same compiled kernel serves every diagonal.
+
+Banded candidate scan
+---------------------
+A cell ``(a, b)`` on diagonal ``d = b - a`` has exactly ``d`` detour
+candidates ``c in (a, b]`` (fewer under a LOGDP span restriction).  The seed
+kernel materialised the full ``[R-1, S]`` candidate tile for every cell and
+masked the dead rows — about 2x redundant VPU work over the whole table
+(``sum_d d`` live rows vs ``sum_d (R-1)`` computed ones).  The kernel now
+walks the live band in static ``cand_tile``-row chunks: a ``fori_loop`` over
+``ceil(n_live / cand_tile)`` chunks dynamic-slices only the candidate rows it
+needs and folds them into a running ``(min, argmin)`` carry.  Chunks ascend in
+``c`` and the fold improves strictly, so the argmin is still the *smallest*
+minimising ``c`` — identical tie-breaking to the exact Python DP (skip wins
+ties against detours; among detours the smallest ``c`` wins).  When
+``R - 1 <= cand_tile`` the band never spans more than one chunk and the
+kernel statically falls back to the single masked tile (same arithmetic, no
+loop overhead) — so small instances compile to exactly the pre-banding code.
+
+Per-program DMA slices
+----------------------
+A program computing ``T[i, a, b, :]`` reads only row ``a`` and column ``b`` of
+its instance's table.  The grid spec is a :class:`pltpu.PrefetchScalarGridSpec`
+with ``d`` as the scalar-prefetch operand, so the BlockSpec index maps can
+resolve ``b = a + d`` *before* the body runs and DMA just the
+``[1, 1, R, S]`` row slice and ``[1, R, 1, S]`` column slice into VMEM —
+``2 * R * S * 4`` bytes per program instead of the whole ``[R, R, S]``
+instance table (``R`` times that).  This is what lets compiled-TPU runs at
+IN2P3 scale (R ~ several hundred, S ~ a few thousand) fit the 16 MB VMEM
+budget.
+
+``dimension_semantics`` audit of the ``(B, R)`` grid: the batch dimension
+indexes independent instances and the window-start dimension indexes cells of
+*one* anti-diagonal, which only read diagonals ``< d`` (frozen in this launch)
+and write disjoint output blocks — no program on the grid observes another's
+write, so both dimensions are declared ``"parallel"`` (Mosaic may split them
+across TensorCores).  Compiled mode only; the interpreter ignores scheduling
+hints.
 
 The kernel additionally emits a per-cell **argmin plane** ``C[a, b, s]``
-(-1 = "skip b", else the winning detour start ``c``), matching the exact
-Python DP's tie-breaking (skip wins ties; the smallest minimising ``c`` wins
-among detours), so a host-side traceback (:mod:`.ops`) can reconstruct the
-optimal detour list — the device path is a complete solver, not a value oracle.
+(-1 = "skip b", else the winning detour start ``c``) so a host-side traceback
+(:mod:`.ops`) can reconstruct the optimal detour list — the device path is a
+complete solver, not a value oracle.
 
 Batching: the grid is ``(B, R)`` — several padded instances solve in one
 launch.  Padded files (zero width, zero multiplicity, at the rightmost
 coordinate) provably never win a detour choice, so padding changes neither the
-root value nor the traceback.
+root value nor the traceback; all-phantom padding *rows* (batch-dimension
+padding, see ``ops.prepare_batch``) are simply never traced back.
 
 Layout notes
 ------------
-* ``T``/``C`` are dense ``[B, R, R, S]`` tables.  Each program reads row ``a``
-  and column ``b = a + d`` of its instance's table (``2 * R * S * 4`` bytes of
-  live values; R ~ a few hundred requested files and S ~ a few thousand skip
-  counts fit in 16 MB VMEM for real tape workloads).  Compiled-TPU runs at
-  scale still need a row/column BlockSpec DMA split so only those slices are
-  resident — tracked in ROADMAP as an open item; interpret mode (CPU) is the
-  validated path today.
 * ``S`` should be padded to a multiple of 128 (lane width).
+* ``cand_tile`` is the candidate-chunk height (sublane axis); 128 by default
+  so instances up to R = 129 take the single-tile fallback, while large
+  instances stream the band in 128-row tiles.
 * ``dtype`` is ``float32`` (exact for values < 2**24, the oracle-comparison
   path) or ``int32`` (exact for values < 2**31, the solver path).
 * The ``skip`` term needs the shifted gather ``row[s + x_b]``; ``x_b`` is a
@@ -55,13 +88,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["wavefront_kernel", "ltsp_dp_wavefront", "ltsp_dp_tables"]
 
+#: default candidate-chunk height (sublane rows per banded-scan step).
+DEFAULT_CAND_TILE = 128
+
 
 def wavefront_kernel(
-    # scalar inputs
+    # scalar-prefetch inputs
     d_ref,  # [1] int32 (SMEM) — current anti-diagonal
-    u_ref,  # [1] dtype (SMEM) — U-turn penalty of this instance
     # tensor inputs
-    t_ref,  # [1, R, R, S] — this instance's table, diagonals < d filled
+    u_ref,  # [1] dtype (SMEM) — U-turn penalty of this instance
+    row_ref,  # [1, 1, R, S] — T[i, a, :, :] (row slice of this instance)
+    col_ref,  # [1, R, 1, S] — T[i, :, b, :] (column slice, b resolved by the
+    #           index map from the prefetched d)
     left_ref,  # [1, R] dtype
     right_ref,  # [1, R] dtype
     x_ref,  # [1, R] int32
@@ -72,14 +110,15 @@ def wavefront_kernel(
     *,
     S: int,
     span: int | None,
+    cand_tile: int,
 ):
     a = pl.program_id(1)
-    R = t_ref.shape[1]
+    R = row_ref.shape[2]
     d = d_ref[0]
     # programs with a + d >= R are out of this diagonal: compute at a clamped
     # b (cheap, garbage) and let the host-side scatter drop the result.
     b = jnp.minimum(a + d, R - 1)
-    dtype = t_ref.dtype
+    dtype = row_ref.dtype
     big = jnp.asarray(
         jnp.iinfo(jnp.int32).max // 2 if dtype == jnp.int32 else jnp.inf, dtype
     )
@@ -90,7 +129,6 @@ def wavefront_kernel(
     rights = right_ref[0]  # [R]
     xs = x_ref[0]  # [R]
     nls = nl_ref[0]  # [R]
-    tbl = t_ref[0]  # [R, R, S]
 
     def at(vec, i):
         return jax.lax.dynamic_index_in_dim(vec, i, keepdims=False)
@@ -98,8 +136,8 @@ def wavefront_kernel(
     nl_a = at(nls, a)
     svec = jax.lax.broadcasted_iota(dtype, (1, S), 1)
 
-    row = jax.lax.dynamic_index_in_dim(tbl, a, 0, keepdims=False)  # [R, S]
-    col = jax.lax.dynamic_index_in_dim(tbl, b, 1, keepdims=False)  # [R, S]
+    row = row_ref[0, 0]  # [R, S]  — T[a, :, :]
+    col = col_ref[0, :, 0, :]  # [R, S]  — T[:, b, :]
 
     # ---------------- skip(a, b, s) ----------------------------------------
     row_bm1 = jax.lax.dynamic_slice(row, (b - 1, 0), (1, S))  # [1, S]
@@ -115,30 +153,64 @@ def wavefront_kernel(
         + two * (l_b - r_bm1) * x_b.astype(dtype)
     )
 
-    # ---------------- min over detour_c, masked to a < c <= b --------------
-    # Candidates are materialised for every c in 1..R-1 (static shape) and
-    # invalid ones masked to +inf; T rows outside the wavefront are zeros, so
-    # masked candidates stay finite/representable before the mask applies.
-    t_left = row[: R - 1, :]  # T[a, c-1, s] for c = 1..R-1
-    t_right = col[1:, :]  # T[c, b, s]
-    r_cm1 = rights[: R - 1]  # r(c-1)
-    nl_c = nls[1:]
-    svec_d = jax.lax.broadcasted_iota(dtype, (R - 1, S), 1)
-    cand = (
-        t_left
-        + t_right
-        + two * (r_b - r_cm1)[:, None] * (svec_d + nl_a)
-        + two * u * (svec_d + nl_c[:, None])
-    )
-    cvec = jax.lax.broadcasted_iota(jnp.int32, (R - 1, S), 0) + 1
-    mask = (cvec > a) & (cvec <= b)
+    # ---------------- min over detour_c, banded to a < c <= b --------------
+    # Live candidates: c in (a, b], further clipped to c >= b - span under a
+    # LOGDP restriction.  T rows outside the wavefront are zeros, so computed
+    # candidates stay finite/representable before the mask applies.
+    c_min = a + 1
     if span is not None:  # LOGDP restriction: b - c <= span
-        mask = mask & (b - cvec <= span)
-    cand = jnp.where(mask, cand, big)
-    det = jnp.min(cand, axis=0, keepdims=True)  # [1, S]
-    # argmin returns the FIRST minimising index == the smallest c, matching
-    # the exact DP's ascending-c strict-improvement scan.
-    argc = jnp.argmin(cand, axis=0).astype(jnp.int32)[None, :] + 1
+        c_min = jnp.maximum(c_min, b - span)
+
+    def chunk_vals(c0, n_rows: int):
+        """Candidates ``c = c0 + j`` for ``j in [0, n_rows)`` (+mask tail)."""
+        t_left = jax.lax.dynamic_slice(row, (c0 - 1, 0), (n_rows, S))  # T[a,c-1,s]
+        t_right = jax.lax.dynamic_slice(col, (c0, 0), (n_rows, S))  # T[c,b,s]
+        r_cm1 = jax.lax.dynamic_slice(rights, (c0 - 1,), (n_rows,))
+        nl_c = jax.lax.dynamic_slice(nls, (c0,), (n_rows,))
+        svec_d = jax.lax.broadcasted_iota(dtype, (n_rows, S), 1)
+        cand = (
+            t_left
+            + t_right
+            + two * (r_b - r_cm1)[:, None] * (svec_d + nl_a)
+            + two * u * (svec_d + nl_c[:, None])
+        )
+        cvec = jax.lax.broadcasted_iota(jnp.int32, (n_rows, 1), 0) + c0
+        cand = jnp.where((cvec >= c_min) & (cvec <= b), cand, big)
+        return cand
+
+    if R - 1 <= cand_tile:
+        # static fallback: the whole candidate range c in 1..R-1 is one tile.
+        cand = chunk_vals(jnp.int32(1), R - 1)
+        det = jnp.min(cand, axis=0, keepdims=True)  # [1, S]
+        # argmin returns the FIRST minimising index == the smallest c,
+        # matching the exact DP's ascending-c strict-improvement scan.
+        argc = jnp.argmin(cand, axis=0).astype(jnp.int32)[None, :] + 1
+    else:
+        # banded scan: fori_loop over cand_tile-row chunks of the live band,
+        # folding a running (min, argmin).  Chunks ascend in c and the fold
+        # improves strictly, so ties keep the smallest c (same tie-breaking
+        # as the static tile's first-min argmin).
+        n_live = b - c_min + 1  # may be <= 0 on clamped programs: 0 chunks
+        n_chunks = jnp.maximum((n_live + cand_tile - 1) // cand_tile, 0)
+
+        def body(k, carry):
+            run_min, run_arg = carry
+            # chunk base, clamped so the slice stays in bounds; the overlap a
+            # clamp introduces re-evaluates identical candidates, which the
+            # strict fold ignores.  c0 >= 1 because cand_tile <= R - 1 here.
+            c0 = jnp.clip(c_min + k * cand_tile, 1, R - cand_tile)
+            cand = chunk_vals(c0, cand_tile)
+            cmin = jnp.min(cand, axis=0, keepdims=True)  # [1, S]
+            carg = jnp.argmin(cand, axis=0).astype(jnp.int32)[None, :] + c0
+            improve = cmin < run_min
+            return jnp.minimum(run_min, cmin), jnp.where(improve, carg, run_arg)
+
+        det, argc = jax.lax.fori_loop(
+            0,
+            n_chunks,
+            body,
+            (jnp.full((1, S), big, dtype), jnp.zeros((1, S), jnp.int32)),
+        )
 
     val_ref[0] = jnp.minimum(skip, det)
     cho_ref[0] = jnp.where(skip <= det, jnp.int32(-1), argc)
@@ -156,35 +228,61 @@ def ltsp_dp_wavefront(
     S: int,
     span: int | None,
     interpret: bool = True,
+    cand_tile: int = DEFAULT_CAND_TILE,
 ) -> tuple[jax.Array, jax.Array]:
-    """One anti-diagonal for every instance: ``([B, R, S], [B, R, S])``."""
+    """One anti-diagonal for every instance: ``([B, R, S], [B, R, S])``.
+
+    ``d`` rides as a scalar-prefetch operand so the column BlockSpec can DMA
+    exactly the ``T[i, :, a + d, :]`` slice each program reads; the table is
+    passed twice (row view + column view) and never mapped whole into VMEM.
+    """
     B, R = left.shape
-    kern = functools.partial(wavefront_kernel, S=S, span=span)
-    return pl.pallas_call(
-        kern,
+    kern = functools.partial(wavefront_kernel, S=S, span=span, cand_tile=cand_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # d — consumed by the column index map below
         grid=(B, R),
         in_specs=[
-            pl.BlockSpec((1,), lambda i, a: (0,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1,), lambda i, a: (i,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, R, R, S), lambda i, a: (i, 0, 0, 0)),
-            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
-            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
-            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
-            pl.BlockSpec((1, R), lambda i, a: (i, 0)),
+            pl.BlockSpec((1,), lambda i, a, d: (i,), memory_space=pltpu.SMEM),
+            # row slice T[i, a, :, :]
+            pl.BlockSpec((1, 1, R, S), lambda i, a, d: (i, a, 0, 0)),
+            # column slice T[i, :, b, :] with b = min(a + d, R - 1)
+            pl.BlockSpec(
+                (1, R, 1, S),
+                lambda i, a, d: (i, 0, jnp.minimum(a + d[0], R - 1), 0),
+            ),
+            pl.BlockSpec((1, R), lambda i, a, d: (i, 0)),
+            pl.BlockSpec((1, R), lambda i, a, d: (i, 0)),
+            pl.BlockSpec((1, R), lambda i, a, d: (i, 0)),
+            pl.BlockSpec((1, R), lambda i, a, d: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, S), lambda i, a: (i, a, 0)),
-            pl.BlockSpec((1, 1, S), lambda i, a: (i, a, 0)),
+            pl.BlockSpec((1, 1, S), lambda i, a, d: (i, a, 0)),
+            pl.BlockSpec((1, 1, S), lambda i, a, d: (i, a, 0)),
         ],
+    )
+    kwargs = {}
+    if not interpret:
+        # dimension_semantics audit (see module docstring): both grid dims are
+        # data-parallel within one diagonal launch — disjoint writes, reads
+        # only of diagonals < d.
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, R, S), T.dtype),
             jax.ShapeDtypeStruct((B, R, S), jnp.int32),
         ],
         interpret=interpret,
-    )(jnp.asarray([d], jnp.int32).reshape(1), u, T, left, right, x, nl)
+        **kwargs,
+    )(jnp.asarray([d], jnp.int32).reshape(1), u, T, T, left, right, x, nl)
 
 
-@functools.partial(jax.jit, static_argnames=("S", "span", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("S", "span", "interpret", "cand_tile")
+)
 def ltsp_dp_tables(
     left: jax.Array,  # [B, R]
     right: jax.Array,  # [B, R]
@@ -195,6 +293,7 @@ def ltsp_dp_tables(
     S: int,
     span: int | None = None,
     interpret: bool = True,
+    cand_tile: int = DEFAULT_CAND_TILE,
 ) -> tuple[jax.Array, jax.Array]:
     """Full batched DP tables ``(T, C)`` in a single jitted wavefront.
 
@@ -222,7 +321,8 @@ def ltsp_dp_tables(
     def body(d, carry):
         T, C = carry
         vals, chos = ltsp_dp_wavefront(
-            T, left, right, x, nl, u, d, S=S, span=span, interpret=interpret
+            T, left, right, x, nl, u, d,
+            S=S, span=span, interpret=interpret, cand_tile=cand_tile,
         )
         T = T.at[:, rr, rr + d, :].set(vals, mode="drop")
         C = C.at[:, rr, rr + d, :].set(chos, mode="drop")

@@ -1,5 +1,5 @@
-"""Host-side drivers for the Pallas LTSP wavefront: adapters, traceback,
-single- and batched-instance solving.
+"""Host-side drivers for the Pallas LTSP wavefront: adapters, rescaling,
+traceback, and a size-bucketed batch planner.
 
 The device path is a **complete solver**: :func:`ltsp_dp_tables` (one jitted
 wavefront, see :mod:`.ltsp_dp`) returns the value table *and* per-cell argmin
@@ -9,18 +9,46 @@ reconstruct the optimal detour list, exactly like the Python DP's traceback.
 Two numeric modes:
 
 * ``int32`` (solver default) — bit-exact while every table value fits in
-  int32; :func:`_check_int32_safe` guards a conservative magnitude bound and
-  raises with a rescaling hint otherwise.
+  int32.  Before the :func:`_check_int32_safe` magnitude guard runs,
+  :func:`rescale_instance` shifts each instance to its leftmost requested
+  byte and divides all coordinates (and the U-turn penalty) by their gcd —
+  every DP term is a coordinate *difference*, so the whole table scales by
+  exactly ``1/g`` and the argmin structure (ties included) is untouched.
+  Real cartridge layouts share the tape's block granularity, so byte
+  coordinates far beyond int32 rescale into range; the guard raises with the
+  old rescaling hint only when the gcd-reduced instance still overflows.
 * ``float32`` (oracle-comparison default, exact for values < 2**24) — used by
   the seed-compatible :func:`ltsp_dp_table`/:func:`ltsp_opt` wrappers that the
   kernel tests diff against :mod:`.ref`.
 
-Batching (:func:`ltsp_solve_batch`): instances are right-padded with
-zero-width, zero-multiplicity phantom files at the rightmost coordinate.  A
-phantom file's ``skip`` transition is free and never loses to a detour
-(detours only add nonnegative terms there, and skip wins ties), so neither
-the root value nor the traceback changes — several tapes' instances solve in
-one device launch.
+Batching and the bucket planner
+-------------------------------
+Instances are right-padded with zero-width, zero-multiplicity phantom files at
+the rightmost coordinate.  A phantom file's ``skip`` transition is free and
+never loses to a detour (detours only add nonnegative terms there, and skip
+wins ties), so neither the root value nor the traceback changes — several
+tapes' instances solve in one device launch.
+
+A single launch must share one ``(B, R, S)`` shape, so the seed driver padded
+*every* instance to the global ``(R_max, S_max)`` — maximally wasteful on the
+heterogeneous cartridge batches the IN2P3 logs actually produce.
+:func:`plan_buckets` instead groups instances into a small set of shape
+buckets and :func:`ltsp_solve_batch` launches one tight wavefront per bucket.
+
+Bucket-rounding policy (applies to every padded dimension):
+
+* ``R`` (requested files) rounds up to the next power of two;
+* ``S`` (skip counts, ``n + 1``) rounds up to the next power-of-two multiple
+  of 128 (the TPU lane width): 128, 256, 512, …;
+* ``B`` (instances per launch) rounds up to the next power of two, padding
+  with all-phantom rows that are never traced back.
+
+Powers-of-two rounding bounds the set of distinct launch shapes
+logarithmically, so repeated heterogeneous batches re-hit the ``jit`` cache
+instead of retracing the wavefront for every novel ``(B, R, S)``; within a
+bucket, padding waste is at most 2x per dimension instead of unbounded.
+``ltsp_solve_batch([])`` returns ``[]`` and single-instance batches skip the
+planner entirely (one tight launch, no grouping pass).
 """
 
 from __future__ import annotations
@@ -31,11 +59,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.instance import Instance, virtual_lb
-from .ltsp_dp import ltsp_dp_tables
+from .ltsp_dp import DEFAULT_CAND_TILE, ltsp_dp_tables
 
 __all__ = [
     "prepare_arrays",
     "prepare_batch",
+    "plan_buckets",
+    "bucket_shape",
+    "rescale_instance",
     "traceback_detours",
     "ltsp_dp_table",
     "ltsp_opt",
@@ -47,6 +78,28 @@ __all__ = [
 
 def _pad_s(S: int) -> int:
     return int(math.ceil(S / 128) * 128)
+
+
+def _pow2(v: int) -> int:
+    """Smallest power of two >= v (v >= 1)."""
+    return 1 << max(0, int(v) - 1).bit_length()
+
+
+def bucket_shape(inst: Instance) -> tuple[int, int]:
+    """``(R_pad, S_pad)`` shape bucket for one instance.
+
+    See the module docstring for the rounding policy: ``R`` to the next power
+    of two, ``S = n + 1`` to the next power-of-two multiple of 128.
+    """
+    return _pow2(inst.n_req), 128 * _pow2(-(-(inst.n + 1) // 128))
+
+
+def plan_buckets(instances: list[Instance]) -> dict[tuple[int, int], list[int]]:
+    """Group instance indices by shape bucket (insertion-ordered)."""
+    buckets: dict[tuple[int, int], list[int]] = {}
+    for i, inst in enumerate(instances):
+        buckets.setdefault(bucket_shape(inst), []).append(i)
+    return buckets
 
 
 def prepare_arrays(inst: Instance, S: int | None = None, dtype=jnp.float32):
@@ -64,16 +117,31 @@ def prepare_arrays(inst: Instance, S: int | None = None, dtype=jnp.float32):
     return left, right, x, nl, S
 
 
-def prepare_batch(instances: list[Instance], dtype=jnp.int32):
-    """Pack instances into padded ``[B, R_max]`` arrays + shared ``S``.
+def prepare_batch(
+    instances: list[Instance],
+    dtype=jnp.int32,
+    R_pad: int | None = None,
+    S_pad: int | None = None,
+    B_pad: int | None = None,
+):
+    """Pack instances into padded ``[B, R]`` arrays + shared ``S``.
 
-    Padding appends phantom files (zero width, zero multiplicity) at each
-    instance's rightmost coordinate; see the module docstring for why this is
-    result-preserving.
+    ``R_pad``/``S_pad``/``B_pad`` override the default tight padding (the
+    batch maxima) — the bucket planner passes its power-of-two bucket shape so
+    repeated launches share compiled programs.  File padding appends phantom
+    files (zero width, zero multiplicity) at each instance's rightmost
+    coordinate; batch padding appends all-phantom rows; see the module
+    docstring for why both are result-preserving.
     """
-    B = len(instances)
-    R = max(i.n_req for i in instances)
-    S = _pad_s(max(i.n for i in instances) + 1)
+    if not instances:
+        raise ValueError("prepare_batch needs at least one instance")
+    B = len(instances) if B_pad is None else max(B_pad, len(instances))
+    R = max(i.n_req for i in instances) if R_pad is None else R_pad
+    S = _pad_s(max(i.n for i in instances) + 1 if S_pad is None else S_pad)
+    if R < max(i.n_req for i in instances):
+        raise ValueError("R_pad smaller than the widest instance")
+    if S_pad is not None and S_pad < max(i.n for i in instances) + 1:
+        raise ValueError("S_pad smaller than the largest request count + 1")
     left = np.zeros((B, R), dtype=np.int64)
     right = np.zeros((B, R), dtype=np.int64)
     x = np.zeros((B, R), dtype=np.int64)
@@ -99,6 +167,42 @@ def prepare_batch(instances: list[Instance], dtype=jnp.int32):
     )
 
 
+def rescale_instance(inst: Instance) -> tuple[Instance, int]:
+    """Shift + gcd-reduce an instance for the int32 device table.
+
+    Returns ``(scaled, g)`` with coordinates ``(coord - left[0]) // g`` where
+    ``g = gcd`` of all shifted coordinates and the U-turn penalty.  Every DP
+    term (base, skip, detour) is a linear combination of coordinate
+    *differences* and ``U`` with scale-free integer coefficients, so the full
+    table of ``scaled`` is exactly ``1/g`` times the original's and its argmin
+    planes — the traceback — are identical.  Reconstruct original table values
+    as ``g * T_scaled``.
+
+    The scaled instance's ``m`` is set to its rightmost coordinate (the head
+    start position never enters the device table — only *VirtualLB*, which the
+    host computes from the original instance), which tightens the
+    :func:`_check_int32_safe` bound to the requested span instead of the
+    absolute tape length.
+    """
+    base = int(inst.left[0])
+    g = 0
+    for v in inst.left.tolist():
+        g = math.gcd(g, v - base)
+    for v in inst.right.tolist():
+        g = math.gcd(g, v - base)
+    g = math.gcd(g, inst.u_turn) or 1
+    left = (inst.left - base) // g
+    right = (inst.right - base) // g
+    scaled = Instance(
+        left=left,
+        right=right,
+        mult=inst.mult,
+        m=int(right[-1]),
+        u_turn=inst.u_turn // g,
+    )
+    return scaled, g
+
+
 def _check_int32_safe(instances: list[Instance]) -> None:
     """Conservative guard: every table value must stay well inside int32.
 
@@ -107,16 +211,17 @@ def _check_int32_safe(instances: list[Instance]) -> None:
     and at most R detours each add ``2 U * 2n`` — so every cell is below
     ``2n (3m + R U)`` and every candidate sum below
     ``2n (7m + (2R + 1) U)``; we require ``2n (8m + (2R + 2) U) < 2**31``.
-    Exact tape byte-coordinates overflow this; rescale coordinates (they
-    share the tape's block granularity) or use the ``python`` backend.
+    Callers pass :func:`rescale_instance` output, so ``m`` here is already the
+    gcd-reduced *requested span*; raising means the instance genuinely
+    overflows even at tape-block granularity.
     """
     for inst in instances:
         bound = 2 * inst.n * (8 * inst.m + (2 * inst.n_req + 2) * inst.u_turn)
         if bound >= 2**31:
             raise ValueError(
-                f"instance too large for the int32 device DP "
-                f"(m={inst.m}, n={inst.n}, R={inst.n_req}): rescale coordinates "
-                f"to a coarser grain or use backend='python'"
+                f"instance too large for the int32 device DP even after gcd "
+                f"rescaling (m={inst.m}, n={inst.n}, R={inst.n_req}): rescale "
+                f"coordinates to a coarser grain or use backend='python'"
             )
 
 
@@ -150,39 +255,94 @@ def traceback_detours(choice: np.ndarray, mult: np.ndarray) -> list[tuple[int, i
 # solver entry points (int32, exact)
 # ---------------------------------------------------------------------------
 def ltsp_solve_instance(
-    inst: Instance, span: int | None = None, interpret: bool = True
+    inst: Instance,
+    span: int | None = None,
+    interpret: bool = True,
+    cand_tile: int = DEFAULT_CAND_TILE,
 ) -> tuple[int, list[tuple[int, int]]]:
     """Device-solved ``(opt_cost, detours)`` for one instance (exact int32)."""
-    return ltsp_solve_batch([inst], span=span, interpret=interpret)[0]
+    return ltsp_solve_batch([inst], span=span, interpret=interpret,
+                            cand_tile=cand_tile)[0]
 
 
-def ltsp_solve_batch(
-    instances: list[Instance], span: int | None = None, interpret: bool = True
+def _solve_packed(
+    originals: list[Instance],
+    scaled: list[Instance],
+    gs: list[int],
+    R_pad: int | None,
+    S_pad: int | None,
+    B_pad: int | None,
+    span: int | None,
+    interpret: bool,
+    cand_tile: int,
 ) -> list[tuple[int, list[tuple[int, int]]]]:
-    """Solve several instances in one padded device launch.
-
-    Returns one ``(opt_cost, detours)`` per instance, in order.  ``opt_cost``
-    is ``VirtualLB + T[0, R_pad-1, 0]`` taken from the int32 device table —
-    exact under the :func:`_check_int32_safe` bound; detour indices refer to
-    each instance's own (unpadded) requested files.
-    """
-    if not instances:
-        return []
-    _check_int32_safe(instances)
-    left, right, x, nl, u, S = prepare_batch(instances, dtype=jnp.int32)
-    T, C = ltsp_dp_tables(left, right, x, nl, u, S=S, span=span, interpret=interpret)
-    R_pad = left.shape[1]
+    """One padded device launch; results refer to the *original* instances."""
+    left, right, x, nl, u, S = prepare_batch(
+        scaled, dtype=jnp.int32, R_pad=R_pad, S_pad=S_pad, B_pad=B_pad
+    )
+    T, C = ltsp_dp_tables(
+        left, right, x, nl, u, S=S, span=span, interpret=interpret,
+        cand_tile=cand_tile,
+    )
+    R = left.shape[1]
     C_host = np.asarray(C)
-    T_root = np.asarray(T[:, 0, R_pad - 1, 0])
+    T_root = np.asarray(T[:, 0, R - 1, 0])
     out = []
-    for i, inst in enumerate(instances):
-        dets = traceback_detours(C_host[i], np.asarray(x[i]))
+    x_host = np.asarray(x)
+    for i, (inst, g) in enumerate(zip(originals, gs)):
+        dets = traceback_detours(C_host[i], x_host[i])
         # padding only ever skips, so emitted detours stay within the real
         # files; guard the invariant anyway.
         assert all(b < inst.n_req for _, b in dets)
-        cost = int(T_root[i]) + virtual_lb(inst)
+        # the scaled table is exactly 1/g of the original's (see
+        # rescale_instance); VirtualLB comes from the original coordinates.
+        cost = g * int(T_root[i]) + virtual_lb(inst)
         out.append((cost, dets))
     return out
+
+
+def ltsp_solve_batch(
+    instances: list[Instance],
+    span: int | None = None,
+    interpret: bool = True,
+    bucketed: bool = True,
+    cand_tile: int = DEFAULT_CAND_TILE,
+) -> list[tuple[int, list[tuple[int, int]]]]:
+    """Solve several instances in a few size-bucketed device launches.
+
+    Returns one ``(opt_cost, detours)`` per instance, in order.  ``opt_cost``
+    is ``g * T[0, R_pad-1, 0] + VirtualLB`` taken from the gcd-rescaled int32
+    device table — exact under the :func:`_check_int32_safe` bound; detour
+    indices refer to each instance's own (unpadded) requested files.
+
+    ``bucketed=True`` (default) launches one wavefront per
+    :func:`plan_buckets` shape bucket — tight shapes for heterogeneous
+    batches, jit-cache-friendly powers-of-two padding.  ``bucketed=False``
+    reproduces the seed behaviour (every instance padded to the global batch
+    maxima, one launch) and exists for A/B benchmarking.
+    """
+    if not instances:
+        return []
+    pairs = [rescale_instance(inst) for inst in instances]
+    scaled = [p[0] for p in pairs]
+    gs = [p[1] for p in pairs]
+    _check_int32_safe(scaled)
+    solve = lambda idxs, R_pad, S_pad, B_pad: _solve_packed(
+        [instances[i] for i in idxs],
+        [scaled[i] for i in idxs],
+        [gs[i] for i in idxs],
+        R_pad, S_pad, B_pad, span, interpret, cand_tile,
+    )
+    if not bucketed:  # seed behaviour: one launch padded to the batch maxima
+        return solve(list(range(len(instances))), None, None, None)
+    if len(instances) == 1:  # fast path: no planner, one tight launch
+        R_pad, S_pad = bucket_shape(scaled[0])
+        return solve([0], R_pad, S_pad, None)
+    results: list[tuple[int, list[tuple[int, int]]] | None] = [None] * len(instances)
+    for (R_pad, S_pad), idxs in plan_buckets(scaled).items():
+        for idx, res in zip(idxs, solve(idxs, R_pad, S_pad, _pow2(len(idxs)))):
+            results[idx] = res
+    return results  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------

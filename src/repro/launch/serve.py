@@ -32,11 +32,21 @@ from .train import _auto_mesh
 
 
 def _restore_from_tape(params, policy: str, backend: str) -> None:
-    """Archive ``params`` to a simulated tape library and plan the restore."""
+    """Archive ``params`` to a simulated tape library and plan the restore.
+
+    The library owns a :class:`~repro.core.SolveCache`, so the re-plan a
+    recovering serving fleet issues for the *same* archive (every cold start
+    requests the identical shard multiset per cartridge) never re-solves a
+    tape — the second pass below is all cache hits and its time is the pure
+    memo-lookup cost.
+    """
+    from ..core.solver import SolveCache
     from ..distributed.checkpoint import archive_to_tape, plan_restore
     from ..storage.tape import TapeLibrary
 
-    lib = TapeLibrary(capacity_per_tape=4 * 10**6, u_turn=20_000)
+    lib = TapeLibrary(
+        capacity_per_tape=4 * 10**6, u_turn=20_000, cache=SolveCache()
+    )
     shards = archive_to_tape(lib, "serve-warmup", params, bytes_per_elem=1)
     consumers = {s: 2 for s in shards}  # every host group needs every shard
     t0 = time.time()
@@ -48,15 +58,22 @@ def _restore_from_tape(params, policy: str, backend: str) -> None:
         print(f"tape restore [{policy}/{backend}] unavailable: {e}\n"
               f" -> falling back to backend='python'")
         backend = "python"
+        lib.cache.clear()  # drop the failed attempt's miss counts
         plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
     dt = time.time() - t0
+    # warm re-plan: what the next cold start in the fleet pays
+    t0 = time.time()
+    plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+    dt_warm = time.time() - t0
     n_req = sum(consumers.values())
     mean = sum(p.total_cost for p in plans) / n_req
     last = max(max(p.service_time.values()) for p in plans)
+    stats = lib.cache.stats()
     print(
         f"tape restore [{policy}/{backend}]: {len(shards)} shards on "
         f"{len(lib.tapes)} tape(s), mean arrival {mean:.3g}, last {last:.3g} "
-        f"(planned in {dt * 1e3:.0f} ms)"
+        f"(planned in {dt * 1e3:.0f} ms; re-plan {dt_warm * 1e3:.0f} ms, "
+        f"cache {stats['hits']} hits / {stats['misses']} misses)"
     )
 
 

@@ -19,6 +19,12 @@ padded device launch (one wavefront solves the whole robotic-library batch)
 and reconstructs each cartridge's detour schedule from the kernel's argmin
 planes.
 
+Serving loops re-plan the same cartridges constantly (the same checkpoint
+restore, the same hot corpus slice), so :class:`TapeLibrary` optionally owns a
+:class:`repro.core.SolveCache`: pass ``cache=SolveCache()`` (or per call) and
+repeated identical request multisets skip the solver entirely — only novel
+tapes reach a backend, in one bucketed device launch.
+
 Everything is integer-exact and simulation-backed: ``read_batch`` returns the
 service time of every request as produced by the trajectory simulator in
 :mod:`repro.core.schedule`, and every plan's ``total_cost`` equals the
@@ -33,7 +39,7 @@ import numpy as np
 
 from ..core import make_instance, service_times, solve, solve_batch, virtual_lb
 from ..core.instance import Instance
-from ..core.solver import DEFAULT_BACKEND, SolveResult
+from ..core.solver import DEFAULT_BACKEND, SolveCache, SolveResult
 
 __all__ = ["TapeFile", "Tape", "TapeLibrary", "ReadPlan", "schedule_reads"]
 
@@ -128,21 +134,29 @@ def schedule_reads(
     requests: dict[str, int],
     policy: str = "simpledp",
     backend: str = DEFAULT_BACKEND,
+    cache: SolveCache | None = None,
 ) -> ReadPlan:
     """Order a batch of reads on one tape with an LTSP policy/backend."""
     inst, names = tape.instance(requests)
-    res = solve(inst, policy=policy, backend=backend)
+    res = solve(inst, policy=policy, backend=backend, cache=cache)
     return _plan_from_result(tape, inst, names, res)
 
 
 class TapeLibrary:
     """A robotic library: many cartridges, simple fill placement."""
 
-    def __init__(self, capacity_per_tape: int, u_turn: int = DEFAULT_U_TURN):
+    def __init__(
+        self,
+        capacity_per_tape: int,
+        u_turn: int = DEFAULT_U_TURN,
+        cache: SolveCache | None = None,
+    ):
         self.capacity = capacity_per_tape
         self.u_turn = u_turn
         self.tapes: list[Tape] = []
         self.location: dict[str, str] = {}  # file -> tape_id
+        #: memo of solved instances shared by every schedule() call (opt-in).
+        self.cache = cache
 
     def _tape_with_room(self, size: int) -> Tape:
         for t in self.tapes:
@@ -167,12 +181,15 @@ class TapeLibrary:
         requests: dict[str, int],
         policy: str = "simpledp",
         backend: str = DEFAULT_BACKEND,
+        cache: SolveCache | None = None,
     ) -> list[ReadPlan]:
         """Split a request batch per tape and schedule each (one drive per
         cartridge; cartridges are independent LTSP instances).
 
-        Device backends solve every cartridge's instance in one padded
-        multi-instance launch (:func:`repro.core.solve_batch`).
+        Device backends solve every cartridge's instance in a few
+        size-bucketed launches (:func:`repro.core.solve_batch`); with a memo
+        cache (``cache`` argument or the library's own) previously solved
+        request multisets never reach a backend at all.
         """
         per_tape: dict[str, dict[str, int]] = {}
         for name, k in requests.items():
@@ -182,7 +199,12 @@ class TapeLibrary:
         for tid, reqs in sorted(per_tape.items()):
             inst, names = tapes[tid].instance(reqs)
             triples.append((tapes[tid], inst, names))
-        results = solve_batch([inst for _, inst, _ in triples], policy, backend)
+        results = solve_batch(
+            [inst for _, inst, _ in triples],
+            policy,
+            backend,
+            cache=cache if cache is not None else self.cache,
+        )
         return [
             _plan_from_result(tape, inst, names, res)
             for (tape, inst, names), res in zip(triples, results)

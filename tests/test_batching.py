@@ -1,0 +1,244 @@
+"""Size-bucketed batch planner, coordinate rescaling, and the solve memo
+cache: bucketed ``solve_batch`` must be bit-identical to per-instance solving
+(cost *and* detours), empty/single batches take their fast paths, gcd
+rescaling widens the int32 device envelope, and cache hits never alias."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SolveCache,
+    dp_schedule,
+    evaluate_detours,
+    make_instance,
+    solve,
+    solve_batch,
+)
+from repro.kernels.ltsp_dp.ops import (
+    bucket_shape,
+    ltsp_solve_batch,
+    ltsp_solve_instance,
+    plan_buckets,
+    prepare_batch,
+    rescale_instance,
+)
+
+
+def _hetero_instance(rng):
+    """Mixed-size instance: n_req from 2..20, multiplicities up to 8."""
+    R = int(rng.integers(2, 21))
+    sizes = rng.integers(1, 50, size=R)
+    gaps = rng.integers(0, 40, size=R + 1)
+    left, pos = [], int(gaps[0])
+    for i in range(R):
+        left.append(pos)
+        pos += int(sizes[i] + gaps[i + 1])
+    mult = rng.integers(1, 8, size=R)
+    u = int(rng.integers(0, 40)) if rng.random() < 0.7 else 0
+    return make_instance(left, sizes, mult, m=pos, u_turn=u)
+
+
+# ---------------------------------------------------------------------------
+# bucketed batching: bit-identical to per-instance solving
+# ---------------------------------------------------------------------------
+def test_bucketed_batch_bit_identical_to_per_instance_50_instances():
+    """>= 50 random heterogeneous instances in one bucketed batch call:
+    (cost, detours) must be *bit-identical* to solving each instance alone on
+    the same backend, and every cost must equal the exact python optimum."""
+    rng = np.random.default_rng(20260801)
+    insts = [_hetero_instance(rng) for _ in range(52)]
+    assert len({i.n_req for i in insts}) > 5  # genuinely heterogeneous
+    assert sum(i.u_turn > 0 for i in insts) >= 10
+
+    batched = ltsp_solve_batch(insts)
+    assert len(plan_buckets([rescale_instance(i)[0] for i in insts])) >= 2
+    for trial, (inst, (cost, dets)) in enumerate(zip(insts, batched)):
+        solo = ltsp_solve_instance(inst)
+        assert (cost, dets) == solo, trial
+        assert cost == dp_schedule(inst)[0], trial
+        assert evaluate_detours(inst, dets) == cost, trial
+
+
+def test_bucketed_matches_seed_style_padded_launch(rng):
+    insts = [_hetero_instance(rng) for _ in range(8)]
+    assert ltsp_solve_batch(insts, bucketed=True) == ltsp_solve_batch(
+        insts, bucketed=False
+    )
+
+
+def test_solver_engine_batch_goes_through_buckets(rng):
+    insts = [_hetero_instance(rng) for _ in range(7)]
+    dev = solve_batch(insts, policy="dp", backend="pallas-interpret")
+    for inst, res in zip(insts, dev):
+        assert res.cost == dp_schedule(inst)[0]
+        assert evaluate_detours(inst, res.detours) == res.cost
+
+
+# ---------------------------------------------------------------------------
+# fast paths: empty and single-instance batches
+# ---------------------------------------------------------------------------
+def test_empty_batch_returns_empty():
+    assert ltsp_solve_batch([]) == []
+    assert solve_batch([], policy="dp", backend="pallas-interpret") == []
+    assert solve_batch([], policy="gs") == []
+
+
+def test_prepare_batch_empty_raises_cleanly():
+    with pytest.raises(ValueError, match="at least one instance"):
+        prepare_batch([])
+
+
+def test_single_instance_batch_matches_solve(rng):
+    inst = _hetero_instance(rng)
+    [res] = solve_batch([inst], policy="dp", backend="pallas-interpret")
+    alone = solve(inst, policy="dp", backend="pallas-interpret")
+    assert (res.cost, res.detours) == (alone.cost, alone.detours)
+
+
+# ---------------------------------------------------------------------------
+# bucket rounding policy
+# ---------------------------------------------------------------------------
+def test_bucket_shape_rounding(rng):
+    for inst in (make_instance([0], [5], [1]), make_instance([0, 9], [5, 5], [1, 1])):
+        R_pad, S_pad = bucket_shape(inst)
+        assert R_pad >= inst.n_req and (R_pad & (R_pad - 1)) == 0
+        assert S_pad >= inst.n + 1 and S_pad % 128 == 0
+        assert ((S_pad // 128) & (S_pad // 128 - 1)) == 0
+    big = make_instance([0, 10], [5, 5], [100, 100])  # n = 200 -> S bucket 256
+    assert bucket_shape(big)[1] == 256
+
+
+# ---------------------------------------------------------------------------
+# coordinate rescaling: gcd + shift widens the int32 device envelope
+# ---------------------------------------------------------------------------
+def test_rescale_accepts_tape_block_granularity_coordinates():
+    """Byte-scale coordinates on a block grid used to trip the int32 guard;
+    gcd rescaling must now solve them exactly on the device backend."""
+    inst = make_instance([0, 2 * 10**9], [10**6, 10**6], [3, 3], u_turn=10**7)
+    scaled, g = rescale_instance(inst)
+    assert g == 10**6 and scaled.m == scaled.right[-1]
+    res = solve(inst, policy="dp", backend="pallas-interpret")
+    py = solve(inst, policy="dp", backend="python")
+    assert (res.cost, res.detours) == (py.cost, py.detours)
+    assert evaluate_detours(inst, res.detours) == res.cost
+
+
+def test_rescale_shift_handles_far_offset_layouts():
+    """Files far from tape start but close together: the shift (not the gcd)
+    does the work, because DP terms only ever see coordinate differences."""
+    base = 17 * 10**12 + 5  # odd offset, gcd with coords is 1 without shift
+    inst = make_instance([base, base + 40], [10, 20], [2, 3], u_turn=8)
+    scaled, g = rescale_instance(inst)
+    assert int(scaled.left[0]) == 0 and scaled.m <= 70
+    res = solve(inst, policy="dp", backend="pallas-interpret")
+    assert res.cost == dp_schedule(inst)[0]
+
+
+def test_guard_still_rejects_unrescalable_instances():
+    """Coprime huge coordinates cannot be gcd-reduced: the guard must raise
+    with the rescaling hint."""
+    bad = make_instance(
+        [0, 2 * 10**9 + 1], [10**6 + 1, 10**6 + 3], [3, 3], u_turn=10**7 + 1
+    )
+    with pytest.raises(ValueError, match="int32"):
+        solve(bad, policy="dp", backend="pallas-interpret")
+    # exact python backend still fine
+    py = solve(bad, policy="dp", backend="python")
+    assert py.cost == evaluate_detours(bad, py.detours)
+
+
+def test_rescale_is_exact_not_approximate(rng):
+    """Scaled-table reconstruction g * T_root must be exact on instances
+    whose gcd is > 1 by construction."""
+    for _ in range(5):
+        inst0 = _hetero_instance(rng)
+        k = int(rng.integers(2, 9))
+        inst = make_instance(
+            left=np.asarray(inst0.left) * k,
+            size=(np.asarray(inst0.right) - np.asarray(inst0.left)) * k,
+            mult=inst0.mult,
+            m=inst0.m * k,
+            u_turn=inst0.u_turn * k,
+        )
+        assert rescale_instance(inst)[1] % k == 0
+        assert solve(inst, policy="dp", backend="pallas-interpret").cost == (
+            dp_schedule(inst)[0]
+        )
+
+
+# ---------------------------------------------------------------------------
+# solve memo cache
+# ---------------------------------------------------------------------------
+def test_cache_hit_is_equal_and_counted(rng):
+    cache = SolveCache()
+    inst = _hetero_instance(rng)
+    r1 = solve(inst, policy="dp", backend="pallas-interpret", cache=cache)
+    r2 = solve(inst, policy="dp", backend="pallas-interpret", cache=cache)
+    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    assert (r1.cost, r1.detours) == (r2.cost, r2.detours)
+
+
+def test_cache_hit_never_aliases(rng):
+    """Mutating a returned schedule or the instance after a hit must not
+    corrupt the cached entry or serve a stale result."""
+    cache = SolveCache()
+    inst = _hetero_instance(rng)
+    first = solve(inst, policy="dp", cache=cache)
+    hit = solve(inst, policy="dp", cache=cache)
+    assert hit.detours is not first.detours
+    hit.detours.append((999, 999))  # vandalise the returned copy
+    clean = solve(inst, policy="dp", cache=cache)
+    assert clean.detours == first.detours
+
+    # mutate the instance in place: the content-derived key must miss, and
+    # the fresh solve must reflect the new instance, not the cached one
+    misses_before = cache.misses
+    inst.mult[0] += 3
+    fresh = solve(inst, policy="dp", cache=cache)
+    assert cache.misses == misses_before + 1
+    assert fresh.cost == dp_schedule(inst)[0]
+    assert fresh.cost == evaluate_detours(inst, fresh.detours)
+
+
+def test_cache_batch_only_solves_misses(rng):
+    cache = SolveCache()
+    insts = [_hetero_instance(rng) for _ in range(5)]
+    a = solve_batch(insts, policy="dp", cache=cache)
+    extra = _hetero_instance(rng)
+    b = solve_batch(insts + [extra], policy="dp", cache=cache)
+    assert cache.hits == 5 and cache.misses == 6
+    assert [r.cost for r in b[:5]] == [r.cost for r in a]
+    assert b[5].cost == dp_schedule(extra)[0]
+
+
+def test_cache_keys_separate_policies_and_backends(rng):
+    cache = SolveCache()
+    inst = _hetero_instance(rng)
+    dp = solve(inst, policy="dp", cache=cache)
+    sdp = solve(inst, policy="simpledp", cache=cache)
+    assert cache.misses == 2  # different policies never share entries
+    assert dp.cost <= sdp.cost
+    dev = solve(inst, policy="dp", backend="pallas-interpret", cache=cache)
+    assert cache.misses == 3 and dev.backend == "pallas-interpret"
+
+
+def test_cache_eviction_is_bounded(rng):
+    cache = SolveCache(maxsize=3)
+    for _ in range(6):
+        solve(_hetero_instance(rng), policy="gs", cache=cache)
+    assert len(cache) == 3 and cache.misses == 6
+
+
+def test_library_schedule_uses_cache(rng):
+    from repro.storage.tape import TapeLibrary
+
+    lib = TapeLibrary(capacity_per_tape=150_000, u_turn=700, cache=SolveCache())
+    for i in range(9):
+        lib.store(f"f{i}", 30_000)
+    reqs = {f"f{i}": 1 + i % 2 for i in range(9)}
+    p1 = lib.schedule(reqs, policy="dp")
+    assert lib.cache.hits == 0 and lib.cache.misses > 0
+    p2 = lib.schedule(reqs, policy="dp")
+    assert lib.cache.hits == lib.cache.misses  # full re-plan from the memo
+    assert [p.total_cost for p in p1] == [p.total_cost for p in p2]
+    assert [p.order for p in p1] == [p.order for p in p2]

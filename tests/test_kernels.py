@@ -45,6 +45,26 @@ def test_ref_opt_equals_exact_dp(rng):
     assert float(v) == float(dp_schedule(inst)[0])
 
 
+@pytest.mark.parametrize("cand_tile", [2, 4, 8])
+def test_kernel_banded_scan_matches_full_tile(rng, cand_tile):
+    """The chunked banded candidate scan (cand_tile < R - 1) must reproduce
+    the single-tile path bit-for-bit — values AND argmin planes (tie-breaks
+    included), with and without a span restriction."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ltsp_dp.ltsp_dp import ltsp_dp_tables
+
+    inst = _small_instance(rng, 11)
+    l, r, x, nl, S = prepare_arrays(inst)
+    u = jnp.asarray([float(inst.u_turn)], l.dtype)
+    args = (l[None], r[None], x[None], nl[None], u)
+    for span in (None, 3):
+        T_full, C_full = ltsp_dp_tables(*args, S=S, span=span)
+        T_band, C_band = ltsp_dp_tables(*args, S=S, span=span, cand_tile=cand_tile)
+        np.testing.assert_array_equal(np.asarray(T_band), np.asarray(T_full))
+        np.testing.assert_array_equal(np.asarray(C_band), np.asarray(C_full))
+
+
 def test_kernel_s_padding_invariance(rng):
     """Padding the skip-count axis must not change reachable cells."""
     inst = _small_instance(rng, 6)

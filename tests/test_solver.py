@@ -161,13 +161,9 @@ def test_solve_batch_one_launch_matches_per_instance(rng):
         assert res.backend == "pallas-interpret"
 
 
-def test_int32_guard_rejects_tape_scale_coordinates():
-    inst = make_instance([0, 2 * 10**9], [10**6, 10**6], [3, 3], u_turn=10**7)
-    with pytest.raises(ValueError, match="int32"):
-        solve(inst, policy="dp", backend="pallas-interpret")
-    # same instance is fine on the exact python backend
-    res = solve(inst, policy="dp", backend="python")
-    assert res.cost == evaluate_detours(inst, res.detours)
+# int32-guard + gcd-rescaling coverage lives in tests/test_batching.py
+# (test_rescale_accepts_tape_block_granularity_coordinates,
+#  test_guard_still_rejects_unrescalable_instances).
 
 
 # ---------------------------------------------------------------------------
