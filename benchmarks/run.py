@@ -18,6 +18,11 @@ Paper artefacts reproduced (on the synthetic IN2P3-calibrated dataset):
   * ``bench_tape_restore``          — system table: LTSP-scheduled checkpoint
     restore vs positional sweep (mean shard service time + solve-cache
     hit/miss counters).
+  * ``bench_online_serving``        — online queue service: arrival-rate sweep
+    of mean/p95 request sojourn per admission policy (fifo / accumulate /
+    preempt) on a seeded trace, every emitted schedule re-scored by the
+    discrete-event simulator oracle; asserts accumulate-then-solve beats
+    per-request FIFO under load.
 
 All scheduling goes through the solver registry (``repro.core.solver``); every
 reported cost is re-validated against the exact trajectory simulator.
@@ -133,23 +138,135 @@ def bench_performance_profiles(full: bool = False):
     return out_rows
 
 
-def bench_time_to_solution(full: bool = False):
-    """§5.3 running-time comparison (median seconds per instance)."""
-    from repro.core import get_solver, list_solvers
-    from repro.data import BENCH_PROFILE, generate_dataset
+#: What the paper's §5.3 running-time table establishes (qualitatively — the
+#: absolute seconds are theirs, measured on their machine/dataset, and are
+#: not restated here to avoid fabricating numbers): the list heuristics are
+#: effectively instant, the restricted DPs (SIMPLEDP, LOGDP) stay within
+#: interactive running times at full IN2P3 scale, and the exact DP is orders
+#: of magnitude slower — minutes-plus per large tape — which is exactly why
+#: the low-cost variants exist.  ``check_section_5_3`` verifies the measured
+#: medians reproduce this class ordering.
+PAPER_5_3_REFERENCE = {
+    "source": "arXiv:2112.09384 §5.3 running-time comparison (IN2P3 dataset)",
+    "classes": [
+        {"name": "heuristics", "policies": ["nodetour", "gs", "fgs", "nfgs",
+                                            "lognfgs5"]},
+        {"name": "restricted-dp", "policies": ["simpledp", "logdp1", "logdp5"]},
+        {"name": "exact-dp", "policies": ["dp"]},
+    ],
+    "expected": "median(heuristics) <= median(restricted-dp) << median(exact-dp)",
+}
 
-    ds = generate_dataset(BENCH_PROFILE)[:20]
+#: per-policy wall-time budget for the paper-scale (``--full``) §5.3 table;
+#: a policy stops taking new (larger) instances once it has spent this much,
+#: and the skipped strata are recorded as such — the exact DP needs hours on
+#: the top strata of the 169-tape profile, which a snapshot run can't afford.
+FULL_TIME_BUDGET_S = 300.0
+
+
+def check_section_5_3(rows: list[dict]) -> dict:
+    """Compare measured medians against the paper's §5.3 class ordering."""
+    med = {r["algorithm"]: r["median_s"] for r in rows if r["median_s"] is not None}
+    cls = {
+        c["name"]: [med[p] for p in c["policies"] if p in med]
+        for c in PAPER_5_3_REFERENCE["classes"]
+    }
+    cls_med = {k: float(np.median(v)) for k, v in cls.items() if v}
+    if all(k in cls_med for k in ("heuristics", "restricted-dp", "exact-dp")):
+        ordered = (
+            cls_med["heuristics"]
+            <= cls_med["restricted-dp"]
+            <= cls_med["exact-dp"]
+        )
+    else:
+        ordered = None  # a class has no completed strata: unknown, not "true"
+    return {
+        "reference": PAPER_5_3_REFERENCE,
+        "class_median_s": cls_med,
+        "ordering_consistent_with_paper": ordered,
+        "dp_vs_heuristic_ratio": (
+            cls_med["exact-dp"] / max(cls_med["heuristics"], 1e-9)
+            if "exact-dp" in cls_med and "heuristics" in cls_med
+            else None
+        ),
+    }
+
+
+def bench_time_to_solution(full: bool = False):
+    """§5.3 running-time comparison (median seconds per instance).
+
+    Smoke mode keeps the historical CI behaviour: the first 20 bench-profile
+    instances, every policy.  ``--full`` is the paper-scale artefact: a
+    stratified sample of the 169-tape IN2P3-calibrated profile (one instance
+    per ``n_req`` quantile) with a per-policy wall-time budget
+    (:data:`FULL_TIME_BUDGET_S`) — policies run their strata smallest-first
+    and stop when the budget is spent, so the exact DP reports honest medians
+    over the strata it completed instead of hanging the run for hours.  The
+    snapshot's summary block (``section_5_3``) compares the measured class
+    ordering against the paper's table.
+    """
+    from repro.core import get_solver, list_solvers
+    from repro.data import BENCH_PROFILE, PAPER_PROFILE, generate_dataset
+
+    if full:
+        ds_all = sorted(generate_dataset(PAPER_PROFILE), key=lambda i: i.n_req)
+        qs = [0.0, 0.25, 0.5, 0.75, 0.9, 1.0]
+        idx = sorted({int(q * (len(ds_all) - 1)) for q in qs})
+        ds = [ds_all[i] for i in idx]
+        budget = FULL_TIME_BUDGET_S
+    else:
+        ds = generate_dataset(BENCH_PROFILE)[:20]
+        budget = float("inf")
     rows = []
     for name in list_solvers():
-        ts = []
-        for inst in ds:
+        ts: list[float] = []
+        per_inst: list[dict] = []
+        spent = 0.0
+        prev: tuple[float, int, int] | None = None  # (seconds, n_req, n)
+        for inst in ds:  # ascending n_req in full mode: small strata first
+            if spent > budget:
+                per_inst.append({"n_req": inst.n_req, "seconds": None,
+                                 "skipped": "budget"})
+                continue
+            if prev is not None:
+                # DP-family work scales ~ R^2 * S; refuse to *start* a stratum
+                # the extrapolated cost of which blows the budget
+                dt0, R0, n0 = prev
+                predicted = dt0 * (inst.n_req / R0) ** 2 * (inst.n / max(n0, 1))
+                if predicted > 1.0 and spent + predicted > budget:
+                    per_inst.append({"n_req": inst.n_req, "seconds": None,
+                                     "skipped": "budget-predicted"})
+                    continue
             _, _, dt = _timed_solve(get_solver(name), inst)
             ts.append(dt)
-        med = float(np.median(ts))
-        rows.append({"algorithm": name, "median_s": med, "max_s": float(max(ts))})
-        _emit(f"time_to_solution/{name}", med * 1e6, f"max_s={max(ts):.3f}")
-    (RESULTS / "time_to_solution.json").write_text(json.dumps(rows, indent=1))
-    RECORD["time_to_solution"] = rows
+            spent += dt
+            prev = (dt, inst.n_req, inst.n)
+            per_inst.append({"n_req": inst.n_req, "seconds": dt})
+        med = float(np.median(ts)) if ts else None
+        row = {"algorithm": name, "median_s": med,
+               "max_s": float(max(ts)) if ts else None,
+               "n_completed": len(ts), "n_instances": len(ds)}
+        if full:
+            row["per_instance"] = per_inst
+        rows.append(row)
+        _emit(
+            f"time_to_solution/{name}",
+            (med or 0.0) * 1e6,
+            f"max_s={row['max_s']:.3f};completed={len(ts)}/{len(ds)}"
+            if ts else "completed=0",
+        )
+    out: dict = {"rows": rows, "profile": "paper" if full else "bench"}
+    if full:
+        out["section_5_3"] = check_section_5_3(rows)
+        ratio = out["section_5_3"]["dp_vs_heuristic_ratio"]
+        _emit(
+            "time_to_solution/section_5_3",
+            0.0,
+            f"ordering_consistent={out['section_5_3']['ordering_consistent_with_paper']};"
+            f"dp_vs_heuristic_ratio={f'{ratio:.3g}' if ratio is not None else 'n/a'}",
+        )
+    (RESULTS / "time_to_solution.json").write_text(json.dumps(out, indent=1))
+    RECORD["time_to_solution"] = out
     return rows
 
 
@@ -418,6 +535,75 @@ def bench_tape_restore(full: bool = False):
     return rows
 
 
+def bench_online_serving(full: bool = False):
+    """Online tape-serving table: admission policy x arrival rate.
+
+    A seeded Poisson-like trace (>= 200 requests, >= 4 cartridges) is served
+    through the per-cartridge queue service at several mean inter-arrival
+    times; each cell reports the exact per-request sojourn distribution (the
+    service time users experience) and the number of LTSP solves.  The
+    discrete-event simulator independently re-scores every emitted schedule
+    (``all_verified``), and the accumulate-then-solve admission must beat
+    per-request FIFO at every swept rate — the online claim of the paper's
+    objective, asserted on virtual time (no wall clocks).
+    """
+    from repro.serving.queue import ADMISSIONS, serve_trace
+    from repro.serving.sim import demo_library, poisson_trace
+
+    seed = 20260731
+    n_requests = 240 if not full else 600
+    n_files = 48 if not full else 96
+
+    def build_library():
+        return demo_library(seed, n_files=n_files)
+
+    n_tapes = len(build_library().tapes)
+    assert n_tapes >= 4, "sweep needs a multi-cartridge library"
+    rows = []
+    window = 400_000
+    for rate in (100_000, 400_000, 1_600_000):
+        trace = poisson_trace(
+            build_library(), n_requests=n_requests, mean_interarrival=rate, seed=seed
+        )
+        per_admission: dict[str, float] = {}
+        for admission in ADMISSIONS:
+            lib = build_library()
+            t0 = time.perf_counter()
+            report = serve_trace(
+                lib,
+                trace,
+                admission,
+                window=window if admission == "accumulate" else 0,
+                policy="dp",
+                backend="python",
+                cache=lib.cache,
+            )
+            dt = time.perf_counter() - t0
+            s = report.summary()  # verify=True: the oracle raised on any lie
+            assert s["n_served"] == n_requests
+            per_admission[admission] = s["mean_sojourn"]
+            rows.append({"rate": rate, "wall_s": dt, **s})
+            _emit(
+                f"online/{admission}/rate_{rate}",
+                dt * 1e6,
+                f"mean_sojourn={s['mean_sojourn']:.4g};"
+                f"p95={s['p95_sojourn']:.4g};batches={s['n_batches']};"
+                f"preempts={s['n_preemptions']}",
+            )
+        assert per_admission["accumulate"] < per_admission["fifo"], (
+            f"accumulate-then-solve must beat FIFO at rate {rate}"
+        )
+    (RESULTS / "online_serving.json").write_text(json.dumps(rows, indent=1))
+    RECORD["online_serving"] = {
+        "seed": seed,
+        "n_requests": n_requests,
+        "n_tapes": n_tapes,
+        "window": window,
+        "rows": rows,
+    }
+    return rows
+
+
 def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
     """Compare a fresh record against a checked-in baseline snapshot.
 
@@ -474,7 +660,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None, metavar="BENCH[,BENCH...]",
         help="run a subset of {profiles,time,kernel,batch,hetero,policies,"
-             "restore} (comma-separated)",
+             "restore,online} (comma-separated)",
     )
     ap.add_argument(
         "--record", nargs="?", const="BENCH_pr2.json", default=None,
@@ -496,6 +682,7 @@ def main() -> None:
         "hetero": bench_hetero_batch,
         "policies": bench_policy_backends,
         "restore": bench_tape_restore,
+        "online": bench_online_serving,
     }
     selected = list(benches) if args.only is None else args.only.split(",")
     unknown = [s for s in selected if s not in benches]

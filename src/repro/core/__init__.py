@@ -23,6 +23,7 @@ from .solver import (
     SolveCache,
     SolveResult,
     Solver,
+    UnsupportedBackendError,
     get_solver,
     list_solvers,
     register_solver,
@@ -53,6 +54,7 @@ __all__ = [
     "SolveCache",
     "SolveResult",
     "Solver",
+    "UnsupportedBackendError",
     "register_solver",
     "get_solver",
     "list_solvers",

@@ -73,6 +73,7 @@ from .schedule import evaluate_detours
 __all__ = [
     "BACKENDS",
     "DEFAULT_BACKEND",
+    "UnsupportedBackendError",
     "SolveResult",
     "SolveCache",
     "Solver",
@@ -89,6 +90,27 @@ __all__ = [
 
 BACKENDS = ("python", "pallas", "pallas-interpret")
 DEFAULT_BACKEND = "python"
+
+
+class UnsupportedBackendError(ValueError):
+    """A registered policy was asked for a backend it does not implement.
+
+    Typed (callers can catch it without string-matching) and message-stable:
+    the message is always ``policy {name!r} has no {backend!r} backend
+    (supported: {backends})`` — tests and serving fallback paths rely on the
+    format.  Raised *before* any instance is solved, so a batch never fails
+    mid-flight: ``solve_batch`` on an unsupported policy/backend combination
+    is all-or-nothing.
+    """
+
+    def __init__(self, policy: str, backend: str, supported: tuple[str, ...]):
+        self.policy = policy
+        self.backend = backend
+        self.supported = supported
+        super().__init__(
+            f"policy {policy!r} has no {backend!r} backend "
+            f"(supported: {supported})"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +198,10 @@ class Solver(Protocol):
     def backends(self) -> tuple[str, ...]:
         """Backends this solver accepts (subset of :data:`BACKENDS`)."""
 
+    @property
+    def supports_device(self) -> bool:
+        """Capability flag: True iff a ``pallas*`` backend is implemented."""
+
     def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
         """Solve one instance."""
 
@@ -189,10 +215,7 @@ def _check_backend(solver: "Solver", backend: str) -> None:
     if backend not in BACKENDS:
         raise KeyError(f"unknown backend {backend!r}; choose from {BACKENDS}")
     if backend not in solver.backends:
-        raise ValueError(
-            f"policy {solver.name!r} has no {backend!r} backend "
-            f"(supported: {solver.backends})"
-        )
+        raise UnsupportedBackendError(solver.name, backend, solver.backends)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,6 +234,10 @@ class HeuristicSolver:
     def backends(self) -> tuple[str, ...]:
         return ("python",)
 
+    @property
+    def supports_device(self) -> bool:
+        return False
+
     def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
         _check_backend(self, backend)
         detours = self.fn(inst)
@@ -219,6 +246,7 @@ class HeuristicSolver:
     def solve_batch(
         self, instances: list[Instance], backend: str = DEFAULT_BACKEND
     ) -> list[SolveResult]:
+        _check_backend(self, backend)  # all-or-nothing: never fail mid-batch
         return [self.solve(inst, backend) for inst in instances]
 
 
@@ -240,6 +268,10 @@ class DPSolver:
     @property
     def backends(self) -> tuple[str, ...]:
         return BACKENDS
+
+    @property
+    def supports_device(self) -> bool:
+        return True
 
     def _span(self, inst: Instance) -> int | None:
         return None if self.span_policy is None else self.span_policy(inst.n_req)
@@ -297,6 +329,10 @@ class SimpleDPSolver:
     def backends(self) -> tuple[str, ...]:
         return ("python",)
 
+    @property
+    def supports_device(self) -> bool:
+        return False
+
     def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
         _check_backend(self, backend)
         cost, detours = simpledp_schedule(inst)
@@ -305,6 +341,7 @@ class SimpleDPSolver:
     def solve_batch(
         self, instances: list[Instance], backend: str = DEFAULT_BACKEND
     ) -> list[SolveResult]:
+        _check_backend(self, backend)  # all-or-nothing: never fail mid-batch
         return [self.solve(inst, backend) for inst in instances]
 
 
@@ -343,11 +380,13 @@ def solve(
     cache: SolveCache | None = None,
 ) -> SolveResult:
     """Solve one instance with a registered policy (optionally memoised)."""
+    solver = get_solver(policy)
+    _check_backend(solver, backend)  # before the cache: no miss-count pollution
     if cache is not None:
         hit = cache.get(inst, policy, backend)
         if hit is not None:
             return hit
-    res = get_solver(policy).solve(inst, backend)
+    res = solver.solve(inst, backend)
     if cache is not None:
         cache.put(inst, policy, backend, res)
     return res
@@ -364,15 +403,21 @@ def solve_batch(
     With a ``cache``, hits are served from the memo and only the misses go to
     the backend (in one bucketed batch), so re-planning a mostly-repeated
     request mix only pays for the novel tapes.
+
+    An unsupported policy/backend combination raises
+    :class:`UnsupportedBackendError` before any instance is solved or any
+    cache entry is touched — a batch is all-or-nothing, never mid-flight.
     """
+    solver = get_solver(policy)
+    _check_backend(solver, backend)
     if cache is None:
-        return get_solver(policy).solve_batch(instances, backend)
+        return solver.solve_batch(instances, backend)
     results: list[SolveResult | None] = [
         cache.get(inst, policy, backend) for inst in instances
     ]
     miss = [i for i, r in enumerate(results) if r is None]
     if miss:
-        solved = get_solver(policy).solve_batch([instances[i] for i in miss], backend)
+        solved = solver.solve_batch([instances[i] for i in miss], backend)
         for i, res in zip(miss, solved):
             cache.put(instances[i], policy, backend, res)
             results[i] = res

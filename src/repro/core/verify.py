@@ -12,6 +12,13 @@ Two independent oracles:
 * :func:`bruteforce_laminar` — enumerate every strictly laminar detour family
   and score it with the trajectory simulator.  Validates the simulator and the
   detour abstraction against the trajectory oracle.
+
+Plus the polynomial-time schedule validity checker every serving-path caller
+uses: :func:`verify_schedule` structurally validates an emitted detour list
+and recomputes its cost through the *independent* discrete-event replay in
+:mod:`repro.serving.sim`, cross-checked against the inline evaluator in
+:mod:`repro.core.schedule` — both must agree with each other (and with the
+solver-claimed cost, when given) exactly, in integer arithmetic.
 """
 
 from __future__ import annotations
@@ -24,7 +31,61 @@ import numpy as np
 from .instance import Instance
 from .schedule import evaluate_detours
 
-__all__ = ["bruteforce_trajectory", "bruteforce_laminar", "laminar_families"]
+__all__ = [
+    "bruteforce_trajectory",
+    "bruteforce_laminar",
+    "laminar_families",
+    "verify_schedule",
+]
+
+
+def verify_schedule(
+    inst: Instance,
+    detours: list[tuple[int, int]],
+    cost: int | None = None,
+    replay=None,
+) -> int:
+    """Validate an emitted schedule and return its independently-derived cost.
+
+    Checks, raising ``ValueError`` on the first failure:
+
+    1. **structure** — every detour is an integer pair ``(a, b)`` with
+       ``0 <= a <= b < n_req``;
+    2. **validity** — the replayed trajectory serves every requested file;
+    3. **cost** — the discrete-event replay (:mod:`repro.serving.sim`), the
+       inline evaluator (:func:`repro.core.schedule.evaluate_detours`), and —
+       when given — the solver-claimed ``cost`` all agree exactly.
+
+    This is the oracle every online serving path runs against each schedule
+    it emits; it is polynomial (no brute force), so it scales to paper-size
+    instances.  A caller that already replayed the schedule can pass its
+    :class:`repro.serving.sim.Replay` as ``replay`` to avoid a second
+    trajectory build; the cross-checks still run in full.
+    """
+    for d in detours:
+        a, b = d  # unpacking failure -> malformed pair, let it raise
+        if int(a) != a or int(b) != b:
+            raise ValueError(f"detour {d!r} has non-integer endpoints")
+        if not (0 <= a <= b < inst.n_req):
+            raise ValueError(
+                f"detour {d!r} out of range for n_req={inst.n_req}"
+            )
+    if replay is None:
+        # deferred import: core must stay importable without the serving layer
+        from ..serving.sim import replay_schedule
+
+        replay = replay_schedule(inst, detours)  # raises if a file goes unserved
+    inline = evaluate_detours(inst, detours)
+    if replay.cost != inline:
+        raise ValueError(
+            f"replay cost {replay.cost} != inline evaluator cost {inline} "
+            f"(simulator/evaluator divergence — this is a bug)"
+        )
+    if cost is not None and replay.cost != cost:
+        raise ValueError(
+            f"claimed cost {cost} != independently recomputed cost {replay.cost}"
+        )
+    return replay.cost
 
 
 def bruteforce_trajectory(inst: Instance, max_states: int = 2_000_000) -> int:

@@ -1,0 +1,313 @@
+"""Online tape-serving subsystem: per-cartridge request queues + admission.
+
+This is the serving loop the ROADMAP's north star asks for: read requests
+arrive over (virtual) time against a :class:`~repro.storage.tape.TapeLibrary`,
+accumulate in per-cartridge queues (:class:`~repro.storage.tape.PendingQueue`),
+and an *admission policy* decides when a cartridge's queue becomes an LTSP
+batch dispatched through the solver engine (:func:`repro.core.solve` — any
+registered policy x backend, :class:`~repro.core.SolveCache`-aware).  The
+discrete-event simulator in :mod:`repro.serving.sim` advances virtual time and
+independently re-scores every emitted schedule, so online-vs-offline regret
+and batching-vs-FIFO improvements are exact integers, not anecdotes.
+
+Admission policies
+------------------
+``fifo``
+    Per-request solving: the drive serves one request at a time in arrival
+    order.  Every request pays a full seek from the load point — the
+    baseline any batching policy must beat.
+``accumulate``
+    Accumulate-then-solve with a re-plan window: a cartridge's queue is
+    dispatched as one batch once the oldest pending request has waited
+    ``window`` time units (and the drive is free).  ``window=0`` degenerates
+    to greedy batching: dispatch everything queued whenever the drive frees.
+``preempt``
+    Greedy batching plus preemptive re-solve on arrival: a request arriving
+    while the drive is mid-batch aborts the in-flight plan at that instant —
+    requests already served keep their completion times, the head rewinds
+    from wherever it is, and the survivors plus the newcomer are re-solved
+    as one batch.  Wins when late arrivals would otherwise wait out a long
+    plan; loses the rewind penalty when arrivals are dense.
+
+Every dispatched schedule is checked by :func:`repro.core.verify.verify_schedule`
+(structural validity + the simulator's independent cost recomputation must
+equal the solver-reported cost exactly) unless ``verify=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from ..core.solver import DEFAULT_BACKEND, SolveCache, solve
+from ..core.verify import verify_schedule
+from ..storage.tape import TapeLibrary
+from .sim import (
+    BatchRecord,
+    Leg,
+    Replay,
+    Request,
+    ServedRequest,
+    ServiceReport,
+    head_position,
+    replay_schedule,
+    rewind_time,
+)
+
+__all__ = ["ADMISSIONS", "OnlineTapeServer", "serve_trace"]
+
+ADMISSIONS = ("fifo", "accumulate", "preempt")
+
+
+@dataclasses.dataclass
+class _Drive:
+    """Per-cartridge drive state (one drive per cartridge)."""
+
+    tape_id: str
+    busy: bool = False
+    epoch: int = 0  # invalidates stale drive-free events after preemption
+    dispatched: int = 0
+    service_end: int = 0  # dispatch + makespan (last completion)
+    busy_until: int = 0  # service_end + rewind
+    legs: tuple[Leg, ...] = ()
+    inflight: list[tuple[Request, int]] = dataclasses.field(default_factory=list)
+    next_wake: int = -1  # pending accumulate-window timer (dedup)
+    batch_idx: int = -1  # index of the in-flight batch's BatchRecord
+    load_point: int = 0  # in-flight instance's m (rewind target)
+    u_turn: int = 0  # in-flight instance's U-turn penalty
+
+
+class OnlineTapeServer:
+    """Event-driven online serving of an arrival trace against a library.
+
+    One instance simulates one run: virtual time advances over arrival,
+    window-expiry, and drive-free events; all arithmetic is exact integers,
+    so two runs with the same trace and configuration are bit-identical.
+    """
+
+    def __init__(
+        self,
+        library: TapeLibrary,
+        admission: str = "accumulate",
+        *,
+        window: int = 0,
+        policy: str = "dp",
+        backend: str = DEFAULT_BACKEND,
+        cache: SolveCache | None = None,
+        verify: bool = True,
+    ):
+        if admission not in ADMISSIONS:
+            raise ValueError(
+                f"unknown admission policy {admission!r}; choose from {ADMISSIONS}"
+            )
+        if window < 0:
+            raise ValueError("window must be >= 0")
+        self.lib = library
+        self.admission = admission
+        self.window = int(window)
+        self.policy = policy
+        self.backend = backend
+        self.cache = cache
+        self.verify = verify
+
+    # -- event plumbing ------------------------------------------------------
+    def _push(self, when: int, kind: str, data) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (when, self._seq, kind, data))
+
+    def run(self, trace: list[Request]) -> ServiceReport:
+        """Serve a full arrival trace; returns the per-request report."""
+        self._events: list = []
+        self._seq = 0
+        self._drives: dict[str, _Drive] = {}
+        self._served: list[ServedRequest] = []
+        self._batches: list[BatchRecord] = []
+        self._n_preempt = 0
+        horizon = 0
+
+        for req in sorted(trace):
+            self._push(req.time, "arrival", req)
+
+        while self._events:
+            now, _, kind, data = heapq.heappop(self._events)
+            horizon = max(horizon, now)
+            if kind == "arrival":
+                req: Request = data
+                tape_id = self.lib.enqueue(req.name, req)
+                drive = self._drives.setdefault(tape_id, _Drive(tape_id))
+                if (
+                    self.admission == "preempt"
+                    and drive.busy
+                    and now < drive.service_end
+                ):
+                    self._preempt(drive, now)
+                self._try_dispatch(drive, now)
+            elif kind == "free":
+                tape_id, epoch = data
+                drive = self._drives[tape_id]
+                if epoch != drive.epoch or not drive.busy:
+                    continue  # superseded by a preemption
+                self._complete(drive)
+                self._try_dispatch(drive, now)
+            elif kind == "wake":
+                tape_id, when = data
+                drive = self._drives[tape_id]
+                if when != drive.next_wake:
+                    continue  # superseded timer
+                drive.next_wake = -1
+                self._try_dispatch(drive, now)
+
+        horizon = max([horizon] + [d.busy_until for d in self._drives.values()])
+        report = ServiceReport(
+            admission=self.admission,
+            policy=self.policy,
+            backend=self.backend,
+            window=self.window,
+            served=sorted(self._served, key=lambda r: (r.completed, r.req_id)),
+            batches=self._batches,
+            n_preemptions=self._n_preempt,
+            horizon=horizon,
+            cache_stats=self.cache.stats() if self.cache is not None else None,
+        )
+        return report
+
+    # -- admission -----------------------------------------------------------
+    def _try_dispatch(self, drive: _Drive, now: int) -> None:
+        queue = self.lib.pending(drive.tape_id)
+        if drive.busy or len(queue) == 0:
+            return
+        if self.admission == "fifo":
+            batch = [queue.pop()]
+        elif self.admission == "accumulate":
+            ready = queue.peek().time + self.window
+            if now < ready:
+                if drive.next_wake != ready:
+                    drive.next_wake = ready
+                    self._push(ready, "wake", (drive.tape_id, ready))
+                return
+            batch = queue.drain()
+        else:  # preempt: greedy batching, preemption handled on arrival
+            batch = queue.drain()
+        self._dispatch(drive, batch, now)
+
+    # -- drive actions -------------------------------------------------------
+    def _dispatch(self, drive: _Drive, batch: list[Request], now: int) -> None:
+        tape = self.lib.tape_of(batch[0].name)
+        multiset: dict[str, int] = {}
+        for req in batch:
+            multiset[req.name] = multiset.get(req.name, 0) + 1
+        inst, names = tape.instance(multiset)
+        res = solve(inst, policy=self.policy, backend=self.backend, cache=self.cache)
+        replay: Replay = replay_schedule(inst, res.detours)
+        # the independent recomputation always lands in the BatchRecord; with
+        # verify=True a disagreement (or structural defect) raises right here
+        verified = replay.cost == res.cost
+        if self.verify:
+            verify_schedule(inst, res.detours, cost=res.cost, replay=replay)
+        idx = {name: i for i, name in enumerate(names)}
+        rewind = rewind_time(inst.m, inst.u_turn, replay.head_at_makespan)
+
+        drive.busy = True
+        drive.epoch += 1
+        drive.dispatched = now
+        drive.service_end = now + replay.makespan
+        drive.busy_until = drive.service_end + rewind
+        drive.legs = replay.legs
+        drive.load_point = inst.m
+        drive.u_turn = inst.u_turn
+        drive.inflight = [
+            (req, now + replay.service_time[idx[req.name]]) for req in batch
+        ]
+        drive.batch_idx = len(self._batches)
+        self._batches.append(
+            BatchRecord(
+                tape_id=drive.tape_id,
+                dispatched=now,
+                n_requests=len(batch),
+                n_files=inst.n_req,
+                solver_cost=res.cost,
+                replay_cost=replay.cost,
+                makespan=replay.makespan,
+                rewind=rewind,
+                verified=verified,
+            )
+        )
+        self._push(drive.busy_until, "free", (drive.tape_id, drive.epoch))
+
+    def _complete(self, drive: _Drive) -> None:
+        for req, completed in drive.inflight:
+            self._served.append(
+                ServedRequest(
+                    req_id=req.req_id,
+                    name=req.name,
+                    tape_id=req.tape_id,
+                    arrival=req.time,
+                    dispatched=drive.dispatched,
+                    completed=completed,
+                )
+            )
+        drive.inflight = []
+        drive.busy = False
+
+    def _preempt(self, drive: _Drive, now: int) -> None:
+        """Abort the in-flight batch at ``now``; requeue unserved requests.
+
+        Completions at or before ``now`` stand; the head rewinds from its
+        current position (one U-turn + seek to the load point) before the
+        next dispatch.  The drive stays busy for the rewind.
+        """
+        done = [(r, c) for r, c in drive.inflight if c <= now]
+        pending = [r for r, c in drive.inflight if c > now]
+        for req, completed in done:
+            self._served.append(
+                ServedRequest(
+                    req_id=req.req_id,
+                    name=req.name,
+                    tape_id=req.tape_id,
+                    arrival=req.time,
+                    dispatched=drive.dispatched,
+                    completed=completed,
+                )
+            )
+        for req in pending:
+            self.lib.enqueue(req.name, req)
+        pos = head_position(drive.legs, now - drive.dispatched)
+        rewind = rewind_time(drive.load_point, drive.u_turn, pos)
+        aborted = self._batches[drive.batch_idx]
+        assert aborted.tape_id == drive.tape_id
+        assert aborted.dispatched == drive.dispatched
+        self._batches[drive.batch_idx] = dataclasses.replace(
+            aborted, preempted=True, n_completed=len(done)
+        )
+        drive.epoch += 1  # invalidate the scheduled drive-free event
+        drive.inflight = []
+        drive.legs = ()
+        drive.service_end = now
+        drive.busy_until = now + rewind
+        drive.busy = True
+        self._n_preempt += 1
+        self._push(drive.busy_until, "free", (drive.tape_id, drive.epoch))
+
+
+def serve_trace(
+    library: TapeLibrary,
+    trace: list[Request],
+    admission: str = "accumulate",
+    *,
+    window: int = 0,
+    policy: str = "dp",
+    backend: str = DEFAULT_BACKEND,
+    cache: SolveCache | None = None,
+    verify: bool = True,
+) -> ServiceReport:
+    """One-shot convenience: build an :class:`OnlineTapeServer` and run it."""
+    server = OnlineTapeServer(
+        library,
+        admission,
+        window=window,
+        policy=policy,
+        backend=backend,
+        cache=cache,
+        verify=verify,
+    )
+    return server.run(trace)

@@ -29,11 +29,18 @@ Everything is integer-exact and simulation-backed: ``read_batch`` returns the
 service time of every request as produced by the trajectory simulator in
 :mod:`repro.core.schedule`, and every plan's ``total_cost`` equals the
 simulator's score of its detours regardless of policy or backend.
+
+For *online* serving the library also owns per-cartridge pending-request
+queues (:class:`PendingQueue`, via :meth:`TapeLibrary.enqueue` /
+:meth:`TapeLibrary.pending`): requests arriving over virtual time accumulate
+per cartridge until the admission policy in :mod:`repro.serving.queue` turns
+a queue into an LTSP batch for this module's schedulers.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -41,7 +48,14 @@ from ..core import make_instance, service_times, solve, solve_batch, virtual_lb
 from ..core.instance import Instance
 from ..core.solver import DEFAULT_BACKEND, SolveCache, SolveResult
 
-__all__ = ["TapeFile", "Tape", "TapeLibrary", "ReadPlan", "schedule_reads"]
+__all__ = [
+    "TapeFile",
+    "Tape",
+    "TapeLibrary",
+    "PendingQueue",
+    "ReadPlan",
+    "schedule_reads",
+]
 
 #: head repositioning penalty per U-turn, in position units (bytes here).
 DEFAULT_U_TURN = 2_000_000
@@ -94,6 +108,40 @@ class Tape:
             u_turn=self.u_turn,
         )
         return inst, names
+
+
+class PendingQueue:
+    """Ordered pending-request queue for one cartridge.
+
+    Items must be mutually comparable (the online serving layer pushes
+    :class:`repro.serving.sim.Request`, which orders by arrival time then
+    request id); :meth:`pop`/:meth:`drain` return them oldest-first, so a
+    preempted request re-enters ahead of later arrivals.
+    """
+
+    def __init__(self) -> None:
+        self._heap: list = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, item) -> None:
+        heapq.heappush(self._heap, item)
+
+    def peek(self):
+        if not self._heap:
+            raise IndexError("peek from an empty PendingQueue")
+        return self._heap[0]
+
+    def pop(self):
+        if not self._heap:
+            raise IndexError("pop from an empty PendingQueue")
+        return heapq.heappop(self._heap)
+
+    def drain(self) -> list:
+        """Remove and return every pending item, oldest first."""
+        out = [heapq.heappop(self._heap) for _ in range(len(self._heap))]
+        return out
 
 
 @dataclasses.dataclass
@@ -157,6 +205,8 @@ class TapeLibrary:
         self.location: dict[str, str] = {}  # file -> tape_id
         #: memo of solved instances shared by every schedule() call (opt-in).
         self.cache = cache
+        #: per-cartridge pending read requests (the online serving queues).
+        self.queues: dict[str, PendingQueue] = {}
 
     def _tape_with_room(self, size: int) -> Tape:
         for t in self.tapes:
@@ -175,6 +225,17 @@ class TapeLibrary:
     def tape_of(self, name: str) -> Tape:
         tid = self.location[name]
         return next(t for t in self.tapes if t.tape_id == tid)
+
+    # -- online request queues (used by repro.serving.queue) -----------------
+    def enqueue(self, name: str, item) -> str:
+        """Queue a pending read of ``name`` on its cartridge; returns tape id."""
+        tid = self.location[name]
+        self.pending(tid).push(item)
+        return tid
+
+    def pending(self, tape_id: str) -> PendingQueue:
+        """The cartridge's pending-request queue (created on first use)."""
+        return self.queues.setdefault(tape_id, PendingQueue())
 
     def schedule(
         self,

@@ -6,7 +6,17 @@ collect and run, so this module exports compatible stand-ins —
 :func:`given`/:func:`settings` decorators that mark the test as skipped and a
 :func:`ltsp_instances` placeholder strategy.  The plain-``numpy`` generators
 (:func:`random_instance`, the ``rng`` fixture) never depend on hypothesis.
+
+The property suite (``tests/test_properties.py``) uses the stronger
+:func:`instances_property` decorator instead: with hypothesis it is
+``@given(ltsp_instances(...))`` (profiles ``ci`` — derandomized, fixed
+example budget, selected via ``HYPOTHESIS_PROFILE=ci`` — and ``dev``); without
+hypothesis it *runs* the test over a fixed number of seeded
+:func:`fallback_instances` draws instead of skipping, so the differential
+properties always execute.
 """
+
+import os
 
 import numpy as np
 import pytest
@@ -14,10 +24,19 @@ import pytest
 from repro.core import make_instance
 
 try:
-    from hypothesis import given, settings
+    from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
 
     HAS_HYPOTHESIS = True
+    settings.register_profile(
+        "ci",
+        derandomize=True,
+        max_examples=50,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 except ImportError:  # pragma: no cover - exercised when hypothesis is absent
     st = None
     HAS_HYPOTHESIS = False
@@ -42,8 +61,22 @@ except ImportError:  # pragma: no cover - exercised when hypothesis is absent
 if HAS_HYPOTHESIS:
 
     @st.composite
-    def ltsp_instances(draw, min_files=1, max_files=6, max_size=25, max_mult=6, max_u=15):
-        """Random valid LTSP instance (integer coordinates, disjoint files)."""
+    def ltsp_instances(
+        draw,
+        min_files=1,
+        max_files=6,
+        max_size=25,
+        max_mult=6,
+        max_u=15,
+        min_u=0,
+        max_head_offset=0,
+    ):
+        """Random valid LTSP instance (integer coordinates, disjoint files).
+
+        Gaps may be zero (adjacent files), ``min_u`` forces a U-turn penalty,
+        and ``max_head_offset`` adds dead tape right of the last file so the
+        head start ``m`` is strictly beyond every request.
+        """
         R = draw(st.integers(min_files, max_files))
         sizes = [draw(st.integers(1, max_size)) for _ in range(R)]
         gaps = [draw(st.integers(0, max_size)) for _ in range(R + 1)]
@@ -52,14 +85,84 @@ if HAS_HYPOTHESIS:
             left.append(pos)
             pos += sizes[i] + gaps[i + 1]
         mult = [draw(st.integers(1, max_mult)) for _ in range(R)]
-        u = draw(st.integers(0, max_u))
-        return make_instance(left, sizes, mult, m=pos, u_turn=u)
+        u = draw(st.integers(min_u, max_u))
+        m = pos + draw(st.integers(0, max_head_offset))
+        return make_instance(left, sizes, mult, m=m, u_turn=u)
 
 else:
 
     def ltsp_instances(**_kwargs):
         """Placeholder strategy; tests using it are skipped via :func:`given`."""
         return None
+
+
+def fallback_instances(
+    n,
+    seed=20260731,
+    min_files=1,
+    max_files=6,
+    max_size=25,
+    max_mult=6,
+    max_u=15,
+    min_u=0,
+    max_head_offset=0,
+):
+    """Seeded stand-in for the :func:`ltsp_instances` strategy.
+
+    Mirrors the strategy's shape (adjacent files via zero gaps, optional
+    forced U-turn penalty, optional head offset) with plain ``numpy``
+    randomness, so the property suite runs — not skips — when hypothesis is
+    absent.  Deterministic given ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        R = int(rng.integers(min_files, max_files + 1))
+        sizes = rng.integers(1, max_size + 1, size=R)
+        # half the draws use dense layouts (many zero gaps -> adjacent files)
+        hi_gap = max_size if rng.random() < 0.5 else 1
+        gaps = rng.integers(0, hi_gap + 1, size=R + 1)
+        left, pos = [], int(gaps[0])
+        for i in range(R):
+            left.append(pos)
+            pos += int(sizes[i] + gaps[i + 1])
+        mult = rng.integers(1, max_mult + 1, size=R)
+        u = int(rng.integers(min_u, max_u + 1))
+        m = pos + int(rng.integers(0, max_head_offset + 1))
+        out.append(make_instance(left, sizes, mult, m=m, u_turn=u))
+    return out
+
+
+def instances_property(n_fallback=25, seed=20260731, max_examples=None, **strategy_kw):
+    """Property decorator for tests taking a single ``inst`` argument.
+
+    With hypothesis: ``@given(ltsp_instances(**strategy_kw))`` under the
+    active profile (``max_examples`` optionally pinned).  Without: the test
+    body runs over ``n_fallback`` seeded :func:`fallback_instances` draws.
+    """
+    if HAS_HYPOTHESIS:
+
+        def deco(fn):
+            wrapped = fn
+            if max_examples is not None:
+                wrapped = settings(max_examples=max_examples)(wrapped)
+            return given(ltsp_instances(**strategy_kw))(wrapped)
+
+        return deco
+
+    def deco(fn):
+        def wrapper():
+            for inst in fallback_instances(n_fallback, seed=seed, **strategy_kw):
+                fn(inst)
+
+        # keep identity for pytest reporting, but NOT the signature: pytest
+        # would otherwise look for an ``inst`` fixture
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
 
 
 def random_instance(rng: np.random.Generator, lo=2, hi=30, max_u=30):

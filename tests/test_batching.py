@@ -229,6 +229,59 @@ def test_cache_eviction_is_bounded(rng):
     assert len(cache) == 3 and cache.misses == 6
 
 
+def test_cache_lru_eviction_order(rng):
+    """Least-recently-*used* goes first: a get() refreshes recency, so the
+    untouched entry is the one evicted when the bound is crossed."""
+    cache = SolveCache(maxsize=3)
+    a, b, c, d = (_hetero_instance(rng) for _ in range(4))
+    for inst in (a, b, c):
+        solve(inst, policy="gs", cache=cache)
+    solve(a, policy="gs", cache=cache)  # refresh a: LRU order is now b, c, a
+    solve(d, policy="gs", cache=cache)  # evicts b
+    assert len(cache) == 3
+    assert cache.get(b, "gs", "python") is None  # evicted -> miss
+    for inst in (a, c, d):  # everything else still resident
+        assert cache.get(inst, "gs", "python") is not None
+    # and the eviction is strictly in recency order: after the gets above the
+    # stalest entry is a, so inserting a fresh one must evict a, not c or d
+    e = _hetero_instance(rng)
+    cache.get(c, "gs", "python")
+    solve(e, policy="gs", cache=cache)
+    assert cache.get(a, "gs", "python") is None
+    assert cache.get(c, "gs", "python") is not None
+
+
+def test_cache_key_isolation_is_total(rng):
+    """Entries never leak across policy or backend for the same instance."""
+    cache = SolveCache()
+    inst = _hetero_instance(rng)
+    combos = [("dp", "python"), ("dp", "pallas-interpret"), ("gs", "python"),
+              ("simpledp", "python")]
+    for policy, backend in combos:
+        solve(inst, policy=policy, backend=backend, cache=cache)
+    assert len(cache) == len(combos) and cache.misses == len(combos)
+    for policy, backend in combos:
+        hit = cache.get(inst, policy, backend)
+        assert hit is not None
+        assert (hit.policy, hit.backend) == (policy, backend)
+    # unseen combination for the same instance: miss, never a cross-key hit
+    assert cache.get(inst, "nodetour", "python") is None
+
+
+def test_cache_hit_returns_equal_but_not_aliased_detours(rng):
+    """Every hit materialises a fresh, equal detour list — never the stored
+    tuple and never a previously returned list."""
+    cache = SolveCache()
+    inst = _hetero_instance(rng)
+    first = solve(inst, policy="dp", cache=cache)
+    h1 = cache.get(inst, "dp", "python")
+    h2 = cache.get(inst, "dp", "python")
+    assert h1.detours == h2.detours == first.detours
+    assert h1.detours is not h2.detours
+    assert h1.detours is not first.detours
+    assert all(isinstance(d, tuple) for d in h1.detours)
+
+
 def test_library_schedule_uses_cache(rng):
     from repro.storage.tape import TapeLibrary
 

@@ -1,0 +1,154 @@
+"""Property-based differential suite over random LTSP instances.
+
+Strategies (``conftest.ltsp_instances`` / seeded ``fallback_instances`` when
+hypothesis is absent — the suite *runs* either way) cover head offsets beyond
+the last file, adjacent files (zero gaps), forced U-turn penalties, and the
+degenerate inputs the model must reject (zero-length files, overlapping
+files).  Properties asserted on every draw:
+
+* the exact DP's cost is <= every heuristic's / restricted DP's cost;
+* every reported cost is >= *VirtualLB* (``lower_bound_gap >= 1``);
+* python and pallas-interpret backends are bit-identical (cost *and*
+  detours) for the DP family;
+* every emitted schedule passes :func:`repro.core.verify.verify_schedule` —
+  structural validity plus the discrete-event simulator's independent cost
+  recomputation agreeing exactly with the solver-reported cost.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import HAS_HYPOTHESIS, fallback_instances, instances_property
+from repro.core import (
+    evaluate_detours,
+    list_solvers,
+    lower_bound_gap,
+    make_instance,
+    solve,
+    virtual_lb,
+)
+from repro.core.verify import verify_schedule
+from repro.serving.sim import replay_schedule
+
+DP_FAMILY = ("dp", "logdp1", "logdp5")
+
+
+# ---------------------------------------------------------------------------
+# differential properties
+# ---------------------------------------------------------------------------
+@instances_property(n_fallback=30, max_u=20, min_u=1, max_head_offset=30)
+def test_exact_dp_minimises_over_all_policies(inst):
+    """DP <= every policy; every cost is simulator-exact and >= VirtualLB."""
+    costs = {}
+    for policy in list_solvers():
+        res = solve(inst, policy=policy)
+        assert res.cost == evaluate_detours(inst, res.detours), policy
+        assert verify_schedule(inst, res.detours, cost=res.cost) == res.cost
+        costs[policy] = res.cost
+    assert all(costs["dp"] <= c for c in costs.values()), costs
+    # restricted DPs relax toward the exact DP as the span grows
+    assert costs["dp"] <= costs["logdp5"] <= costs["logdp1"]
+
+
+@instances_property(n_fallback=30, max_head_offset=40)
+def test_lower_bound_gap_well_defined(inst):
+    """Costs dominate VirtualLB: gap >= 1 whenever the bound is positive."""
+    lb = virtual_lb(inst)
+    assert lb >= 0
+    for policy in ("dp", "simpledp", "nodetour"):
+        cost = solve(inst, policy=policy).cost
+        assert cost >= lb
+        gap = lower_bound_gap(inst, cost)
+        assert gap >= 1.0 or lb == 0
+
+
+@instances_property(n_fallback=10, max_examples=15, max_files=5, max_size=12, min_u=1)
+def test_python_pallas_interpret_bit_parity(inst):
+    """Device backend == python backend, cost *and* detours, DP family."""
+    for policy in DP_FAMILY:
+        py = solve(inst, policy=policy, backend="python")
+        dev = solve(inst, policy=policy, backend="pallas-interpret")
+        assert (dev.cost, dev.detours) == (py.cost, py.detours), policy
+        assert verify_schedule(inst, dev.detours, cost=dev.cost) == py.cost
+
+
+@instances_property(n_fallback=25, max_u=18, max_head_offset=25)
+def test_replay_oracle_agrees_with_inline_evaluator(inst):
+    """The discrete-event replay and the inline evaluator agree on arbitrary
+    (even unhelpful) detour lists, not just solver output."""
+    R = inst.n_req
+    rng = np.random.default_rng(int(inst.m) + R)
+    for _ in range(4):
+        a = int(rng.integers(0, R))
+        dets = [(a, int(rng.integers(a, R)))]
+        if rng.random() < 0.5:
+            a2 = int(rng.integers(0, R))
+            dets.append((a2, int(rng.integers(a2, R))))
+        rep = replay_schedule(inst, dets)
+        assert rep.cost == evaluate_detours(inst, dets), dets
+        assert rep.makespan == max(rep.service_time)
+
+
+# ---------------------------------------------------------------------------
+# degenerate-input properties (model validation)
+# ---------------------------------------------------------------------------
+def test_zero_length_files_rejected():
+    """Zero-length files violate the model (positive read time) and must be
+    rejected at construction for any placement."""
+    rng = np.random.default_rng(20260731)
+    for _ in range(25):
+        R = int(rng.integers(1, 6))
+        sizes = rng.integers(1, 20, size=R)
+        sizes[int(rng.integers(0, R))] = 0  # one zero-length file
+        gaps = rng.integers(0, 10, size=R + 1)
+        left, pos = [], int(gaps[0])
+        for i in range(R):
+            left.append(pos)
+            pos += int(sizes[i] + gaps[i + 1])
+        with pytest.raises(AssertionError, match="positive size"):
+            make_instance(left, sizes, rng.integers(1, 4, size=R), m=pos)
+
+
+def test_overlapping_or_duplicate_files_rejected():
+    """Files sharing tape (duplicate positions / overlaps) must be rejected."""
+    rng = np.random.default_rng(20260801)
+    for _ in range(25):
+        R = int(rng.integers(2, 6))
+        inst_ok = fallback_instances(1, seed=int(rng.integers(2**31)),
+                                     min_files=R, max_files=R)[0]
+        left = inst_ok.left.tolist()
+        sizes = (inst_ok.right - inst_ok.left).tolist()
+        k = int(rng.integers(1, R))
+        if rng.random() < 0.5 or sizes[k - 1] < 2:
+            left[k] = left[k - 1]  # duplicate position
+        else:
+            # strict partial overlap: left[k-1] < left[k] < right[k-1]
+            left[k] = left[k - 1] + sizes[k - 1] // 2
+        with pytest.raises(AssertionError, match="disjoint"):
+            make_instance(left, sizes, inst_ok.mult, u_turn=3)
+
+
+def test_verify_schedule_rejects_malformed_detours():
+    inst = fallback_instances(1, seed=7, min_files=3, max_files=3)[0]
+    with pytest.raises(ValueError, match="out of range"):
+        verify_schedule(inst, [(0, 3)])
+    with pytest.raises(ValueError, match="out of range"):
+        verify_schedule(inst, [(-1, 1)])
+    with pytest.raises(ValueError, match="claimed cost"):
+        verify_schedule(inst, [], cost=solve(inst, policy="nodetour").cost + 1)
+
+
+def test_fallback_strategy_covers_required_regimes():
+    """The seeded fallback must exercise what the issue demands: adjacent
+    files, positive U-turn penalties, and head offsets beyond the last file."""
+    insts = fallback_instances(40, seed=123, min_u=0, max_u=10, max_head_offset=20)
+    assert any(
+        (i.n_req > 1 and (i.left[1:] == i.right[:-1]).any()) for i in insts
+    ), "no adjacent files drawn"
+    assert any(i.u_turn > 0 for i in insts)
+    assert any(i.m > int(i.right[-1]) for i in insts)
+
+
+def test_suite_mode_is_reported():
+    """Sanity marker: which mode this run executed in (visible via -rA)."""
+    assert HAS_HYPOTHESIS in (True, False)

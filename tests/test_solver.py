@@ -21,6 +21,7 @@ from repro.core import (
     solve_batch,
     virtual_lb,
 )
+from repro.core import SolveCache, UnsupportedBackendError
 from repro.core.solver import BACKENDS, DPSolver, register_solver
 
 POLICIES = [
@@ -47,6 +48,58 @@ def test_unknown_policy_and_backend_raise(rng):
     for policy in ("gs", "simpledp"):
         with pytest.raises(ValueError, match="backend"):
             solve(inst, policy=policy, backend="pallas-interpret")
+
+
+DEVICE_POLICIES = {"logdp1", "logdp5", "dp"}
+
+
+def test_supports_device_capability_flag_all_nine_policies():
+    """The registry capability flag matches the advertised backends for every
+    policy: exactly the DP family has a device path today."""
+    for name in POLICIES:
+        solver = get_solver(name)
+        expected = name in DEVICE_POLICIES
+        assert solver.supports_device is expected, name
+        assert ("pallas" in solver.backends) is expected, name
+        assert ("pallas-interpret" in solver.backends) is expected, name
+        assert "python" in solver.backends, name
+
+
+def test_unsupported_backend_error_is_typed_and_message_stable(rng):
+    """Device backends on python-only policies raise the typed error with the
+    documented message, via solve() AND solve_batch(), for all nine."""
+    inst = random_instance(rng, hi=5)
+    for name in POLICIES:
+        solver = get_solver(name)
+        for backend in ("pallas", "pallas-interpret"):
+            if solver.supports_device:
+                continue
+            expected_msg = (
+                f"policy {name!r} has no {backend!r} backend "
+                f"(supported: {solver.backends})"
+            )
+            with pytest.raises(UnsupportedBackendError) as ei:
+                solve(inst, policy=name, backend=backend)
+            assert str(ei.value) == expected_msg, name
+            assert isinstance(ei.value, ValueError)  # old callers keep working
+            assert (ei.value.policy, ei.value.backend) == (name, backend)
+            with pytest.raises(UnsupportedBackendError) as ei:
+                solve_batch([inst, inst], policy=name, backend=backend)
+            assert str(ei.value) == expected_msg, name
+
+
+def test_unsupported_backend_batch_fails_before_any_solve(rng):
+    """simpledp (and every python-only policy) on a device backend must be
+    all-or-nothing through solve_batch: no partial solving, no cache-miss
+    pollution before the raise."""
+    insts = [random_instance(rng, hi=5) for _ in range(3)]
+    cache = SolveCache()
+    with pytest.raises(UnsupportedBackendError):
+        solve_batch(insts, policy="simpledp", backend="pallas-interpret", cache=cache)
+    assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0}
+    with pytest.raises(UnsupportedBackendError):
+        solve(insts[0], policy="simpledp", backend="pallas", cache=cache)
+    assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0}
 
 
 def test_register_custom_solver(rng):
