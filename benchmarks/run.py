@@ -22,10 +22,14 @@ Paper artefacts reproduced (on the synthetic IN2P3-calibrated dataset):
     of mean/p95 request sojourn per admission policy (fifo / accumulate /
     preempt) on a seeded trace, every emitted schedule re-scored by the
     discrete-event simulator oracle; asserts accumulate-then-solve beats
-    per-request FIFO under load.
+    per-request FIFO under load.  Plus the drive-pool sweep: drive-count x
+    admission-policy (fifo-global / per-drive-accumulate / batched) with a
+    nonzero mount/unmount/load-seek cost model, showing how mount contention
+    degrades sojourn as the pool shrinks below one-drive-per-cartridge.
 
-All scheduling goes through the solver registry (``repro.core.solver``); every
-reported cost is re-validated against the exact trajectory simulator.
+All scheduling goes through the solver registry (``repro.core.solver``) under
+an ``ExecutionContext``; every reported cost is re-validated against the
+exact trajectory simulator.
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--full]``
 
@@ -41,6 +45,7 @@ the perf gate, so the perf trajectory of the repo is diffable PR over PR.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import sys
@@ -328,21 +333,22 @@ def bench_kernel_wavefront(full: bool = False):
 
 def bench_solve_batch(full: bool = False):
     """Bucketed multi-instance device launches vs per-instance python DP."""
-    from repro.core import solve, solve_batch
+    from repro.core import ExecutionContext, solve, solve_batch
     from repro.kernels.ltsp_dp.ops import plan_buckets, rescale_instance
 
     rng = np.random.default_rng(11)
     B = 8 if not full else 16
     insts = [_small_bench_instance(rng, int(rng.integers(6, 14))) for _ in range(B)]
     n_launches = len(plan_buckets([rescale_instance(i)[0] for i in insts]))
+    dev_ctx = ExecutionContext(backend="pallas-interpret")
 
     t0 = time.perf_counter()
-    py = [solve(i, policy="dp", backend="python") for i in insts]
+    py = [solve(i, policy="dp") for i in insts]
     dt_py = time.perf_counter() - t0
 
-    solve_batch(insts, policy="dp", backend="pallas-interpret")  # compile
+    solve_batch(insts, policy="dp", context=dev_ctx)  # compile
     t0 = time.perf_counter()
-    dev = solve_batch(insts, policy="dp", backend="pallas-interpret")
+    dev = solve_batch(insts, policy="dp", context=dev_ctx)
     dt_dev = time.perf_counter() - t0
 
     assert [r.cost for r in py] == [r.cost for r in dev], "batch parity violated"
@@ -441,7 +447,7 @@ def bench_policy_backends(full: bool = False):
     heterogeneous small-tape set (interpret mode emulates the kernel on CPU,
     so paper-scale instances would measure the emulator, not the policy).
     """
-    from repro.core import evaluate_detours, get_solver
+    from repro.core import ExecutionContext, evaluate_detours, get_solver
     from repro.core.solver import list_solvers
     from repro.data import BENCH_PROFILE, generate_dataset
 
@@ -454,11 +460,12 @@ def bench_policy_backends(full: bool = False):
         for backend in solver.backends:
             if backend == "pallas":  # compiled TPU: not available in CI
                 continue
+            ctx = ExecutionContext(backend=backend)
             ds = ds_py if backend == "python" else ds_dev
             if backend != "python":
-                solver.solve_batch(ds, backend)  # compile outside the clock
+                solver.solve_batch(ds, ctx)  # compile outside the clock
             t0 = time.perf_counter()
-            results = solver.solve_batch(ds, backend)
+            results = solver.solve_batch(ds, ctx)
             dt = time.perf_counter() - t0
             for inst, res in zip(ds, results):
                 assert res.cost == evaluate_detours(inst, res.detours), name
@@ -482,17 +489,18 @@ def bench_policy_backends(full: bool = False):
 def bench_tape_restore(full: bool = False):
     """System table: checkpoint-restore mean service time by scheduler.
 
-    The library carries a solve-memo cache; each policy is planned twice and
-    the warm re-plan (what a recovering fleet's next cold start pays) plus the
-    cache hit/miss counters land in the summary.
+    The library context carries a solve-memo cache; each policy is planned
+    twice and the warm re-plan (what a recovering fleet's next cold start
+    pays) plus the cache hit/miss counters land in the summary.
     """
-    from repro.core import SolveCache
+    from repro.core import ExecutionContext, SolveCache
     from repro.distributed.checkpoint import plan_restore
     from repro.storage.tape import TapeLibrary
 
     rng = np.random.default_rng(7)
     lib = TapeLibrary(
-        capacity_per_tape=2 * 10**9, u_turn=10_000_000, cache=SolveCache()
+        capacity_per_tape=2 * 10**9, u_turn=10_000_000,
+        context=ExecutionContext(cache=SolveCache()),
     )
     shards = []
     for i in range(60):
@@ -536,18 +544,28 @@ def bench_tape_restore(full: bool = False):
 
 
 def bench_online_serving(full: bool = False):
-    """Online tape-serving table: admission policy x arrival rate.
+    """Online tape-serving tables: admission x arrival rate, then the
+    drive-pool sweep (drive count x admission x mount cost model).
 
     A seeded Poisson-like trace (>= 200 requests, >= 4 cartridges) is served
-    through the per-cartridge queue service at several mean inter-arrival
-    times; each cell reports the exact per-request sojourn distribution (the
-    service time users experience) and the number of LTSP solves.  The
-    discrete-event simulator independently re-scores every emitted schedule
+    through the queue service at several mean inter-arrival times; each cell
+    reports the exact per-request sojourn distribution (the service time
+    users experience) and the number of LTSP solves.  The discrete-event
+    simulator independently re-scores every emitted schedule
     (``all_verified``), and the accumulate-then-solve admission must beat
     per-request FIFO at every swept rate — the online claim of the paper's
     objective, asserted on virtual time (no wall clocks).
+
+    The drive-pool sweep then prices the robotic-arm layer: ``n_drives`` in
+    {1, 2, n_tapes} under a nonzero mount/unmount/load-seek model for each
+    cross-cartridge admission (``fifo-global`` / ``per-drive-accumulate`` /
+    ``batched``); ``batched`` must schedule bit-identically to
+    ``per-drive-accumulate`` (it only changes how solves are batched onto
+    the device), and the dedicated pool must serve no worse than the
+    single-drive pool under every batching admission.
     """
-    from repro.serving.queue import ADMISSIONS, serve_trace
+    from repro.serving.drives import DriveCosts
+    from repro.serving.queue import LEGACY_ADMISSIONS, POOL_ADMISSIONS, serve_trace
     from repro.serving.sim import demo_library, poisson_trace
 
     seed = 20260731
@@ -566,7 +584,7 @@ def bench_online_serving(full: bool = False):
             build_library(), n_requests=n_requests, mean_interarrival=rate, seed=seed
         )
         per_admission: dict[str, float] = {}
-        for admission in ADMISSIONS:
+        for admission in LEGACY_ADMISSIONS:
             lib = build_library()
             t0 = time.perf_counter()
             report = serve_trace(
@@ -575,8 +593,7 @@ def bench_online_serving(full: bool = False):
                 admission,
                 window=window if admission == "accumulate" else 0,
                 policy="dp",
-                backend="python",
-                cache=lib.cache,
+                context=lib.context,
             )
             dt = time.perf_counter() - t0
             s = report.summary()  # verify=True: the oracle raised on any lie
@@ -593,15 +610,67 @@ def bench_online_serving(full: bool = False):
         assert per_admission["accumulate"] < per_admission["fifo"], (
             f"accumulate-then-solve must beat FIFO at rate {rate}"
         )
-    (RESULTS / "online_serving.json").write_text(json.dumps(rows, indent=1))
+
+    # -- drive-pool sweep: contention under an explicit mount cost model -----
+    costs = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+    rate = 100_000  # the loaded regime, where drive contention binds
+    trace = poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=rate, seed=seed
+    )
+    pool_rows = []
+    per_cell: dict[tuple[str, int], float] = {}
+    for admission in POOL_ADMISSIONS:
+        for n_drives in (1, 2, n_tapes):
+            lib = build_library()
+            t0 = time.perf_counter()
+            report = serve_trace(
+                lib,
+                trace,
+                admission,
+                window=window,
+                policy="dp",
+                n_drives=n_drives,
+                drive_costs=costs,
+                context=lib.context,
+            )
+            dt = time.perf_counter() - t0
+            s = report.summary()
+            assert s["n_served"] == n_requests and s["all_verified"]
+            per_cell[(admission, n_drives)] = s["mean_sojourn"]
+            pool_rows.append({"rate": rate, "wall_s": dt, **s})
+            _emit(
+                f"online/pool/{admission}/drives_{n_drives}",
+                dt * 1e6,
+                f"mean_sojourn={s['mean_sojourn']:.4g};"
+                f"p95={s['p95_sojourn']:.4g};batches={s['n_batches']};"
+                f"mounts={s['mounts']};unmounts={s['unmounts']}",
+            )
+    for n_drives in (1, 2, n_tapes):
+        # batched == per-drive-accumulate scheduling (one launch per tick is
+        # a solve-batching change, not a scheduling change)
+        assert per_cell[("batched", n_drives)] == per_cell[
+            ("per-drive-accumulate", n_drives)
+        ], n_drives
+    for admission in ("per-drive-accumulate", "batched"):
+        assert per_cell[(admission, n_tapes)] <= per_cell[(admission, 1)], (
+            f"{admission}: a dedicated pool must serve no worse than one drive"
+        )
+    (RESULTS / "online_serving.json").write_text(
+        json.dumps(rows + pool_rows, indent=1)
+    )
     RECORD["online_serving"] = {
         "seed": seed,
         "n_requests": n_requests,
         "n_tapes": n_tapes,
         "window": window,
         "rows": rows,
+        "drive_sweep": {
+            "costs": dataclasses.asdict(costs),
+            "rate": rate,
+            "rows": pool_rows,
+        },
     }
-    return rows
+    return rows + pool_rows
 
 
 def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:

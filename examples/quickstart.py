@@ -48,7 +48,12 @@ def main():
 
     # same policy, device backend: the Pallas wavefront + traceback must land
     # on a schedule with the identical optimal cost
-    dev = schedule_reads(tape, requests, policy="dp", backend="pallas-interpret")
+    from repro.core import ExecutionContext
+
+    dev = schedule_reads(
+        tape, requests, policy="dp",
+        context=ExecutionContext(backend="pallas-interpret"),
+    )
     assert dev.total_cost == plans["dp"].total_cost
     print(f"\npallas-interpret backend reproduces OPT = {dev.total_cost} exactly")
 

@@ -7,9 +7,10 @@ embedding shards every host needs early).  The LTSP schedulers order the
 reads; mean shard arrival time directly bounds how soon pods can begin
 resharding/loading.
 
-Policies and backends come from the solver registry
-(:mod:`repro.core.solver`); pass ``--backend pallas-interpret`` to plan every
-cartridge in one padded device launch.
+Policies come from the solver registry (:mod:`repro.core.solver`); the
+``ExecutionContext`` built from ``--backend`` selects the execution engine —
+pass ``--backend pallas-interpret`` to plan every cartridge in a few bucketed
+device launches (DP *and* SIMPLEDP batch on device now).
 
 Run: PYTHONPATH=src python examples/tape_restore.py [--backend python]
 """
@@ -22,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, reduced
+from repro.core import ExecutionContext
 from repro.core.solver import BACKENDS, DEFAULT_BACKEND
 from repro.distributed.checkpoint import archive_to_tape, plan_restore
 from repro.models.model import init_model
@@ -48,14 +50,18 @@ def main():
     print(f"\n{'policy':<10} {'mean arrival':>14} {'last arrival':>14} {'vs dp':>7}")
     results = {}
     for policy in ("nodetour", "gs", "fgs", "simpledp", "dp"):
-        backend = args.backend if policy in ("dp",) else "python"
+        backend = args.backend if policy in ("dp", "simpledp") else "python"
+        ctx = ExecutionContext(backend=backend)
         try:
-            plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+            plans = plan_restore(lib, shards, consumers, policy=policy, context=ctx)
         except ValueError as e:
             # e.g. the int32 device-DP magnitude guard on byte-scale tapes
             print(f"[{policy}/{backend}] {e}\n -> falling back to backend='python'")
             backend = "python"
-            plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+            plans = plan_restore(
+                lib, shards, consumers, policy=policy,
+                context=ExecutionContext(backend=backend),
+            )
         n_req = sum(consumers.values())
         mean = sum(p.total_cost for p in plans) / n_req
         last = max(max(p.service_time.values()) for p in plans)

@@ -1,12 +1,20 @@
 """LTSP core: the paper's exact DP algorithm, heuristics, and evaluators.
 
 Scheduling dispatch goes through the solver engine (:mod:`.solver`): pick a
-*policy* (algorithm) and a *backend* (``"python"`` | ``"pallas"`` |
-``"pallas-interpret"``) via :func:`solve`/:func:`solve_batch`, or register
-new policies with :func:`repro.core.solver.register_solver`.  The legacy
-``ALGORITHMS`` mapping is a thin read-only view over the registry.
+*policy* (algorithm) and an :class:`ExecutionContext` (backend, solve memo,
+bucketing/numeric options — see :mod:`.context`) via
+:func:`solve`/:func:`solve_batch`, or register new policies with
+:func:`repro.core.solver.register_solver`.  The legacy ``ALGORITHMS`` mapping
+is a thin read-only view over the registry; pre-context ``backend=``/
+``cache=`` keywords survive as warning-emitting deprecation shims.
 """
 
+from .context import (
+    DEFAULT_CONTEXT,
+    NUMERIC_POLICIES,
+    ExecutionContext,
+    resolve_context,
+)
 from .instance import Instance, make_instance, virtual_lb
 from .schedule import (
     evaluate_detours,
@@ -32,6 +40,10 @@ from .solver import (
 )
 
 __all__ = [
+    "ExecutionContext",
+    "DEFAULT_CONTEXT",
+    "NUMERIC_POLICIES",
+    "resolve_context",
     "Instance",
     "make_instance",
     "virtual_lb",

@@ -1,0 +1,133 @@
+"""``ExecutionContext``: one immutable object for *how* a solve executes.
+
+The scheduling API used to thread ``backend=str`` and ``cache=SolveCache``
+positionally through every layer (solver engine → tape library → serving
+queue → checkpoint restore → benchmarks → launchers), and each new execution
+option (bucketing, numeric policy, …) meant another keyword replicated across
+a dozen signatures.  :class:`ExecutionContext` bundles all of it:
+
+* ``backend`` — execution engine: ``"python"`` (exact CPU, default),
+  ``"pallas"`` (compiled TPU wavefront), ``"pallas-interpret"`` (same kernel
+  through the Pallas interpreter — the validated device path in this repo);
+* ``cache`` — an optional :class:`~repro.core.solver.SolveCache` memoising
+  repeated solves of identical request multisets;
+* ``bucketed`` — whether device batches go through the size-bucketed launch
+  planner (``False`` reproduces the seed's single maximally-padded launch,
+  kept for A/B benchmarking);
+* ``cand_tile`` — candidate-chunk height override for the banded wavefront
+  scan (``None`` = kernel default);
+* ``numeric_policy`` — what to do when an instance fails the int32 device
+  magnitude guard *after* gcd/shift rescaling: ``"strict"`` raises (default),
+  ``"f64"`` falls back to an exact float64 interpret-mode table for just the
+  failing instances (exact while every table value stays below 2**53).
+
+Contexts are frozen: derive variants with :meth:`ExecutionContext.replace`::
+
+    ctx = ExecutionContext(backend="pallas-interpret", cache=SolveCache())
+    res = solve(inst, policy="dp", context=ctx)
+    strict = ctx.replace(numeric_policy="strict")
+
+Every public scheduling entry point (``solve``/``solve_batch``, ``Solver``
+implementations, ``TapeLibrary``, ``schedule_reads``, ``plan_restore``,
+``OnlineTapeServer``/``serve_trace``) accepts ``context=``.  The pre-context
+``backend=``/``cache=`` keywords still work everywhere but are deprecation
+shims: they emit :class:`DeprecationWarning` and forward into a context via
+:func:`resolve_context`, bit-identical to the old paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (solver imports us)
+    from .solver import SolveCache
+
+__all__ = [
+    "BACKENDS",
+    "DEFAULT_BACKEND",
+    "NUMERIC_POLICIES",
+    "ExecutionContext",
+    "DEFAULT_CONTEXT",
+    "resolve_context",
+]
+
+BACKENDS = ("python", "pallas", "pallas-interpret")
+DEFAULT_BACKEND = "python"
+
+#: int32-guard-failure handling: raise, or fall back to exact f64 interpret.
+NUMERIC_POLICIES = ("strict", "f64")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """Immutable bundle of execution options for the scheduling API."""
+
+    backend: str = DEFAULT_BACKEND
+    cache: "SolveCache | None" = None
+    bucketed: bool = True
+    cand_tile: int | None = None
+    numeric_policy: str = "strict"
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise KeyError(
+                f"unknown backend {self.backend!r}; choose from {BACKENDS}"
+            )
+        if self.numeric_policy not in NUMERIC_POLICIES:
+            raise ValueError(
+                f"unknown numeric_policy {self.numeric_policy!r}; "
+                f"choose from {NUMERIC_POLICIES}"
+            )
+        if self.cand_tile is not None and self.cand_tile < 1:
+            raise ValueError("cand_tile must be >= 1 (or None for the default)")
+
+    def replace(self, **changes) -> "ExecutionContext":
+        """A copy with the given fields changed (contexts are immutable)."""
+        return dataclasses.replace(self, **changes)
+
+
+#: The default context: python backend, no cache, bucketed, strict numerics.
+DEFAULT_CONTEXT = ExecutionContext()
+
+
+def resolve_context(
+    context: ExecutionContext | None = None,
+    *,
+    backend: str | None = None,
+    cache: "SolveCache | None" = None,
+    default: ExecutionContext | None = None,
+    stacklevel: int = 3,
+) -> ExecutionContext:
+    """Merge legacy ``backend=``/``cache=`` keywords into a context.
+
+    This is the single deprecation shim behind every migrated signature:
+    ``context`` wins when given; otherwise legacy keywords (if any) emit one
+    :class:`DeprecationWarning` and are folded over ``default`` (the enclosing
+    object's context, or :data:`DEFAULT_CONTEXT`).  Results are bit-identical
+    to the pre-context code paths — only the plumbing changed.
+    """
+    base = default if default is not None else DEFAULT_CONTEXT
+    if context is not None:
+        if backend is not None or cache is not None:
+            raise TypeError(
+                "pass either context= or the deprecated backend=/cache= "
+                "keywords, not both"
+            )
+        return context
+    if backend is None and cache is None:
+        return base
+    legacy = [k for k, v in (("backend", backend), ("cache", cache)) if v is not None]
+    warnings.warn(
+        f"the {'/'.join(legacy)} keyword(s) are deprecated; pass "
+        f"context=ExecutionContext(...) instead (see repro.core.context)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    changes: dict = {}
+    if backend is not None:
+        changes["backend"] = backend
+    if cache is not None:
+        changes["cache"] = cache
+    return base.replace(**changes)

@@ -1,10 +1,11 @@
 """First-class solver engine: a ``Solver`` protocol + policy registry.
 
-Every scheduling caller in the repo (``storage/tape.py``, ``benchmarks/run.py``,
-``launch/serve.py``, the examples) dispatches through this module instead of a
-flat name→lambda dict.  A *policy* names an algorithm from the paper (``"dp"``,
-``"simpledp"``, ``"logdp1"``, heuristics …); a *backend* names an execution
-engine for it:
+Every scheduling caller in the repo (``storage/tape.py``, ``serving/queue.py``,
+``benchmarks/run.py``, ``launch/serve.py``, the examples) dispatches through
+this module instead of a flat name→lambda dict.  A *policy* names an algorithm
+from the paper (``"dp"``, ``"simpledp"``, ``"logdp1"``, heuristics …); an
+:class:`~repro.core.context.ExecutionContext` says *how* to run it — which
+backend, which solve memo, bucketing and numeric options:
 
 * ``"python"`` — exact Python-int CPU implementation (default, always
   available, arbitrary magnitudes);
@@ -13,16 +14,25 @@ engine for it:
 * ``"pallas-interpret"`` — the same kernel through the Pallas interpreter
   (runs on CPU; the validated device path in this repo).
 
-Both device backends return full ``(cost, detours)`` solutions via the
+The device backends return full ``(cost, detours)`` solutions via the
 kernel's argmin planes + host traceback, and batch several instances into a
-single launch through :meth:`Solver.solve_batch`.
+few size-bucketed launches through :meth:`Solver.solve_batch`.  The DP family
+*and* SIMPLEDP run on all three backends (SIMPLEDP clips the wavefront's
+candidate band to root-level detours — the disjoint-detour restriction — via
+the same mechanism that clips LOGDP spans); the list heuristics are
+python-only.
 
 Usage::
 
-    from repro.core import solve, solve_batch, get_solver, list_solvers
+    from repro.core import ExecutionContext, solve, solve_batch
 
-    res = solve(inst, policy="dp", backend="pallas-interpret")
+    ctx = ExecutionContext(backend="pallas-interpret", cache=SolveCache())
+    res = solve(inst, policy="dp", context=ctx)
     res.cost, res.detours
+
+The pre-context keywords (``solve(inst, policy, backend="...", cache=...)``)
+remain available as deprecation shims: they emit ``DeprecationWarning`` and
+forward into a context, bit-identical to the old paths.
 
 Registering a custom policy::
 
@@ -36,9 +46,9 @@ Memoising repeated solves
 -------------------------
 Serving and restore loops frequently re-plan *identical* tapes (the same
 request multiset against the same cartridge).  :class:`SolveCache` is a
-bounded LRU memo for those: pass one to :func:`solve`/:func:`solve_batch`
-(or hang it on a ``TapeLibrary``) and repeated identical solves return the
-stored result without touching a backend.
+bounded LRU memo for those: hang one on the :class:`ExecutionContext` (or a
+``TapeLibrary``'s context) and repeated identical solves return the stored
+result without touching a backend.
 
 The cache key is the **canonicalized request multiset**:
 ``(policy, backend, m, u_turn, left.tobytes(), right.tobytes(),
@@ -50,8 +60,15 @@ captures array *contents* at call time and hits return a fresh
 :class:`SolveResult` (detours copied), so mutating an instance or a returned
 schedule never aliases into — or invalidates silently — a cached entry.
 ``backend`` is part of the key because a hit reports the backend that
-actually computed it; all backends are bit-identical, so sharing keys across
-backends would be sound but would misreport provenance.
+actually computed it; all backends are bit-identical (the f64 fallback only
+fires where strict mode would raise, and is exact in its domain), so sharing
+keys across backends would be sound but would misreport provenance.  The
+remaining context options (bucketing, ``cand_tile``, ``numeric_policy``)
+never change results, so they stay out of the key — deliberately, including
+``numeric_policy``: a strict-policy call may therefore consume a result an
+f64-policy call cached earlier instead of raising the int32-guard error
+(the value is identical either way; only share a cache across numeric
+policies if that error-signalling looseness is acceptable).
 
 The legacy ``ALGORITHMS`` mapping is kept as a read-only view over the
 registry (name → ``inst -> detours`` callable) for downstream code that only
@@ -61,10 +78,18 @@ wants detour lists.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from collections.abc import Mapping
 from typing import Callable, Protocol, runtime_checkable
 
+from .context import (
+    BACKENDS,
+    DEFAULT_BACKEND,
+    DEFAULT_CONTEXT,
+    ExecutionContext,
+    resolve_context,
+)
 from .dp import dp_schedule, logdp_span, simpledp_schedule
 from .heuristics import fgs, gs, lognfgs, nfgs, no_detour
 from .instance import Instance
@@ -73,6 +98,8 @@ from .schedule import evaluate_detours
 __all__ = [
     "BACKENDS",
     "DEFAULT_BACKEND",
+    "ExecutionContext",
+    "DEFAULT_CONTEXT",
     "UnsupportedBackendError",
     "SolveResult",
     "SolveCache",
@@ -87,9 +114,6 @@ __all__ = [
     "solve_batch",
     "ALGORITHMS",
 ]
-
-BACKENDS = ("python", "pallas", "pallas-interpret")
-DEFAULT_BACKEND = "python"
 
 
 class UnsupportedBackendError(ValueError):
@@ -186,6 +210,37 @@ class SolveCache:
         self.misses = 0
 
 
+def _as_context(context: ExecutionContext | str) -> ExecutionContext:
+    """Deprecation shim: accept a bare backend string where a context is due.
+
+    Pre-context code called ``solver.solve(inst, "pallas-interpret")``; that
+    keeps working (one ``DeprecationWarning``, then the string becomes the
+    context's backend) so the seed surface is source-compatible.
+    """
+    if isinstance(context, ExecutionContext):
+        return context
+    warnings.warn(
+        "passing a backend string to Solver.solve/solve_batch is deprecated; "
+        "pass context=ExecutionContext(backend=...) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return DEFAULT_CONTEXT.replace(backend=context)
+
+
+def _device_kwargs(ctx: ExecutionContext, disjoint: bool = False) -> dict:
+    """Kernel options a device-backed solver derives from the context."""
+    kwargs: dict = {
+        "interpret": ctx.backend == "pallas-interpret",
+        "numeric_policy": ctx.numeric_policy,
+    }
+    if disjoint:
+        kwargs["disjoint"] = True
+    if ctx.cand_tile is not None:
+        kwargs["cand_tile"] = ctx.cand_tile
+    return kwargs
+
+
 @runtime_checkable
 class Solver(Protocol):
     """Protocol every registered policy implements."""
@@ -202,13 +257,15 @@ class Solver(Protocol):
     def supports_device(self) -> bool:
         """Capability flag: True iff a ``pallas*`` backend is implemented."""
 
-    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
-        """Solve one instance."""
+    def solve(
+        self, inst: Instance, context: ExecutionContext = DEFAULT_CONTEXT
+    ) -> SolveResult:
+        """Solve one instance under the given execution context."""
 
     def solve_batch(
-        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+        self, instances: list[Instance], context: ExecutionContext = DEFAULT_CONTEXT
     ) -> list[SolveResult]:
-        """Solve several instances (device backends: one padded launch)."""
+        """Solve several instances (device backends: bucketed launches)."""
 
 
 def _check_backend(solver: "Solver", backend: str) -> None:
@@ -238,16 +295,24 @@ class HeuristicSolver:
     def supports_device(self) -> bool:
         return False
 
-    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
-        _check_backend(self, backend)
+    def solve(
+        self, inst: Instance, context: ExecutionContext | str = DEFAULT_CONTEXT
+    ) -> SolveResult:
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
         detours = self.fn(inst)
-        return SolveResult(self.name, backend, evaluate_detours(inst, detours), detours)
+        return SolveResult(
+            self.name, ctx.backend, evaluate_detours(inst, detours), detours
+        )
 
     def solve_batch(
-        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+        self,
+        instances: list[Instance],
+        context: ExecutionContext | str = DEFAULT_CONTEXT,
     ) -> list[SolveResult]:
-        _check_backend(self, backend)  # all-or-nothing: never fail mid-batch
-        return [self.solve(inst, backend) for inst in instances]
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)  # all-or-nothing: never fail mid-batch
+        return [self.solve(inst, ctx) for inst in instances]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,7 +322,7 @@ class DPSolver:
     ``span_policy`` maps ``n_req`` to the maximum detour span (``None`` =
     unrestricted = exact DP).  All three backends are available; the device
     backends batch by span value so one launch serves every instance that
-    shares a span.
+    shares a span, and honour the context's bucketing/numeric options.
     """
 
     name: str
@@ -276,28 +341,34 @@ class DPSolver:
     def _span(self, inst: Instance) -> int | None:
         return None if self.span_policy is None else self.span_policy(inst.n_req)
 
-    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
-        _check_backend(self, backend)
-        if backend == "python":
+    def solve(
+        self, inst: Instance, context: ExecutionContext | str = DEFAULT_CONTEXT
+    ) -> SolveResult:
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
+        if ctx.backend == "python":
             cost, detours = dp_schedule(inst, span=self._span(inst))
         else:
             from ..kernels.ltsp_dp.ops import ltsp_solve_instance
 
             cost, detours = ltsp_solve_instance(
-                inst, span=self._span(inst), interpret=backend == "pallas-interpret"
+                inst, span=self._span(inst), **_device_kwargs(ctx)
             )
-        return SolveResult(self.name, backend, cost, detours)
+        return SolveResult(self.name, ctx.backend, cost, detours)
 
     def solve_batch(
-        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+        self,
+        instances: list[Instance],
+        context: ExecutionContext | str = DEFAULT_CONTEXT,
     ) -> list[SolveResult]:
-        _check_backend(self, backend)
-        if backend == "python":
-            return [self.solve(inst, backend) for inst in instances]
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
+        if ctx.backend == "python":
+            return [self.solve(inst, ctx) for inst in instances]
         from ..kernels.ltsp_dp.ops import ltsp_solve_batch
 
-        # one padded launch per distinct span (the span is a static kernel
-        # parameter; unrestricted DP always groups into a single launch)
+        # one bucketed launch set per distinct span (the span is a static
+        # kernel parameter; unrestricted DP always groups into one set)
         groups: dict[int | None, list[int]] = {}
         for i, inst in enumerate(instances):
             groups.setdefault(self._span(inst), []).append(i)
@@ -306,19 +377,24 @@ class DPSolver:
             solved = ltsp_solve_batch(
                 [instances[i] for i in idxs],
                 span=span,
-                interpret=backend == "pallas-interpret",
+                bucketed=ctx.bucketed,
+                **_device_kwargs(ctx),
             )
             for i, (cost, detours) in zip(idxs, solved):
-                results[i] = SolveResult(self.name, backend, cost, detours)
+                results[i] = SolveResult(self.name, ctx.backend, cost, detours)
         return results  # type: ignore[return-value]
 
 
 @dataclasses.dataclass(frozen=True)
 class SimpleDPSolver:
-    """SIMPLEDP (disjoint detours, 2-D table); python backend only today.
+    """SIMPLEDP (disjoint detours, 2-D table); all three backends.
 
-    A device formulation exists on paper (the table is a strict restriction
-    of the full DP's) but is not implemented — tracked in ROADMAP.
+    The python backend evaluates the dedicated 2-D recursion
+    (:func:`repro.core.dp.simpledp_schedule`).  The device backends reuse the
+    full wavefront kernel with its candidate band clipped to root-level cells
+    (``disjoint=True``) — forbidding detours inside detours collapses the 3-D
+    table to SIMPLEDP's exactly (same mechanism as the LOGDP span clip), so
+    cost *and* traceback are bit-identical to the python recursion.
     """
 
     name: str = "simpledp"
@@ -327,22 +403,45 @@ class SimpleDPSolver:
 
     @property
     def backends(self) -> tuple[str, ...]:
-        return ("python",)
+        return BACKENDS
 
     @property
     def supports_device(self) -> bool:
-        return False
+        return True
 
-    def solve(self, inst: Instance, backend: str = DEFAULT_BACKEND) -> SolveResult:
-        _check_backend(self, backend)
-        cost, detours = simpledp_schedule(inst)
-        return SolveResult(self.name, backend, cost, detours)
+    def solve(
+        self, inst: Instance, context: ExecutionContext | str = DEFAULT_CONTEXT
+    ) -> SolveResult:
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
+        if ctx.backend == "python":
+            cost, detours = simpledp_schedule(inst)
+        else:
+            from ..kernels.ltsp_dp.ops import ltsp_solve_instance
+
+            cost, detours = ltsp_solve_instance(
+                inst, **_device_kwargs(ctx, disjoint=True)
+            )
+        return SolveResult(self.name, ctx.backend, cost, detours)
 
     def solve_batch(
-        self, instances: list[Instance], backend: str = DEFAULT_BACKEND
+        self,
+        instances: list[Instance],
+        context: ExecutionContext | str = DEFAULT_CONTEXT,
     ) -> list[SolveResult]:
-        _check_backend(self, backend)  # all-or-nothing: never fail mid-batch
-        return [self.solve(inst, backend) for inst in instances]
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
+        if ctx.backend == "python":
+            return [self.solve(inst, ctx) for inst in instances]
+        from ..kernels.ltsp_dp.ops import ltsp_solve_batch
+
+        solved = ltsp_solve_batch(
+            instances, bucketed=ctx.bucketed, **_device_kwargs(ctx, disjoint=True)
+        )
+        return [
+            SolveResult(self.name, ctx.backend, cost, detours)
+            for cost, detours in solved
+        ]
 
 
 # ---------------------------------------------------------------------------
@@ -376,50 +475,64 @@ def list_solvers() -> list[str]:
 def solve(
     inst: Instance,
     policy: str = "dp",
-    backend: str = DEFAULT_BACKEND,
+    backend: str | None = None,
     cache: SolveCache | None = None,
+    *,
+    context: ExecutionContext | None = None,
 ) -> SolveResult:
-    """Solve one instance with a registered policy (optionally memoised)."""
+    """Solve one instance with a registered policy.
+
+    ``context`` carries the execution options (backend, memo cache, bucketing,
+    numeric policy); ``backend=``/``cache=`` are the deprecated pre-context
+    spellings and forward into one (with a ``DeprecationWarning``).
+    """
+    ctx = resolve_context(context, backend=backend, cache=cache)
     solver = get_solver(policy)
-    _check_backend(solver, backend)  # before the cache: no miss-count pollution
-    if cache is not None:
-        hit = cache.get(inst, policy, backend)
+    _check_backend(solver, ctx.backend)  # before the cache: no miss-count pollution
+    memo = ctx.cache
+    if memo is not None:
+        hit = memo.get(inst, policy, ctx.backend)
         if hit is not None:
             return hit
-    res = solver.solve(inst, backend)
-    if cache is not None:
-        cache.put(inst, policy, backend, res)
+    res = solver.solve(inst, ctx)
+    if memo is not None:
+        memo.put(inst, policy, ctx.backend, res)
     return res
 
 
 def solve_batch(
     instances: list[Instance],
     policy: str = "dp",
-    backend: str = DEFAULT_BACKEND,
+    backend: str | None = None,
     cache: SolveCache | None = None,
+    *,
+    context: ExecutionContext | None = None,
 ) -> list[SolveResult]:
     """Solve a batch; device backends pack it into size-bucketed launches.
 
-    With a ``cache``, hits are served from the memo and only the misses go to
-    the backend (in one bucketed batch), so re-planning a mostly-repeated
-    request mix only pays for the novel tapes.
+    With a cache on the context, hits are served from the memo and only the
+    misses go to the backend (in one bucketed batch), so re-planning a
+    mostly-repeated request mix only pays for the novel tapes.
 
     An unsupported policy/backend combination raises
     :class:`UnsupportedBackendError` before any instance is solved or any
     cache entry is touched — a batch is all-or-nothing, never mid-flight.
+    ``backend=``/``cache=`` are deprecation shims, as in :func:`solve`.
     """
+    ctx = resolve_context(context, backend=backend, cache=cache)
     solver = get_solver(policy)
-    _check_backend(solver, backend)
-    if cache is None:
-        return solver.solve_batch(instances, backend)
+    _check_backend(solver, ctx.backend)
+    memo = ctx.cache
+    if memo is None:
+        return solver.solve_batch(instances, ctx)
     results: list[SolveResult | None] = [
-        cache.get(inst, policy, backend) for inst in instances
+        memo.get(inst, policy, ctx.backend) for inst in instances
     ]
     miss = [i for i, r in enumerate(results) if r is None]
     if miss:
-        solved = solver.solve_batch([instances[i] for i in miss], backend)
+        solved = solver.solve_batch([instances[i] for i in miss], ctx)
         for i, res in zip(miss, solved):
-            cache.put(instances[i], policy, backend, res)
+            memo.put(instances[i], policy, ctx.backend, res)
             results[i] = res
     return results  # type: ignore[return-value]
 

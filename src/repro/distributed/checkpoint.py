@@ -104,21 +104,30 @@ def plan_restore(
     shard_names: list[str],
     consumers_per_shard: int | dict[str, int] = 1,
     policy: str = "simpledp",
-    backend: str = "python",
+    backend: str | None = None,
     cache=None,
+    *,
+    context=None,
 ) -> list[ReadPlan]:
     """LTSP-scheduled restore: order shard reads to minimise mean arrival.
 
     ``consumers_per_shard`` is the request multiplicity (e.g. the number of
     pods that need the shard before they can start their reshard step).
-    ``policy``/``backend`` select any registered solver and execution engine
-    (see :mod:`repro.core.solver`); device backends plan every cartridge in a
-    few size-bucketed launches.  ``cache`` (a :class:`repro.core.SolveCache`,
-    defaulting to the library's own) memoises the per-cartridge solutions so
-    a restore re-planned against an unchanged archive is pure cache hits.
+    ``policy`` selects any registered solver; ``context`` (an
+    :class:`repro.core.ExecutionContext`, defaulting to the library's own)
+    selects backend/cache/numeric options — with the library context carrying
+    a :class:`repro.core.SolveCache`, a restore re-planned against an
+    unchanged archive is pure cache hits.  Device backends plan every
+    cartridge in a few size-bucketed launches.  ``backend=``/``cache=`` are
+    the deprecated pre-context spellings (warn, then fold into a context).
     """
+    from ..core.context import resolve_context
+
+    ctx = resolve_context(
+        context, backend=backend, cache=cache, default=library.context
+    )
     if isinstance(consumers_per_shard, int):
         requests = {n: consumers_per_shard for n in shard_names}
     else:
         requests = dict(consumers_per_shard)
-    return library.schedule(requests, policy=policy, backend=backend, cache=cache)
+    return library.schedule(requests, policy=policy, context=ctx)

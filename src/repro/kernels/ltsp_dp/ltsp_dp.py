@@ -19,7 +19,10 @@ operand, so the same compiled kernel serves every diagonal.
 Banded candidate scan
 ---------------------
 A cell ``(a, b)`` on diagonal ``d = b - a`` has exactly ``d`` detour
-candidates ``c in (a, b]`` (fewer under a LOGDP span restriction).  The seed
+candidates ``c in (a, b]`` (fewer under a LOGDP span restriction; none on
+non-root cells under the SIMPLEDP ``disjoint=True`` restriction, which clips
+the candidate band to ``a == 0`` cells — forbidding detours inside detours
+collapses the table to SIMPLEDP's 2-D recursion exactly).  The seed
 kernel materialised the full ``[R-1, S]`` candidate tile for every cell and
 masked the dead rows — about 2x redundant VPU work over the whole table
 (``sum_d d`` live rows vs ``sum_d (R-1)`` computed ones).  The kernel now
@@ -71,7 +74,10 @@ Layout notes
   so instances up to R = 129 take the single-tile fallback, while large
   instances stream the band in 128-row tiles.
 * ``dtype`` is ``float32`` (exact for values < 2**24, the oracle-comparison
-  path) or ``int32`` (exact for values < 2**31, the solver path).
+  path), ``int32`` (exact for values < 2**31, the solver path), or
+  ``float64`` (exact for values < 2**53 — the interpret-mode numeric
+  fallback in :mod:`.ops` for instances whose coprime byte-scale coordinates
+  fail the int32 guard even after gcd/shift rescaling).
 * The ``skip`` term needs the shifted gather ``row[s + x_b]``; ``x_b`` is a
   scalar per program, so it is a single dynamic-slice + clamp, not a general
   gather.
@@ -110,6 +116,7 @@ def wavefront_kernel(
     *,
     S: int,
     span: int | None,
+    disjoint: bool,
     cand_tile: int,
 ):
     a = pl.program_id(1)
@@ -140,7 +147,11 @@ def wavefront_kernel(
     col = col_ref[0, :, 0, :]  # [R, S]  — T[:, b, :]
 
     # ---------------- skip(a, b, s) ----------------------------------------
-    row_bm1 = jax.lax.dynamic_slice(row, (b - 1, 0), (1, S))  # [1, S]
+    # index literals pinned to int32: under the scoped x64 context of the f64
+    # fallback a bare 0 would arrive as int64 and dynamic_slice rejects
+    # mixed-dtype indices
+    z = jnp.int32(0)
+    row_bm1 = jax.lax.dynamic_slice(row, (b - 1, z), (1, S))  # [1, S]
     x_b = at(xs, b)
     idx = jnp.clip(jax.lax.broadcasted_iota(jnp.int32, (1, S), 1) + x_b, 0, S - 1)
     shifted = jnp.take_along_axis(row_bm1, idx, axis=1)  # T[a, b-1, s + x_b]
@@ -155,16 +166,23 @@ def wavefront_kernel(
 
     # ---------------- min over detour_c, banded to a < c <= b --------------
     # Live candidates: c in (a, b], further clipped to c >= b - span under a
-    # LOGDP restriction.  T rows outside the wavefront are zeros, so computed
-    # candidates stay finite/representable before the mask applies.
+    # LOGDP restriction, and to the empty band on non-root cells under the
+    # SIMPLEDP restriction (disjoint detours = no detour may start inside
+    # another, i.e. cells with a > 0 may only skip; the 3-D table then
+    # collapses to SIMPLEDP's 2-D recursion exactly, traceback included).
+    # T rows outside the wavefront are zeros, so computed candidates stay
+    # finite/representable before the mask applies.
     c_min = a + 1
     if span is not None:  # LOGDP restriction: b - c <= span
         c_min = jnp.maximum(c_min, b - span)
+    if disjoint:  # SIMPLEDP restriction: detours only at the root level
+        c_min = jnp.where(a > 0, b + 1, c_min)
 
     def chunk_vals(c0, n_rows: int):
         """Candidates ``c = c0 + j`` for ``j in [0, n_rows)`` (+mask tail)."""
-        t_left = jax.lax.dynamic_slice(row, (c0 - 1, 0), (n_rows, S))  # T[a,c-1,s]
-        t_right = jax.lax.dynamic_slice(col, (c0, 0), (n_rows, S))  # T[c,b,s]
+        c0 = jnp.asarray(c0, jnp.int32)  # fori_loop index may be int64 (x64)
+        t_left = jax.lax.dynamic_slice(row, (c0 - 1, z), (n_rows, S))  # T[a,c-1,s]
+        t_right = jax.lax.dynamic_slice(col, (c0, z), (n_rows, S))  # T[c,b,s]
         r_cm1 = jax.lax.dynamic_slice(rights, (c0 - 1,), (n_rows,))
         nl_c = jax.lax.dynamic_slice(nls, (c0,), (n_rows,))
         svec_d = jax.lax.broadcasted_iota(dtype, (n_rows, S), 1)
@@ -227,6 +245,7 @@ def ltsp_dp_wavefront(
     *,
     S: int,
     span: int | None,
+    disjoint: bool = False,
     interpret: bool = True,
     cand_tile: int = DEFAULT_CAND_TILE,
 ) -> tuple[jax.Array, jax.Array]:
@@ -237,7 +256,9 @@ def ltsp_dp_wavefront(
     passed twice (row view + column view) and never mapped whole into VMEM.
     """
     B, R = left.shape
-    kern = functools.partial(wavefront_kernel, S=S, span=span, cand_tile=cand_tile)
+    kern = functools.partial(
+        wavefront_kernel, S=S, span=span, disjoint=disjoint, cand_tile=cand_tile
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # d — consumed by the column index map below
         grid=(B, R),
@@ -281,7 +302,7 @@ def ltsp_dp_wavefront(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("S", "span", "interpret", "cand_tile")
+    jax.jit, static_argnames=("S", "span", "disjoint", "interpret", "cand_tile")
 )
 def ltsp_dp_tables(
     left: jax.Array,  # [B, R]
@@ -292,6 +313,7 @@ def ltsp_dp_tables(
     *,
     S: int,
     span: int | None = None,
+    disjoint: bool = False,
     interpret: bool = True,
     cand_tile: int = DEFAULT_CAND_TILE,
 ) -> tuple[jax.Array, jax.Array]:
@@ -322,7 +344,8 @@ def ltsp_dp_tables(
         T, C = carry
         vals, chos = ltsp_dp_wavefront(
             T, left, right, x, nl, u, d,
-            S=S, span=span, interpret=interpret, cand_tile=cand_tile,
+            S=S, span=span, disjoint=disjoint, interpret=interpret,
+            cand_tile=cand_tile,
         )
         T = T.at[:, rr, rr + d, :].set(vals, mode="drop")
         C = C.at[:, rr, rr + d, :].set(chos, mode="drop")

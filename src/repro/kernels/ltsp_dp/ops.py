@@ -6,7 +6,7 @@ wavefront, see :mod:`.ltsp_dp`) returns the value table *and* per-cell argmin
 planes; :func:`traceback_detours` replays the argmin planes on the host to
 reconstruct the optimal detour list, exactly like the Python DP's traceback.
 
-Two numeric modes:
+Three numeric modes:
 
 * ``int32`` (solver default) — bit-exact while every table value fits in
   int32.  Before the :func:`_check_int32_safe` magnitude guard runs,
@@ -15,11 +15,26 @@ Two numeric modes:
   every DP term is a coordinate *difference*, so the whole table scales by
   exactly ``1/g`` and the argmin structure (ties included) is untouched.
   Real cartridge layouts share the tape's block granularity, so byte
-  coordinates far beyond int32 rescale into range; the guard raises with the
-  old rescaling hint only when the gcd-reduced instance still overflows.
+  coordinates far beyond int32 rescale into range; the guard rejects only
+  genuinely coprime byte-scale layouts.
+* ``float64`` (``numeric_policy="f64"`` fallback, exact for values < 2**53) —
+  instances the int32 guard rejects are re-solved through the same wavefront
+  in float64 **interpret** mode (f64 is emulated on TPU VPUs, so the
+  compiled backend is not offered; the fallback is a CPU-side escape hatch
+  for the rare coprime layouts).  Integer table values below 2**53 are
+  exactly representable, so within :func:`_check_f64_safe`'s bound the
+  result is still bit-identical to the python DP; beyond it the guard raises
+  either way.  Selected via ``ExecutionContext.numeric_policy``; the default
+  ``"strict"`` keeps the old raise.
 * ``float32`` (oracle-comparison default, exact for values < 2**24) — used by
   the seed-compatible :func:`ltsp_dp_table`/:func:`ltsp_opt` wrappers that the
   kernel tests diff against :mod:`.ref`.
+
+``disjoint=True`` routes SIMPLEDP through the same kernel: the candidate band
+is clipped to root-level cells (no detour may start inside another), which
+collapses the 3-D table to SIMPLEDP's 2-D recursion — same mechanism as the
+LOGDP ``span`` clip, bit-identical to :func:`repro.core.dp.simpledp_schedule`
+(cost *and* traceback).
 
 Batching and the bucket planner
 -------------------------------
@@ -203,25 +218,43 @@ def rescale_instance(inst: Instance) -> tuple[Instance, int]:
     return scaled, g
 
 
-def _check_int32_safe(instances: list[Instance]) -> None:
-    """Conservative guard: every table value must stay well inside int32.
+def _table_bound(inst: Instance) -> int:
+    """Conservative bound on any candidate sum the kernel ever forms.
 
     Expanding any cell's recursion, the ``2 Δr (s + n_l)`` movement terms
     telescope to at most ``2n * 2m``, the base terms add at most ``2n * m``,
     and at most R detours each add ``2 U * 2n`` — so every cell is below
     ``2n (3m + R U)`` and every candidate sum below
-    ``2n (7m + (2R + 1) U)``; we require ``2n (8m + (2R + 2) U) < 2**31``.
+    ``2n (7m + (2R + 1) U)``; we bound with ``2n (8m + (2R + 2) U)``.
     Callers pass :func:`rescale_instance` output, so ``m`` here is already the
-    gcd-reduced *requested span*; raising means the instance genuinely
-    overflows even at tape-block granularity.
+    gcd-reduced *requested span*.
     """
+    return 2 * inst.n * (8 * inst.m + (2 * inst.n_req + 2) * inst.u_turn)
+
+
+def _check_int32_safe(instances: list[Instance]) -> None:
+    """Magnitude guard for the int32 table: raising means the instance
+    genuinely overflows even at tape-block granularity (after gcd/shift
+    rescaling)."""
     for inst in instances:
-        bound = 2 * inst.n * (8 * inst.m + (2 * inst.n_req + 2) * inst.u_turn)
-        if bound >= 2**31:
+        if _table_bound(inst) >= 2**31:
             raise ValueError(
                 f"instance too large for the int32 device DP even after gcd "
                 f"rescaling (m={inst.m}, n={inst.n}, R={inst.n_req}): rescale "
-                f"coordinates to a coarser grain or use backend='python'"
+                f"coordinates to a coarser grain, use backend='python', or "
+                f"opt into the exact float64 interpret fallback with "
+                f"numeric_policy='f64'"
+            )
+
+
+def _check_f64_safe(instances: list[Instance]) -> None:
+    """Exactness-domain guard for the float64 fallback (< 2**53)."""
+    for inst in instances:
+        if _table_bound(inst) >= 2**53:
+            raise ValueError(
+                f"instance too large even for the exact float64 device DP "
+                f"(m={inst.m}, n={inst.n}, R={inst.n_req}): integer table "
+                f"values would exceed 2**53; use backend='python'"
             )
 
 
@@ -252,17 +285,20 @@ def traceback_detours(choice: np.ndarray, mult: np.ndarray) -> list[tuple[int, i
 
 
 # ---------------------------------------------------------------------------
-# solver entry points (int32, exact)
+# solver entry points (int32 exact; float64 interpret fallback)
 # ---------------------------------------------------------------------------
 def ltsp_solve_instance(
     inst: Instance,
     span: int | None = None,
     interpret: bool = True,
     cand_tile: int = DEFAULT_CAND_TILE,
+    disjoint: bool = False,
+    numeric_policy: str = "strict",
 ) -> tuple[int, list[tuple[int, int]]]:
-    """Device-solved ``(opt_cost, detours)`` for one instance (exact int32)."""
+    """Device-solved ``(opt_cost, detours)`` for one instance (exact)."""
     return ltsp_solve_batch([inst], span=span, interpret=interpret,
-                            cand_tile=cand_tile)[0]
+                            cand_tile=cand_tile, disjoint=disjoint,
+                            numeric_policy=numeric_policy)[0]
 
 
 def _solve_packed(
@@ -275,14 +311,16 @@ def _solve_packed(
     span: int | None,
     interpret: bool,
     cand_tile: int,
+    disjoint: bool = False,
+    dtype=jnp.int32,
 ) -> list[tuple[int, list[tuple[int, int]]]]:
     """One padded device launch; results refer to the *original* instances."""
     left, right, x, nl, u, S = prepare_batch(
-        scaled, dtype=jnp.int32, R_pad=R_pad, S_pad=S_pad, B_pad=B_pad
+        scaled, dtype=dtype, R_pad=R_pad, S_pad=S_pad, B_pad=B_pad
     )
     T, C = ltsp_dp_tables(
-        left, right, x, nl, u, S=S, span=span, interpret=interpret,
-        cand_tile=cand_tile,
+        left, right, x, nl, u, S=S, span=span, disjoint=disjoint,
+        interpret=interpret, cand_tile=cand_tile,
     )
     R = left.shape[1]
     C_host = np.asarray(C)
@@ -307,6 +345,8 @@ def ltsp_solve_batch(
     interpret: bool = True,
     bucketed: bool = True,
     cand_tile: int = DEFAULT_CAND_TILE,
+    disjoint: bool = False,
+    numeric_policy: str = "strict",
 ) -> list[tuple[int, list[tuple[int, int]]]]:
     """Solve several instances in a few size-bucketed device launches.
 
@@ -320,26 +360,64 @@ def ltsp_solve_batch(
     batches, jit-cache-friendly powers-of-two padding.  ``bucketed=False``
     reproduces the seed behaviour (every instance padded to the global batch
     maxima, one launch) and exists for A/B benchmarking.
+
+    ``numeric_policy="f64"`` re-routes the (rare) instances that fail the
+    int32 magnitude guard after gcd/shift rescaling through an exact float64
+    **interpret** table instead of raising (see the module docstring); the
+    int32-safe majority still takes the int32 launches unchanged.
     """
     if not instances:
         return []
     pairs = [rescale_instance(inst) for inst in instances]
     scaled = [p[0] for p in pairs]
     gs = [p[1] for p in pairs]
-    _check_int32_safe(scaled)
-    solve = lambda idxs, R_pad, S_pad, B_pad: _solve_packed(
-        [instances[i] for i in idxs],
-        [scaled[i] for i in idxs],
-        [gs[i] for i in idxs],
-        R_pad, S_pad, B_pad, span, interpret, cand_tile,
-    )
-    if not bucketed:  # seed behaviour: one launch padded to the batch maxima
-        return solve(list(range(len(instances))), None, None, None)
-    if len(instances) == 1:  # fast path: no planner, one tight launch
-        R_pad, S_pad = bucket_shape(scaled[0])
-        return solve([0], R_pad, S_pad, None)
+    if numeric_policy == "f64":
+        wide = [i for i, s in enumerate(scaled) if _table_bound(s) >= 2**31]
+        _check_f64_safe([scaled[i] for i in wide])
+    else:
+        wide = []
+        _check_int32_safe(scaled)
+    wide_set = set(wide)
+    narrow = [i for i in range(len(instances)) if i not in wide_set]
+
+    def solve(idxs, R_pad, S_pad, B_pad, dtype=jnp.int32):
+        return _solve_packed(
+            [instances[i] for i in idxs],
+            [scaled[i] for i in idxs],
+            [gs[i] for i in idxs],
+            R_pad, S_pad, B_pad, span, interpret, cand_tile,
+            disjoint=disjoint, dtype=dtype,
+        )
+
     results: list[tuple[int, list[tuple[int, int]]] | None] = [None] * len(instances)
-    for (R_pad, S_pad), idxs in plan_buckets(scaled).items():
+    if wide:
+        # float64 is a correctness escape hatch for coprime byte-scale
+        # layouts, not a throughput path: interpret mode, one tight launch
+        # per instance, under a scoped x64 context (never enabled globally).
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            for i in wide:
+                R_pad, S_pad = bucket_shape(scaled[i])
+                [results[i]] = _solve_packed(
+                    [instances[i]], [scaled[i]], [gs[i]],
+                    R_pad, S_pad, None, span,
+                    True,  # interpret: f64 is emulated on TPU, never compiled
+                    cand_tile, disjoint=disjoint, dtype=jnp.float64,
+                )
+    if not narrow:
+        return results  # type: ignore[return-value]
+    if not bucketed:  # seed behaviour: one launch padded to the batch maxima
+        for i, res in zip(narrow, solve(narrow, None, None, None)):
+            results[i] = res
+        return results  # type: ignore[return-value]
+    if len(narrow) == 1:  # fast path: no planner, one tight launch
+        [i] = narrow
+        R_pad, S_pad = bucket_shape(scaled[i])
+        [results[i]] = solve([i], R_pad, S_pad, None)
+        return results  # type: ignore[return-value]
+    for (R_pad, S_pad), sub in plan_buckets([scaled[i] for i in narrow]).items():
+        idxs = [narrow[j] for j in sub]
         for idx, res in zip(idxs, solve(idxs, R_pad, S_pad, _pow2(len(idxs)))):
             results[idx] = res
     return results  # type: ignore[return-value]

@@ -7,26 +7,34 @@ optionally warm-started from the tape-archive tier.
 ``--restore-from-tape`` simulates the cold-start path: the checkpoint shards
 are archived to the tape library and the restore reads are ordered by an LTSP
 solver from the registry (``--tape-policy``, any of
-``repro.core.list_solvers()``; ``--tape-backend`` python / pallas /
-pallas-interpret), reporting the mean shard arrival time the serving fleet
-would observe before weights are resident.
+``repro.core.list_solvers()``; ``--tape-backend`` builds the
+:class:`~repro.core.ExecutionContext` the planner runs under), reporting the
+mean shard arrival time the serving fleet would observe before weights are
+resident.
 
 Online tape serving (``--serve-tape-queue``)
 --------------------------------------------
 The tape tier also serves *online*: read requests arrive while drives are
-busy, so batch composition is a scheduling decision, not a given.  This mode
-drives :mod:`repro.serving.queue` — per-cartridge request queues with a
-pluggable **admission policy** deciding when a queue becomes an LTSP batch
-for the solver engine:
+busy, so batch composition — and, with a shared
+:class:`~repro.serving.drives.DrivePool`, *which cartridge each drive mounts
+next* — is a scheduling decision, not a given.  This mode drives
+:mod:`repro.serving.queue`: per-cartridge request queues, ``--tape-drives``
+drives shared across all cartridges (default: one per cartridge), an
+explicit mount cost model (``--tape-mount-cost`` / ``--tape-unmount-cost`` /
+``--tape-load-seek``), and a pluggable **admission policy**:
 
-* ``fifo`` — per-request solving in arrival order (every request pays a full
-  seek from the load point; the baseline);
-* ``accumulate`` — accumulate-then-solve: dispatch a cartridge's queue once
-  its oldest request has waited ``--tape-window`` time units (``0`` = greedy
+* ``fifo`` / ``fifo-global`` — per-request solving in global arrival order
+  (every request pays a full seek from the load point; the baseline);
+* ``accumulate`` / ``per-drive-accumulate`` — accumulate-then-solve: a free
+  drive mounts the cartridge whose oldest request has waited
+  ``--tape-window`` time units and serves its whole queue (``0`` = greedy
   batching on drive-free);
 * ``preempt`` — greedy batching plus preemptive re-solve: an arrival mid-batch
   aborts the in-flight plan, keeps already-served completions, rewinds, and
-  re-solves the survivors together with the newcomer.
+  re-solves the survivors together with the newcomer;
+* ``batched`` — cross-cartridge device batching: all mount-ready cartridges
+  in an event tick are planned via a **single** ``solve_batch`` bucketed
+  launch.
 
 Every emitted schedule is validated by the **simulator oracle**
 (:mod:`repro.serving.sim` via :func:`repro.core.verify.verify_schedule`): the
@@ -34,7 +42,7 @@ discrete-event replay independently recomputes the schedule's cost from the
 materialised head trajectory and must match the solver-reported cost exactly
 (integer arithmetic).  The printed table compares admission policies on one
 seeded arrival trace: mean/p95 service time (sojourn), batches, preemptions,
-and solve-cache hits.  ``--tape-admission all`` sweeps all three.
+mounts, and solve-cache hits.  ``--tape-admission all`` sweeps every policy.
 """
 
 from __future__ import annotations
@@ -48,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, reduced
-from ..core.solver import BACKENDS, DEFAULT_BACKEND, list_solvers
+from ..core.solver import BACKENDS, DEFAULT_BACKEND, ExecutionContext, list_solvers
 from ..distributed.context import set_active_mesh
 from ..distributed.sharding import cache_pspecs, param_pspecs, to_shardings
 from ..models.model import init_cache, init_model
@@ -59,41 +67,41 @@ from .train import _auto_mesh
 def _restore_from_tape(params, policy: str, backend: str) -> None:
     """Archive ``params`` to a simulated tape library and plan the restore.
 
-    The library owns a :class:`~repro.core.SolveCache`, so the re-plan a
-    recovering serving fleet issues for the *same* archive (every cold start
-    requests the identical shard multiset per cartridge) never re-solves a
-    tape — the second pass below is all cache hits and its time is the pure
-    memo-lookup cost.
+    The library context owns a :class:`~repro.core.SolveCache`, so the
+    re-plan a recovering serving fleet issues for the *same* archive (every
+    cold start requests the identical shard multiset per cartridge) never
+    re-solves a tape — the second pass below is all cache hits and its time
+    is the pure memo-lookup cost.
     """
     from ..core.solver import SolveCache
     from ..distributed.checkpoint import archive_to_tape, plan_restore
     from ..storage.tape import TapeLibrary
 
-    lib = TapeLibrary(
-        capacity_per_tape=4 * 10**6, u_turn=20_000, cache=SolveCache()
-    )
+    ctx = ExecutionContext(backend=backend, cache=SolveCache())
+    lib = TapeLibrary(capacity_per_tape=4 * 10**6, u_turn=20_000, context=ctx)
     shards = archive_to_tape(lib, "serve-warmup", params, bytes_per_elem=1)
     consumers = {s: 2 for s in shards}  # every host group needs every shard
     t0 = time.time()
     try:
-        plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+        plans = plan_restore(lib, shards, consumers, policy=policy)
     except ValueError as e:
         # unsupported policy/backend combo or the int32 device-DP magnitude
         # guard — cold-start planning must not kill the serving launcher
         print(f"tape restore [{policy}/{backend}] unavailable: {e}\n"
               f" -> falling back to backend='python'")
         backend = "python"
-        lib.cache.clear()  # drop the failed attempt's miss counts
-        plans = plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+        ctx.cache.clear()  # drop the failed attempt's miss counts
+        ctx = ctx.replace(backend=backend)
+        plans = plan_restore(lib, shards, consumers, policy=policy, context=ctx)
     dt = time.time() - t0
     # warm re-plan: what the next cold start in the fleet pays
     t0 = time.time()
-    plan_restore(lib, shards, consumers, policy=policy, backend=backend)
+    plan_restore(lib, shards, consumers, policy=policy, context=ctx)
     dt_warm = time.time() - t0
     n_req = sum(consumers.values())
     mean = sum(p.total_cost for p in plans) / n_req
     last = max(max(p.service_time.values()) for p in plans)
-    stats = lib.cache.stats()
+    stats = ctx.cache.stats()
     print(
         f"tape restore [{policy}/{backend}]: {len(shards)} shards on "
         f"{len(lib.tapes)} tape(s), mean arrival {mean:.3g}, last {last:.3g} "
@@ -106,11 +114,13 @@ def _serve_tape_queue(args) -> None:
     """Drive the online tape-serving subsystem on a seeded arrival trace.
 
     Builds a small archive library, replays one Poisson-like trace through
-    each requested admission policy, and prints the per-policy service-time
-    table.  Every dispatched schedule passes the simulator oracle (see the
-    module docstring); the run is bit-deterministic given ``--tape-seed``.
+    each requested admission policy on a shared drive pool, and prints the
+    per-policy service-time table.  Every dispatched schedule passes the
+    simulator oracle (see the module docstring); the run is bit-deterministic
+    given ``--tape-seed``.
     """
-    from ..serving.queue import ADMISSIONS, serve_trace
+    from ..serving.drives import DriveCosts
+    from ..serving.queue import ADMISSIONS, WINDOWED_ADMISSIONS, serve_trace
     from ..serving.sim import demo_library, poisson_trace
 
     def build_library():
@@ -125,13 +135,21 @@ def _serve_tape_queue(args) -> None:
     admissions = (
         list(ADMISSIONS) if args.tape_admission == "all" else [args.tape_admission]
     )
+    costs = DriveCosts(
+        mount=args.tape_mount_cost,
+        unmount=args.tape_unmount_cost,
+        load_seek=args.tape_load_seek,
+    )
+    n_drives = args.tape_drives  # None = one per cartridge (the PR-3 model)
     print(
         f"online tape serving: {args.tape_requests} requests, "
         f"{len({r.tape_id for r in trace})} cartridge(s), "
+        f"{n_drives if n_drives else 'dedicated'} drive(s), "
         f"mean interarrival {args.tape_rate}, policy {args.tape_policy}/"
         f"{args.tape_backend}"
     )
-    print("admission,window,mean_sojourn,p95_sojourn,batches,preempts,cache_hits")
+    print("admission,window,mean_sojourn,p95_sojourn,batches,preempts,"
+          "mounts,cache_hits")
     for admission in admissions:
         lib = build_library()
         t0 = time.time()
@@ -139,17 +157,18 @@ def _serve_tape_queue(args) -> None:
             lib,
             trace,
             admission,
-            window=args.tape_window if admission == "accumulate" else 0,
+            window=args.tape_window if admission in WINDOWED_ADMISSIONS else 0,
             policy=args.tape_policy,
-            backend=args.tape_backend,
-            cache=lib.cache,
+            n_drives=n_drives,
+            drive_costs=costs,
+            context=lib.context.replace(backend=args.tape_backend),
         )
         dt = time.time() - t0
         s = report.summary()  # oracle runs per dispatch: a failure raised above
         print(
             f"{admission},{s['window']},{s['mean_sojourn']:.4g},"
             f"{s['p95_sojourn']:.4g},{s['n_batches']},{s['n_preemptions']},"
-            f"{s['cache']['hits']} ({dt*1e3:.0f} ms wall)"
+            f"{s['mounts']},{s['cache']['hits']} ({dt*1e3:.0f} ms wall)"
         )
 
 
@@ -169,9 +188,18 @@ def main() -> None:
                     help="run the online tape-serving queue simulation "
                          "(admission-policy comparison) instead of model serving")
     ap.add_argument("--tape-admission", default="all",
-                    choices=["fifo", "accumulate", "preempt", "all"])
+                    choices=["fifo", "accumulate", "preempt", "fifo-global",
+                             "per-drive-accumulate", "batched", "all"])
     ap.add_argument("--tape-window", type=int, default=400_000,
                     help="accumulate-then-solve re-plan window (virtual time)")
+    ap.add_argument("--tape-drives", type=int, default=None,
+                    help="shared drive-pool size (default: one per cartridge)")
+    ap.add_argument("--tape-mount-cost", type=int, default=0,
+                    help="cost of threading a cartridge into a drive")
+    ap.add_argument("--tape-unmount-cost", type=int, default=0,
+                    help="cost of ejecting the cartridge a drive holds")
+    ap.add_argument("--tape-load-seek", type=int, default=0,
+                    help="seek from thread point to load point after mounting")
     ap.add_argument("--tape-rate", type=int, default=250_000,
                     help="mean request inter-arrival time (virtual time)")
     ap.add_argument("--tape-requests", type=int, default=300)

@@ -1,0 +1,153 @@
+"""``DrivePool``: N shared tape drives serving all cartridges.
+
+A real mass-storage system (the CC-IN2P3 setting the paper's logs come from)
+does not own one drive per cartridge: a robotic arm moves a small pool of
+drives across a large cartridge archive, and *which cartridge to mount next*
+is a scheduling decision layered on top of the per-cartridge LTSP sequencing.
+This module models that layer:
+
+* :class:`DriveCosts` — the explicit mount/unmount/seek-to-load-point cost
+  model, in the same integer virtual-time units as the simulator (1 unit per
+  byte of head travel).  ``unmount`` is charged when an occupied drive gives
+  its cartridge up for another, ``mount`` when a cartridge is threaded, and
+  ``load_seek`` for positioning the freshly threaded tape at its load point.
+  The all-zero default makes the pool collapse to the PR-3 one-drive-per-
+  cartridge model exactly.
+* :class:`PoolDrive` — one drive's full timeline state: which cartridge is
+  mounted, the in-flight batch (legs, service window, completions), and the
+  epoch counter that invalidates stale drive-free events after a preemption.
+* :class:`DrivePool` — the allocator: deterministic drive selection
+  (prefer the drive that already holds the cartridge — its head is parked at
+  the load point after the post-batch rewind, so re-serving it costs no mount
+  leg; else the lowest-numbered empty free drive; else evict the
+  lowest-numbered free occupied drive), cartridge exclusivity (a physical
+  tape can be mounted in at most one drive), and mount/unmount accounting
+  that the :class:`~repro.serving.sim.ServiceReport` surfaces.
+
+The event loop that drives a pool lives in :mod:`repro.serving.queue`
+(:class:`~repro.serving.queue.OnlineTapeServer`); everything here is plain
+deterministic state — no clocks, no randomness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .sim import Leg, Request
+
+__all__ = ["DriveCosts", "PoolDrive", "DrivePool"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriveCosts:
+    """Mount-leg cost model, in simulator virtual-time units (exact ints).
+
+    ``switch`` (mount + load_seek) is charged whenever a cartridge is
+    threaded into a drive; ``unmount`` is additionally charged when the drive
+    first has to give up the cartridge it holds.  A drive re-serving the
+    cartridge it already holds pays nothing — the post-batch rewind already
+    parked the head at the load point.
+    """
+
+    mount: int = 0
+    unmount: int = 0
+    load_seek: int = 0
+
+    def __post_init__(self) -> None:
+        for name in ("mount", "unmount", "load_seek"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} cost must be >= 0")
+
+    @property
+    def switch(self) -> int:
+        """Cost of threading + positioning a newly mounted cartridge."""
+        return self.mount + self.load_seek
+
+
+@dataclasses.dataclass
+class PoolDrive:
+    """One drive's state (all times absolute virtual time)."""
+
+    drive_id: int
+    mounted: str | None = None  # tape_id threaded into this drive
+    busy: bool = False
+    epoch: int = 0  # invalidates stale drive-free events after preemption
+    dispatched: int = 0  # when the in-flight batch was handed over
+    service_start: int = 0  # dispatched + mount legs (trajectory t=0)
+    service_end: int = 0  # service_start + makespan (last completion)
+    busy_until: int = 0  # service_end + rewind-to-load-point
+    legs: tuple[Leg, ...] = ()
+    inflight: list[tuple[Request, int]] = dataclasses.field(default_factory=list)
+    batch_idx: int = -1  # index of the in-flight batch's BatchRecord
+    load_point: int = 0  # in-flight instance's m (rewind target)
+    u_turn: int = 0  # in-flight instance's U-turn penalty
+
+
+class DrivePool:
+    """N drives shared by every cartridge, with deterministic allocation."""
+
+    def __init__(self, n_drives: int, costs: DriveCosts | None = None):
+        if n_drives < 1:
+            raise ValueError("a drive pool needs at least one drive")
+        self.costs = costs if costs is not None else DriveCosts()
+        self.drives = [PoolDrive(i) for i in range(n_drives)]
+        self.n_mounts = 0
+        self.n_unmounts = 0
+        self.mount_time = 0  # total charged mount/unmount/seek time
+
+    @property
+    def n_drives(self) -> int:
+        return len(self.drives)
+
+    def drive_of(self, tape_id: str) -> PoolDrive | None:
+        """The drive holding ``tape_id``, if any (cartridge exclusivity)."""
+        for d in self.drives:
+            if d.mounted == tape_id:
+                return d
+        return None
+
+    def can_serve(self, tape_id: str) -> bool:
+        """Whether a dispatch for this cartridge could start right now.
+
+        A mounted cartridge can only be served by its own drive (a physical
+        tape exists once); an unmounted one needs any free drive.
+        """
+        holder = self.drive_of(tape_id)
+        if holder is not None:
+            return not holder.busy
+        return any(not d.busy for d in self.drives)
+
+    def acquire(self, tape_id: str) -> tuple[PoolDrive, int]:
+        """Pick the drive for a dispatch; returns ``(drive, mount_delay)``.
+
+        Only call when :meth:`can_serve` is true.  Selection is deterministic:
+        the holder drive (delay 0), else the lowest-numbered empty free
+        drive (mount + load_seek), else the lowest-numbered free occupied
+        drive (unmount + mount + load_seek).  Mount/unmount counters and the
+        total charged mount time accumulate on the pool.
+        """
+        holder = self.drive_of(tape_id)
+        if holder is not None:
+            assert not holder.busy, f"{tape_id} is mid-batch in drive {holder.drive_id}"
+            return holder, 0
+        free = [d for d in self.drives if not d.busy]
+        assert free, "acquire() without a free drive; check can_serve() first"
+        empty = [d for d in free if d.mounted is None]
+        drive = empty[0] if empty else free[0]
+        delay = 0
+        if drive.mounted is not None:
+            delay += self.costs.unmount
+            self.n_unmounts += 1
+        delay += self.costs.switch
+        self.n_mounts += 1
+        self.mount_time += delay
+        drive.mounted = tape_id
+        return drive, delay
+
+    def stats(self) -> dict[str, int]:
+        return {
+            "n_drives": self.n_drives,
+            "mounts": self.n_mounts,
+            "unmounts": self.n_unmounts,
+            "mount_time": self.mount_time,
+        }

@@ -1,37 +1,63 @@
-"""Online tape-serving subsystem: per-cartridge request queues + admission.
+"""Online tape-serving subsystem: a shared drive pool + admission policies.
 
-This is the serving loop the ROADMAP's north star asks for: read requests
+This is the robotic-arm layer of the ROADMAP's north star: read requests
 arrive over (virtual) time against a :class:`~repro.storage.tape.TapeLibrary`,
 accumulate in per-cartridge queues (:class:`~repro.storage.tape.PendingQueue`),
-and an *admission policy* decides when a cartridge's queue becomes an LTSP
-batch dispatched through the solver engine (:func:`repro.core.solve` — any
-registered policy x backend, :class:`~repro.core.SolveCache`-aware).  The
-discrete-event simulator in :mod:`repro.serving.sim` advances virtual time and
-independently re-scores every emitted schedule, so online-vs-offline regret
-and batching-vs-FIFO improvements are exact integers, not anecdotes.
+and an *admission policy* decides **when** a cartridge's queue becomes an LTSP
+batch and **which cartridge a drive mounts next**.  Service runs on a
+:class:`~repro.serving.drives.DrivePool` — ``n_drives`` drives shared across
+all cartridges with an explicit mount/unmount/seek-to-load-point cost model
+(:class:`~repro.serving.drives.DriveCosts`).  The PR-3 one-drive-per-cartridge
+server is the ``n_drives = len(tapes)``, zero-mount-cost special case of this
+loop, bit-identically.
+
+Solving dispatches through the solver engine under an
+:class:`~repro.core.ExecutionContext` (:func:`repro.core.solve` /
+:func:`repro.core.solve_batch` — any registered policy × backend,
+:class:`~repro.core.SolveCache`-aware); the pre-context ``backend=``/``cache=``
+keywords survive as warning-emitting deprecation shims.  The discrete-event
+simulator in :mod:`repro.serving.sim` advances virtual time and independently
+re-scores every emitted schedule, so online-vs-offline regret,
+batching-vs-FIFO improvements, and mount-contention penalties are exact
+integers, not anecdotes.
 
 Admission policies
 ------------------
-``fifo``
-    Per-request solving: the drive serves one request at a time in arrival
-    order.  Every request pays a full seek from the load point — the
-    baseline any batching policy must beat.
-``accumulate``
-    Accumulate-then-solve with a re-plan window: a cartridge's queue is
-    dispatched as one batch once the oldest pending request has waited
-    ``window`` time units (and the drive is free).  ``window=0`` degenerates
-    to greedy batching: dispatch everything queued whenever the drive frees.
+Cartridge-cadence policies (when does a queue dispatch):
+
+``fifo`` / ``fifo-global``
+    Per-request solving in global arrival order: whenever a drive is
+    available, the oldest pending request whose cartridge can be mounted is
+    served alone.  Every request pays a full seek from the load point — the
+    baseline any batching policy must beat.  (``fifo`` is the legacy PR-3
+    name; on a pool both spell the same rule.)
+``accumulate`` / ``per-drive-accumulate``
+    Accumulate-then-solve with a re-plan window: a cartridge becomes
+    *mount-ready* once its oldest pending request has waited ``window`` time
+    units; a free drive mounts the mount-ready cartridge with the oldest
+    head-of-queue request and serves its whole queue as one batch.
+    ``window=0`` degenerates to greedy batching.
 ``preempt``
     Greedy batching plus preemptive re-solve on arrival: a request arriving
-    while the drive is mid-batch aborts the in-flight plan at that instant —
-    requests already served keep their completion times, the head rewinds
-    from wherever it is, and the survivors plus the newcomer are re-solved
-    as one batch.  Wins when late arrivals would otherwise wait out a long
-    plan; loses the rewind penalty when arrivals are dense.
+    for a cartridge that is mid-batch aborts the in-flight plan at that
+    instant — requests already served keep their completion times, the head
+    rewinds from wherever it is, and the survivors plus the newcomer are
+    re-solved as one batch.  Wins when late arrivals would otherwise wait
+    out a long plan; loses the rewind penalty when arrivals are dense.
+``batched``
+    Cross-cartridge device batching: in one event tick, *all* mount-ready
+    cartridges (up to the number of assignable drives) are gathered and
+    planned through a **single** :func:`repro.core.solve_batch` call — on a
+    device backend that is one bucketed wavefront launch for the whole tick
+    instead of one launch per cartridge.  Scheduling results are identical
+    to ``per-drive-accumulate``; only the solve batching differs.
 
 Every dispatched schedule is checked by :func:`repro.core.verify.verify_schedule`
 (structural validity + the simulator's independent cost recomputation must
-equal the solver-reported cost exactly) unless ``verify=False``.
+equal the solver-reported cost exactly) unless ``verify=False``.  Mount legs
+are charged ahead of each batch's trajectory: completions shift by the
+drive's mount delay and the pool's mount/unmount accounting lands in the
+:class:`~repro.serving.sim.ServiceReport`.
 """
 
 from __future__ import annotations
@@ -39,12 +65,13 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
-from ..core.solver import DEFAULT_BACKEND, SolveCache, solve
+from ..core.context import ExecutionContext, resolve_context
+from ..core.solver import SolveCache, solve, solve_batch
 from ..core.verify import verify_schedule
 from ..storage.tape import TapeLibrary
+from .drives import DriveCosts, DrivePool, PoolDrive
 from .sim import (
     BatchRecord,
-    Leg,
     Replay,
     Request,
     ServedRequest,
@@ -54,27 +81,28 @@ from .sim import (
     rewind_time,
 )
 
-__all__ = ["ADMISSIONS", "OnlineTapeServer", "serve_trace"]
+__all__ = [
+    "ADMISSIONS",
+    "LEGACY_ADMISSIONS",
+    "POOL_ADMISSIONS",
+    "WINDOWED_ADMISSIONS",
+    "OnlineTapeServer",
+    "serve_trace",
+]
 
-ADMISSIONS = ("fifo", "accumulate", "preempt")
+#: legacy names from the one-drive-per-cartridge era (still fully supported).
+LEGACY_ADMISSIONS = ("fifo", "accumulate", "preempt")
+#: pool-era names (cross-cartridge; ``batched`` adds one-launch-per-tick).
+POOL_ADMISSIONS = ("fifo-global", "per-drive-accumulate", "batched")
+ADMISSIONS = LEGACY_ADMISSIONS + POOL_ADMISSIONS
 
+#: admissions whose dispatch is gated on the accumulate ``window`` (callers
+#: sweeping admissions use this to decide which ones take a window argument).
+WINDOWED_ADMISSIONS = ("accumulate", "per-drive-accumulate", "batched")
 
-@dataclasses.dataclass
-class _Drive:
-    """Per-cartridge drive state (one drive per cartridge)."""
-
-    tape_id: str
-    busy: bool = False
-    epoch: int = 0  # invalidates stale drive-free events after preemption
-    dispatched: int = 0
-    service_end: int = 0  # dispatch + makespan (last completion)
-    busy_until: int = 0  # service_end + rewind
-    legs: tuple[Leg, ...] = ()
-    inflight: list[tuple[Request, int]] = dataclasses.field(default_factory=list)
-    next_wake: int = -1  # pending accumulate-window timer (dedup)
-    batch_idx: int = -1  # index of the in-flight batch's BatchRecord
-    load_point: int = 0  # in-flight instance's m (rewind target)
-    u_turn: int = 0  # in-flight instance's U-turn penalty
+#: admissions that dispatch one request at a time, in global arrival order.
+_ONE_SHOT = {"fifo", "fifo-global"}
+_WINDOWED = set(WINDOWED_ADMISSIONS)
 
 
 class OnlineTapeServer:
@@ -83,6 +111,10 @@ class OnlineTapeServer:
     One instance simulates one run: virtual time advances over arrival,
     window-expiry, and drive-free events; all arithmetic is exact integers,
     so two runs with the same trace and configuration are bit-identical.
+
+    ``n_drives`` defaults to one drive per cartridge and ``drive_costs`` to
+    the all-zero model — exactly the PR-3 server.  Shrink the pool and/or
+    price the mount legs to simulate a real robotic library.
     """
 
     def __init__(
@@ -92,7 +124,10 @@ class OnlineTapeServer:
         *,
         window: int = 0,
         policy: str = "dp",
-        backend: str = DEFAULT_BACKEND,
+        n_drives: int | None = None,
+        drive_costs: DriveCosts | None = None,
+        context: ExecutionContext | None = None,
+        backend: str | None = None,
         cache: SolveCache | None = None,
         verify: bool = True,
     ):
@@ -102,12 +137,15 @@ class OnlineTapeServer:
             )
         if window < 0:
             raise ValueError("window must be >= 0")
+        if n_drives is not None and n_drives < 1:
+            raise ValueError("n_drives must be >= 1")
         self.lib = library
         self.admission = admission
         self.window = int(window)
         self.policy = policy
-        self.backend = backend
-        self.cache = cache
+        self.context = resolve_context(context, backend=backend, cache=cache)
+        self.n_drives = n_drives
+        self.drive_costs = drive_costs if drive_costs is not None else DriveCosts()
         self.verify = verify
 
     # -- event plumbing ------------------------------------------------------
@@ -119,9 +157,11 @@ class OnlineTapeServer:
         """Serve a full arrival trace; returns the per-request report."""
         self._events: list = []
         self._seq = 0
-        self._drives: dict[str, _Drive] = {}
+        n = self.n_drives if self.n_drives is not None else max(1, len(self.lib.tapes))
+        self.pool = DrivePool(n, self.drive_costs)
         self._served: list[ServedRequest] = []
         self._batches: list[BatchRecord] = []
+        self._next_wake: dict[str, int] = {}  # tape_id -> pending window timer
         self._n_preempt = 0
         horizon = 0
 
@@ -134,70 +174,121 @@ class OnlineTapeServer:
             if kind == "arrival":
                 req: Request = data
                 tape_id = self.lib.enqueue(req.name, req)
-                drive = self._drives.setdefault(tape_id, _Drive(tape_id))
-                if (
-                    self.admission == "preempt"
-                    and drive.busy
-                    and now < drive.service_end
-                ):
-                    self._preempt(drive, now)
-                self._try_dispatch(drive, now)
+                if self.admission == "preempt":
+                    drive = self.pool.drive_of(tape_id)
+                    if drive is not None and drive.busy and now < drive.service_end:
+                        self._preempt(drive, now)
+                self._schedule(now)
             elif kind == "free":
-                tape_id, epoch = data
-                drive = self._drives[tape_id]
+                drive_id, epoch = data
+                drive = self.pool.drives[drive_id]
                 if epoch != drive.epoch or not drive.busy:
                     continue  # superseded by a preemption
                 self._complete(drive)
-                self._try_dispatch(drive, now)
+                self._schedule(now)
             elif kind == "wake":
                 tape_id, when = data
-                drive = self._drives[tape_id]
-                if when != drive.next_wake:
+                if self._next_wake.get(tape_id) != when:
                     continue  # superseded timer
-                drive.next_wake = -1
-                self._try_dispatch(drive, now)
+                del self._next_wake[tape_id]
+                self._schedule(now)
 
-        horizon = max([horizon] + [d.busy_until for d in self._drives.values()])
-        report = ServiceReport(
+        horizon = max([horizon] + [d.busy_until for d in self.pool.drives])
+        return ServiceReport(
             admission=self.admission,
             policy=self.policy,
-            backend=self.backend,
+            backend=self.context.backend,
             window=self.window,
             served=sorted(self._served, key=lambda r: (r.completed, r.req_id)),
             batches=self._batches,
             n_preemptions=self._n_preempt,
             horizon=horizon,
-            cache_stats=self.cache.stats() if self.cache is not None else None,
+            cache_stats=(
+                self.context.cache.stats() if self.context.cache is not None else None
+            ),
+            pool_stats=self.pool.stats(),
         )
-        return report
 
     # -- admission -----------------------------------------------------------
-    def _try_dispatch(self, drive: _Drive, now: int) -> None:
-        queue = self.lib.pending(drive.tape_id)
-        if drive.busy or len(queue) == 0:
+    def _candidates(self, now: int) -> list[str]:
+        """Dispatch-ready cartridges, oldest head-of-queue request first.
+
+        Window-gated admissions also (re)arm a wake timer per not-yet-ready
+        cartridge; timers deduplicate on the ready instant, and a stale timer
+        is discarded on pop when its instant no longer matches.
+        """
+        ready: list[tuple[int, int, str]] = []
+        for tid in sorted(self.lib.queues):
+            queue = self.lib.queues[tid]
+            if len(queue) == 0:
+                continue
+            head = queue.peek()
+            if self.admission in _WINDOWED:
+                at = head.time + self.window
+                if now < at:
+                    if self._next_wake.get(tid) != at:
+                        self._next_wake[tid] = at
+                        self._push(at, "wake", (tid, at))
+                    continue
+            ready.append((head.time, head.req_id, tid))
+        ready.sort()
+        return [tid for _, _, tid in ready]
+
+    def _schedule(self, now: int) -> None:
+        """Dispatch every cartridge the admission policy admits at ``now``."""
+        cands = self._candidates(now)
+        if not cands:
             return
-        if self.admission == "fifo":
-            batch = [queue.pop()]
-        elif self.admission == "accumulate":
-            ready = queue.peek().time + self.window
-            if now < ready:
-                if drive.next_wake != ready:
-                    drive.next_wake = ready
-                    self._push(ready, "wake", (drive.tape_id, ready))
+        if self.admission == "batched":
+            # one event tick -> one solve_batch over every admitted cartridge
+            picks: list[tuple[PoolDrive, int, list[Request]]] = []
+            for tid in cands:
+                if not self.pool.can_serve(tid):
+                    continue
+                drive, delay = self.pool.acquire(tid)
+                drive.busy = True  # reserve; _dispatch fills in the timeline
+                picks.append((drive, delay, self.lib.pending(tid).drain()))
+            if not picks:
                 return
-            batch = queue.drain()
-        else:  # preempt: greedy batching, preemption handled on arrival
-            batch = queue.drain()
-        self._dispatch(drive, batch, now)
+            prepared = []
+            for _, _, batch in picks:
+                tape = self.lib.tape_of(batch[0].name)
+                inst, names = tape.instance(_multiset(batch))
+                prepared.append((tape, inst, names))
+            results = solve_batch(
+                [inst for _, inst, _ in prepared],
+                policy=self.policy,
+                context=self.context,
+            )
+            for (drive, delay, batch), (tape, inst, names), res in zip(
+                picks, prepared, results
+            ):
+                self._dispatch(drive, batch, now, delay, (tape, inst, names, res))
+            return
+        for tid in cands:
+            if not self.pool.can_serve(tid):
+                continue
+            drive, delay = self.pool.acquire(tid)
+            queue = self.lib.pending(tid)
+            batch = [queue.pop()] if self.admission in _ONE_SHOT else queue.drain()
+            self._dispatch(drive, batch, now, delay)
 
     # -- drive actions -------------------------------------------------------
-    def _dispatch(self, drive: _Drive, batch: list[Request], now: int) -> None:
-        tape = self.lib.tape_of(batch[0].name)
-        multiset: dict[str, int] = {}
-        for req in batch:
-            multiset[req.name] = multiset.get(req.name, 0) + 1
-        inst, names = tape.instance(multiset)
-        res = solve(inst, policy=self.policy, backend=self.backend, cache=self.cache)
+    def _dispatch(
+        self,
+        drive: PoolDrive,
+        batch: list[Request],
+        now: int,
+        delay: int,
+        prepared=None,
+    ) -> None:
+        if prepared is None:
+            tape = self.lib.tape_of(batch[0].name)
+            inst, names = tape.instance(_multiset(batch))
+            res = solve(inst, policy=self.policy, context=self.context)
+        else:
+            tape, inst, names, res = prepared
+        assert drive.mounted == tape.tape_id
         replay: Replay = replay_schedule(inst, res.detours)
         # the independent recomputation always lands in the BatchRecord; with
         # verify=True a disagreement (or structural defect) raises right here
@@ -206,22 +297,24 @@ class OnlineTapeServer:
             verify_schedule(inst, res.detours, cost=res.cost, replay=replay)
         idx = {name: i for i, name in enumerate(names)}
         rewind = rewind_time(inst.m, inst.u_turn, replay.head_at_makespan)
+        start = now + delay  # mount legs charged before the trajectory begins
 
         drive.busy = True
         drive.epoch += 1
         drive.dispatched = now
-        drive.service_end = now + replay.makespan
+        drive.service_start = start
+        drive.service_end = start + replay.makespan
         drive.busy_until = drive.service_end + rewind
         drive.legs = replay.legs
         drive.load_point = inst.m
         drive.u_turn = inst.u_turn
         drive.inflight = [
-            (req, now + replay.service_time[idx[req.name]]) for req in batch
+            (req, start + replay.service_time[idx[req.name]]) for req in batch
         ]
         drive.batch_idx = len(self._batches)
         self._batches.append(
             BatchRecord(
-                tape_id=drive.tape_id,
+                tape_id=tape.tape_id,
                 dispatched=now,
                 n_requests=len(batch),
                 n_files=inst.n_req,
@@ -230,11 +323,13 @@ class OnlineTapeServer:
                 makespan=replay.makespan,
                 rewind=rewind,
                 verified=verified,
+                drive=drive.drive_id,
+                mount_delay=delay,
             )
         )
-        self._push(drive.busy_until, "free", (drive.tape_id, drive.epoch))
+        self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
 
-    def _complete(self, drive: _Drive) -> None:
+    def _complete(self, drive: PoolDrive) -> None:
         for req, completed in drive.inflight:
             self._served.append(
                 ServedRequest(
@@ -249,12 +344,17 @@ class OnlineTapeServer:
         drive.inflight = []
         drive.busy = False
 
-    def _preempt(self, drive: _Drive, now: int) -> None:
+    def _preempt(self, drive: PoolDrive, now: int) -> None:
         """Abort the in-flight batch at ``now``; requeue unserved requests.
 
         Completions at or before ``now`` stand; the head rewinds from its
-        current position (one U-turn + seek to the load point) before the
-        next dispatch.  The drive stays busy for the rewind.
+        current trajectory position (one U-turn + seek to the load point)
+        before the next dispatch.  The drive stays busy for the rewind.  A
+        preemption landing inside the mount legs (before ``service_start``)
+        cannot conjure the head to the load point early: the robot is
+        already threading, so the drive stays busy until the mount
+        completes (``service_start``), head then parked at the load point,
+        no rewind to charge.
         """
         done = [(r, c) for r, c in drive.inflight if c <= now]
         pending = [r for r, c in drive.inflight if c > now]
@@ -271,10 +371,14 @@ class OnlineTapeServer:
             )
         for req in pending:
             self.lib.enqueue(req.name, req)
-        pos = head_position(drive.legs, now - drive.dispatched)
-        rewind = rewind_time(drive.load_point, drive.u_turn, pos)
+        if now < drive.service_start:
+            # aborted mid-mount: the in-flight mount still runs to completion
+            free_at = drive.service_start
+        else:
+            pos = head_position(drive.legs, now - drive.service_start)
+            free_at = now + rewind_time(drive.load_point, drive.u_turn, pos)
         aborted = self._batches[drive.batch_idx]
-        assert aborted.tape_id == drive.tape_id
+        assert aborted.tape_id == drive.mounted
         assert aborted.dispatched == drive.dispatched
         self._batches[drive.batch_idx] = dataclasses.replace(
             aborted, preempted=True, n_completed=len(done)
@@ -283,10 +387,17 @@ class OnlineTapeServer:
         drive.inflight = []
         drive.legs = ()
         drive.service_end = now
-        drive.busy_until = now + rewind
+        drive.busy_until = free_at
         drive.busy = True
         self._n_preempt += 1
-        self._push(drive.busy_until, "free", (drive.tape_id, drive.epoch))
+        self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
+
+
+def _multiset(batch: list[Request]) -> dict[str, int]:
+    multiset: dict[str, int] = {}
+    for req in batch:
+        multiset[req.name] = multiset.get(req.name, 0) + 1
+    return multiset
 
 
 def serve_trace(
@@ -296,7 +407,10 @@ def serve_trace(
     *,
     window: int = 0,
     policy: str = "dp",
-    backend: str = DEFAULT_BACKEND,
+    n_drives: int | None = None,
+    drive_costs: DriveCosts | None = None,
+    context: ExecutionContext | None = None,
+    backend: str | None = None,
     cache: SolveCache | None = None,
     verify: bool = True,
 ) -> ServiceReport:
@@ -306,6 +420,9 @@ def serve_trace(
         admission,
         window=window,
         policy=policy,
+        n_drives=n_drives,
+        drive_costs=drive_costs,
+        context=context,
         backend=backend,
         cache=cache,
         verify=verify,

@@ -179,12 +179,16 @@ def replay_schedule(inst: Instance, detours: Iterable[tuple[int, int]]) -> Repla
 
 
 def head_position(legs: Sequence[Leg], t: int) -> int:
-    """Head position at trajectory-relative time ``t`` (clamped to the ends)."""
+    """Head position at trajectory-relative time ``t`` (clamped to the ends).
+
+    ``t < 0`` clamps to the trajectory start — a drive preempted during its
+    mount legs (before ``service_start``) reads as parked at the load point.
+    """
     if not legs or t <= legs[0].t0:
         return legs[0].p0 if legs else 0
     for lg in legs:
         if t <= lg.t1:
-            if lg.kind == "uturn":
+            if lg.p1 == lg.p0:  # dwell (U-turn or zero-length seek)
                 return lg.p0
             step = t - lg.t0
             return lg.p0 + step if lg.p1 >= lg.p0 else lg.p0 - step
@@ -260,16 +264,17 @@ def demo_library(
     The benchmark sweep, the ``--serve-tape-queue`` launcher, the example,
     and the acceptance tests all serve traces against this same library, so
     their numbers stay comparable by construction (100-600 KB objects packed
-    onto ~4 MB cartridges, one :class:`~repro.core.SolveCache` per library
-    unless ``with_cache=False``).
+    onto ~4 MB cartridges; the library's
+    :class:`~repro.core.ExecutionContext` carries one
+    :class:`~repro.core.SolveCache` unless ``with_cache=False``).
     """
-    from ..core.solver import SolveCache
+    from ..core.solver import ExecutionContext, SolveCache
     from ..storage.tape import TapeLibrary
 
     lib = TapeLibrary(
         capacity_per_tape=capacity,
         u_turn=u_turn,
-        cache=SolveCache() if with_cache else None,
+        context=ExecutionContext(cache=SolveCache() if with_cache else None),
     )
     rng = np.random.default_rng(seed)
     for i in range(n_files):
@@ -299,7 +304,13 @@ class ServedRequest:
 
 @dataclasses.dataclass(frozen=True)
 class BatchRecord:
-    """One dispatched batch (one LTSP solve against one cartridge)."""
+    """One dispatched batch (one LTSP solve against one cartridge).
+
+    ``mount_delay`` is the mount leg the drive pool charged before the
+    schedule's trajectory started (unmount of the previous cartridge + mount
+    + seek to the load point; 0 when the cartridge was already threaded) —
+    the replayed completions below all shift by it.
+    """
 
     tape_id: str
     dispatched: int
@@ -312,6 +323,8 @@ class BatchRecord:
     verified: bool
     preempted: bool = False
     n_completed: int | None = None  # only set when preempted
+    drive: int = 0  # drive the pool assigned
+    mount_delay: int = 0
 
 
 @dataclasses.dataclass
@@ -327,6 +340,8 @@ class ServiceReport:
     n_preemptions: int
     horizon: int  # virtual time when the last drive went idle
     cache_stats: dict[str, int] | None = None
+    #: drive-pool accounting (n_drives, mounts, unmounts, mount_time)
+    pool_stats: dict[str, int] | None = None
 
     # -- exact aggregates (ints, safe to assert on) --------------------------
     @property
@@ -368,5 +383,6 @@ class ServiceReport:
             "makespan": self.makespan,
             "horizon": self.horizon,
             "all_verified": all(b.verified for b in self.batches),
+            **(dict(self.pool_stats) if self.pool_stats else {}),
             **({"cache": dict(self.cache_stats)} if self.cache_stats else {}),
         }

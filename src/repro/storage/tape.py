@@ -7,34 +7,38 @@ mass-storage scheduler orders the reads with the paper's algorithms
 (``policy="dp"`` optimal, ``"logdp*"``/``"simpledp"`` low-cost, plus all
 baselines) to minimise the mean service time experienced by consumers.
 
-Policy and backend selection
+Policy and execution context
 ----------------------------
-Scheduling dispatches through the solver engine
-(:mod:`repro.core.solver`): ``policy`` names any registered solver
-(``repro.core.list_solvers()``) and ``backend`` picks its execution engine —
-``"python"`` (exact CPU, default), ``"pallas"`` (compiled TPU wavefront) or
-``"pallas-interpret"`` (same kernel, interpreter).  On the device backends
-:meth:`TapeLibrary.schedule` packs every cartridge's instance into a single
-padded device launch (one wavefront solves the whole robotic-library batch)
-and reconstructs each cartridge's detour schedule from the kernel's argmin
-planes.
+Scheduling dispatches through the solver engine (:mod:`repro.core.solver`):
+``policy`` names any registered solver (``repro.core.list_solvers()``) and an
+:class:`~repro.core.ExecutionContext` says how to run it — backend
+(``"python"`` exact CPU, ``"pallas"`` compiled TPU wavefront,
+``"pallas-interpret"``), solve memo, bucketing and numeric-guard policy.  A
+:class:`TapeLibrary` owns a context (constructor ``context=``): every
+:meth:`TapeLibrary.schedule` call uses it unless the call passes its own.
+On the device backends :meth:`TapeLibrary.schedule` packs every cartridge's
+instance into a few size-bucketed device launches
+(:func:`repro.core.solve_batch`) and reconstructs each cartridge's detour
+schedule from the kernel's argmin planes.
 
 Serving loops re-plan the same cartridges constantly (the same checkpoint
-restore, the same hot corpus slice), so :class:`TapeLibrary` optionally owns a
-:class:`repro.core.SolveCache`: pass ``cache=SolveCache()`` (or per call) and
-repeated identical request multisets skip the solver entirely — only novel
-tapes reach a backend, in one bucketed device launch.
+restore, the same hot corpus slice), so hang a
+:class:`repro.core.SolveCache` on the library context
+(``context=ExecutionContext(cache=SolveCache())``) and repeated identical
+request multisets skip the solver entirely — only novel tapes reach a
+backend.  The pre-context ``backend=``/``cache=`` keywords remain available
+on every entry point as warning-emitting deprecation shims.
 
-Everything is integer-exact and simulation-backed: ``read_batch`` returns the
-service time of every request as produced by the trajectory simulator in
-:mod:`repro.core.schedule`, and every plan's ``total_cost`` equals the
-simulator's score of its detours regardless of policy or backend.
+Everything is integer-exact and simulation-backed: every plan's
+``total_cost`` equals the trajectory simulator's score of its detours
+regardless of policy or backend.
 
 For *online* serving the library also owns per-cartridge pending-request
 queues (:class:`PendingQueue`, via :meth:`TapeLibrary.enqueue` /
 :meth:`TapeLibrary.pending`): requests arriving over virtual time accumulate
 per cartridge until the admission policy in :mod:`repro.serving.queue` turns
-a queue into an LTSP batch for this module's schedulers.
+a queue into an LTSP batch for a drive from the shared
+:class:`~repro.serving.drives.DrivePool`.
 """
 
 from __future__ import annotations
@@ -44,9 +48,10 @@ import heapq
 
 import numpy as np
 
-from ..core import make_instance, service_times, solve, solve_batch, virtual_lb
+from ..core import make_instance, service_times, solve_batch, virtual_lb
+from ..core.context import ExecutionContext, resolve_context
 from ..core.instance import Instance
-from ..core.solver import DEFAULT_BACKEND, SolveCache, SolveResult
+from ..core.solver import SolveCache, SolveResult, solve
 
 __all__ = [
     "TapeFile",
@@ -156,7 +161,7 @@ class ReadPlan:
     mean_service: float  # total_cost / n requests
     virtual_lb: int
     detours: list[tuple[int, int]]
-    backend: str = DEFAULT_BACKEND
+    backend: str = "python"
 
 
 def _plan_from_result(
@@ -181,32 +186,53 @@ def schedule_reads(
     tape: Tape,
     requests: dict[str, int],
     policy: str = "simpledp",
-    backend: str = DEFAULT_BACKEND,
+    backend: str | None = None,
     cache: SolveCache | None = None,
+    *,
+    context: ExecutionContext | None = None,
 ) -> ReadPlan:
-    """Order a batch of reads on one tape with an LTSP policy/backend."""
+    """Order a batch of reads on one tape with an LTSP policy.
+
+    ``context`` selects backend/cache/numeric options;
+    ``backend=``/``cache=`` are the deprecated spellings (see
+    :mod:`repro.core.context`).
+    """
+    ctx = resolve_context(context, backend=backend, cache=cache)
     inst, names = tape.instance(requests)
-    res = solve(inst, policy=policy, backend=backend, cache=cache)
+    res = solve(inst, policy=policy, context=ctx)
     return _plan_from_result(tape, inst, names, res)
 
 
 class TapeLibrary:
-    """A robotic library: many cartridges, simple fill placement."""
+    """A robotic library: many cartridges, simple fill placement.
+
+    The library owns an :class:`~repro.core.ExecutionContext` shared by every
+    :meth:`schedule` call (hang a :class:`~repro.core.SolveCache` on it so
+    serving/restore loops never re-solve an identical tape).  The pre-context
+    ``cache=`` constructor keyword is a warning-emitting deprecation shim.
+    """
 
     def __init__(
         self,
         capacity_per_tape: int,
         u_turn: int = DEFAULT_U_TURN,
         cache: SolveCache | None = None,
+        *,
+        context: ExecutionContext | None = None,
     ):
         self.capacity = capacity_per_tape
         self.u_turn = u_turn
         self.tapes: list[Tape] = []
         self.location: dict[str, str] = {}  # file -> tape_id
-        #: memo of solved instances shared by every schedule() call (opt-in).
-        self.cache = cache
+        #: execution context shared by every schedule() call on this library.
+        self.context = resolve_context(context, cache=cache)
         #: per-cartridge pending read requests (the online serving queues).
         self.queues: dict[str, PendingQueue] = {}
+
+    @property
+    def cache(self) -> SolveCache | None:
+        """The context's solve memo (read-only convenience view)."""
+        return self.context.cache
 
     def _tape_with_room(self, size: int) -> Tape:
         for t in self.tapes:
@@ -241,17 +267,23 @@ class TapeLibrary:
         self,
         requests: dict[str, int],
         policy: str = "simpledp",
-        backend: str = DEFAULT_BACKEND,
+        backend: str | None = None,
         cache: SolveCache | None = None,
+        *,
+        context: ExecutionContext | None = None,
     ) -> list[ReadPlan]:
-        """Split a request batch per tape and schedule each (one drive per
-        cartridge; cartridges are independent LTSP instances).
+        """Split a request batch per tape and schedule each.
 
-        Device backends solve every cartridge's instance in a few
-        size-bucketed launches (:func:`repro.core.solve_batch`); with a memo
-        cache (``cache`` argument or the library's own) previously solved
-        request multisets never reach a backend at all.
+        Cartridges are independent LTSP instances; device backends solve
+        every cartridge's instance in a few size-bucketed launches
+        (:func:`repro.core.solve_batch`).  The library's own context applies
+        unless the call passes ``context=`` (or the deprecated
+        ``backend=``/``cache=`` keywords, which warn and fold over the
+        library context).
         """
+        ctx = resolve_context(
+            context, backend=backend, cache=cache, default=self.context
+        )
         per_tape: dict[str, dict[str, int]] = {}
         for name, k in requests.items():
             per_tape.setdefault(self.location[name], {})[name] = k
@@ -261,10 +293,7 @@ class TapeLibrary:
             inst, names = tapes[tid].instance(reqs)
             triples.append((tapes[tid], inst, names))
         results = solve_batch(
-            [inst for _, inst, _ in triples],
-            policy,
-            backend,
-            cache=cache if cache is not None else self.cache,
+            [inst for _, inst, _ in triples], policy, context=ctx
         )
         return [
             _plan_from_result(tape, inst, names, res)

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    ExecutionContext,
     SolveCache,
     dp_schedule,
     evaluate_detours,
@@ -14,6 +15,7 @@ from repro.core import (
     solve,
     solve_batch,
 )
+
 from repro.kernels.ltsp_dp.ops import (
     bucket_shape,
     ltsp_solve_batch,
@@ -22,6 +24,8 @@ from repro.kernels.ltsp_dp.ops import (
     prepare_batch,
     rescale_instance,
 )
+
+DEV = ExecutionContext(backend="pallas-interpret")
 
 
 def _hetero_instance(rng):
@@ -68,7 +72,7 @@ def test_bucketed_matches_seed_style_padded_launch(rng):
 
 def test_solver_engine_batch_goes_through_buckets(rng):
     insts = [_hetero_instance(rng) for _ in range(7)]
-    dev = solve_batch(insts, policy="dp", backend="pallas-interpret")
+    dev = solve_batch(insts, policy="dp", context=DEV)
     for inst, res in zip(insts, dev):
         assert res.cost == dp_schedule(inst)[0]
         assert evaluate_detours(inst, res.detours) == res.cost
@@ -79,7 +83,7 @@ def test_solver_engine_batch_goes_through_buckets(rng):
 # ---------------------------------------------------------------------------
 def test_empty_batch_returns_empty():
     assert ltsp_solve_batch([]) == []
-    assert solve_batch([], policy="dp", backend="pallas-interpret") == []
+    assert solve_batch([], policy="dp", context=DEV) == []
     assert solve_batch([], policy="gs") == []
 
 
@@ -90,8 +94,8 @@ def test_prepare_batch_empty_raises_cleanly():
 
 def test_single_instance_batch_matches_solve(rng):
     inst = _hetero_instance(rng)
-    [res] = solve_batch([inst], policy="dp", backend="pallas-interpret")
-    alone = solve(inst, policy="dp", backend="pallas-interpret")
+    [res] = solve_batch([inst], policy="dp", context=DEV)
+    alone = solve(inst, policy="dp", context=DEV)
     assert (res.cost, res.detours) == (alone.cost, alone.detours)
 
 
@@ -117,8 +121,8 @@ def test_rescale_accepts_tape_block_granularity_coordinates():
     inst = make_instance([0, 2 * 10**9], [10**6, 10**6], [3, 3], u_turn=10**7)
     scaled, g = rescale_instance(inst)
     assert g == 10**6 and scaled.m == scaled.right[-1]
-    res = solve(inst, policy="dp", backend="pallas-interpret")
-    py = solve(inst, policy="dp", backend="python")
+    res = solve(inst, policy="dp", context=DEV)
+    py = solve(inst, policy="dp")
     assert (res.cost, res.detours) == (py.cost, py.detours)
     assert evaluate_detours(inst, res.detours) == res.cost
 
@@ -130,21 +134,76 @@ def test_rescale_shift_handles_far_offset_layouts():
     inst = make_instance([base, base + 40], [10, 20], [2, 3], u_turn=8)
     scaled, g = rescale_instance(inst)
     assert int(scaled.left[0]) == 0 and scaled.m <= 70
-    res = solve(inst, policy="dp", backend="pallas-interpret")
+    res = solve(inst, policy="dp", context=DEV)
     assert res.cost == dp_schedule(inst)[0]
 
 
 def test_guard_still_rejects_unrescalable_instances():
-    """Coprime huge coordinates cannot be gcd-reduced: the guard must raise
-    with the rescaling hint."""
+    """Coprime huge coordinates cannot be gcd-reduced: the strict guard must
+    raise with the rescaling + f64 hint."""
     bad = make_instance(
         [0, 2 * 10**9 + 1], [10**6 + 1, 10**6 + 3], [3, 3], u_turn=10**7 + 1
     )
-    with pytest.raises(ValueError, match="int32"):
-        solve(bad, policy="dp", backend="pallas-interpret")
+    with pytest.raises(ValueError, match="int32") as ei:
+        solve(bad, policy="dp", context=DEV)
+    assert "f64" in str(ei.value)  # the error teaches the escape hatch
     # exact python backend still fine
-    py = solve(bad, policy="dp", backend="python")
+    py = solve(bad, policy="dp")
     assert py.cost == evaluate_detours(bad, py.detours)
+
+
+# ---------------------------------------------------------------------------
+# numeric_policy="f64": exact interpret fallback past the int32 guard
+# ---------------------------------------------------------------------------
+def _coprime_instance():
+    """Byte-scale coprime layout: gcd/shift rescaling cannot save int32."""
+    return make_instance(
+        [0, 2 * 10**9 + 1], [10**6 + 1, 10**6 + 3], [3, 3], u_turn=10**7 + 1
+    )
+
+
+def test_f64_fallback_is_bit_exact_in_domain():
+    """Within the < 2**53 exactness domain the f64 interpret table must be
+    bit-identical (cost AND detours) to the exact python DP, for the full DP
+    and for SIMPLEDP's disjoint clip."""
+    from repro.core import simpledp_schedule
+
+    bad = _coprime_instance()
+    f64 = DEV.replace(numeric_policy="f64")
+    for policy, oracle in (("dp", dp_schedule), ("simpledp", simpledp_schedule)):
+        res = solve(bad, policy=policy, context=f64)
+        assert (res.cost, res.detours) == oracle(bad), policy
+        assert evaluate_detours(bad, res.detours) == res.cost
+
+
+def test_f64_fallback_only_reroutes_guard_failures(rng):
+    """int32-safe instances must keep taking the int32 launches: an f64
+    context changes nothing for them (bit-identical batch, order kept)."""
+    import jax
+
+    good = [_hetero_instance(rng) for _ in range(3)]
+    bad = _coprime_instance()
+    batch = [good[0], bad, good[1], good[2]]
+    res = solve_batch(batch, policy="dp", context=DEV.replace(numeric_policy="f64"))
+    strict = solve_batch(good, policy="dp", context=DEV)
+    assert [(r.cost, r.detours) for r in (res[0], res[2], res[3])] == [
+        (r.cost, r.detours) for r in strict
+    ]
+    assert res[1].cost == dp_schedule(bad)[0]
+    # the scoped x64 context never leaks into global jax state
+    assert not jax.config.jax_enable_x64
+
+
+def test_f64_guard_rejects_beyond_exactness_domain():
+    """Past 2**53 the float64 table could round: must raise, not lie."""
+    huge = make_instance(
+        [0, 2 * 10**15 + 1], [10**6 + 1, 10**6 + 3], [3, 3], u_turn=10**7 + 1
+    )
+    with pytest.raises(ValueError, match="2\\*\\*53"):
+        solve(huge, policy="dp", context=DEV.replace(numeric_policy="f64"))
+    # python remains the unbounded-exactness backend
+    py = solve(huge, policy="dp")
+    assert py.cost == evaluate_detours(huge, py.detours)
 
 
 def test_rescale_is_exact_not_approximate(rng):
@@ -161,7 +220,7 @@ def test_rescale_is_exact_not_approximate(rng):
             u_turn=inst0.u_turn * k,
         )
         assert rescale_instance(inst)[1] % k == 0
-        assert solve(inst, policy="dp", backend="pallas-interpret").cost == (
+        assert solve(inst, policy="dp", context=DEV).cost == (
             dp_schedule(inst)[0]
         )
 
@@ -172,8 +231,8 @@ def test_rescale_is_exact_not_approximate(rng):
 def test_cache_hit_is_equal_and_counted(rng):
     cache = SolveCache()
     inst = _hetero_instance(rng)
-    r1 = solve(inst, policy="dp", backend="pallas-interpret", cache=cache)
-    r2 = solve(inst, policy="dp", backend="pallas-interpret", cache=cache)
+    r1 = solve(inst, policy="dp", context=DEV.replace(cache=cache))
+    r2 = solve(inst, policy="dp", context=DEV.replace(cache=cache))
     assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
     assert (r1.cost, r1.detours) == (r2.cost, r2.detours)
 
@@ -183,18 +242,18 @@ def test_cache_hit_never_aliases(rng):
     corrupt the cached entry or serve a stale result."""
     cache = SolveCache()
     inst = _hetero_instance(rng)
-    first = solve(inst, policy="dp", cache=cache)
-    hit = solve(inst, policy="dp", cache=cache)
+    first = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
+    hit = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
     assert hit.detours is not first.detours
     hit.detours.append((999, 999))  # vandalise the returned copy
-    clean = solve(inst, policy="dp", cache=cache)
+    clean = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
     assert clean.detours == first.detours
 
     # mutate the instance in place: the content-derived key must miss, and
     # the fresh solve must reflect the new instance, not the cached one
     misses_before = cache.misses
     inst.mult[0] += 3
-    fresh = solve(inst, policy="dp", cache=cache)
+    fresh = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
     assert cache.misses == misses_before + 1
     assert fresh.cost == dp_schedule(inst)[0]
     assert fresh.cost == evaluate_detours(inst, fresh.detours)
@@ -203,9 +262,9 @@ def test_cache_hit_never_aliases(rng):
 def test_cache_batch_only_solves_misses(rng):
     cache = SolveCache()
     insts = [_hetero_instance(rng) for _ in range(5)]
-    a = solve_batch(insts, policy="dp", cache=cache)
+    a = solve_batch(insts, policy="dp", context=ExecutionContext(cache=cache))
     extra = _hetero_instance(rng)
-    b = solve_batch(insts + [extra], policy="dp", cache=cache)
+    b = solve_batch(insts + [extra], policy="dp", context=ExecutionContext(cache=cache))
     assert cache.hits == 5 and cache.misses == 6
     assert [r.cost for r in b[:5]] == [r.cost for r in a]
     assert b[5].cost == dp_schedule(extra)[0]
@@ -214,18 +273,18 @@ def test_cache_batch_only_solves_misses(rng):
 def test_cache_keys_separate_policies_and_backends(rng):
     cache = SolveCache()
     inst = _hetero_instance(rng)
-    dp = solve(inst, policy="dp", cache=cache)
-    sdp = solve(inst, policy="simpledp", cache=cache)
+    dp = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
+    sdp = solve(inst, policy="simpledp", context=ExecutionContext(cache=cache))
     assert cache.misses == 2  # different policies never share entries
     assert dp.cost <= sdp.cost
-    dev = solve(inst, policy="dp", backend="pallas-interpret", cache=cache)
+    dev = solve(inst, policy="dp", context=DEV.replace(cache=cache))
     assert cache.misses == 3 and dev.backend == "pallas-interpret"
 
 
 def test_cache_eviction_is_bounded(rng):
     cache = SolveCache(maxsize=3)
     for _ in range(6):
-        solve(_hetero_instance(rng), policy="gs", cache=cache)
+        solve(_hetero_instance(rng), policy="gs", context=ExecutionContext(cache=cache))
     assert len(cache) == 3 and cache.misses == 6
 
 
@@ -235,9 +294,9 @@ def test_cache_lru_eviction_order(rng):
     cache = SolveCache(maxsize=3)
     a, b, c, d = (_hetero_instance(rng) for _ in range(4))
     for inst in (a, b, c):
-        solve(inst, policy="gs", cache=cache)
-    solve(a, policy="gs", cache=cache)  # refresh a: LRU order is now b, c, a
-    solve(d, policy="gs", cache=cache)  # evicts b
+        solve(inst, policy="gs", context=ExecutionContext(cache=cache))
+    solve(a, policy="gs", context=ExecutionContext(cache=cache))  # refresh a: LRU order is now b, c, a
+    solve(d, policy="gs", context=ExecutionContext(cache=cache))  # evicts b
     assert len(cache) == 3
     assert cache.get(b, "gs", "python") is None  # evicted -> miss
     for inst in (a, c, d):  # everything else still resident
@@ -246,7 +305,7 @@ def test_cache_lru_eviction_order(rng):
     # stalest entry is a, so inserting a fresh one must evict a, not c or d
     e = _hetero_instance(rng)
     cache.get(c, "gs", "python")
-    solve(e, policy="gs", cache=cache)
+    solve(e, policy="gs", context=ExecutionContext(cache=cache))
     assert cache.get(a, "gs", "python") is None
     assert cache.get(c, "gs", "python") is not None
 
@@ -258,7 +317,7 @@ def test_cache_key_isolation_is_total(rng):
     combos = [("dp", "python"), ("dp", "pallas-interpret"), ("gs", "python"),
               ("simpledp", "python")]
     for policy, backend in combos:
-        solve(inst, policy=policy, backend=backend, cache=cache)
+        solve(inst, policy=policy, context=ExecutionContext(backend=backend, cache=cache))
     assert len(cache) == len(combos) and cache.misses == len(combos)
     for policy, backend in combos:
         hit = cache.get(inst, policy, backend)
@@ -273,7 +332,7 @@ def test_cache_hit_returns_equal_but_not_aliased_detours(rng):
     tuple and never a previously returned list."""
     cache = SolveCache()
     inst = _hetero_instance(rng)
-    first = solve(inst, policy="dp", cache=cache)
+    first = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
     h1 = cache.get(inst, "dp", "python")
     h2 = cache.get(inst, "dp", "python")
     assert h1.detours == h2.detours == first.detours
@@ -285,7 +344,8 @@ def test_cache_hit_returns_equal_but_not_aliased_detours(rng):
 def test_library_schedule_uses_cache(rng):
     from repro.storage.tape import TapeLibrary
 
-    lib = TapeLibrary(capacity_per_tape=150_000, u_turn=700, cache=SolveCache())
+    lib = TapeLibrary(capacity_per_tape=150_000, u_turn=700,
+                      context=ExecutionContext(cache=SolveCache()))
     for i in range(9):
         lib.store(f"f{i}", 30_000)
     reqs = {f"f{i}": 1 + i % 2 for i in range(9)}

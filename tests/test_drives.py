@@ -1,0 +1,267 @@
+"""DrivePool: allocation determinism, mount accounting, and the pool-served
+online loop — including the ISSUE acceptance bar:
+
+* ``n_drives < n_cartridges`` with nonzero mount costs serves a seeded
+  240-request trace deterministically, every emitted schedule oracle-verified;
+* at ``n_drives = len(tapes)`` with zero mount cost the pool reduces
+  bit-identically to the one-drive-per-cartridge (PR-3) server, and the new
+  admission names are aliases of the legacy ones there;
+* ``batched`` (one ``solve_batch`` launch per event tick) schedules
+  identically to ``per-drive-accumulate`` on any backend.
+"""
+
+import pytest
+
+from repro.core import ExecutionContext
+from repro.serving.drives import DriveCosts, DrivePool
+from repro.serving.queue import (
+    ADMISSIONS,
+    LEGACY_ADMISSIONS,
+    POOL_ADMISSIONS,
+    OnlineTapeServer,
+    serve_trace,
+)
+from repro.serving.sim import demo_library, poisson_trace
+
+SEED = 20260731
+COSTS = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+
+
+def build_library():
+    return demo_library(SEED)
+
+
+def build_trace(n_requests=240, rate=250_000):
+    return poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=rate, seed=SEED
+    )
+
+
+def _timeline(report):
+    return (
+        report.summary(),
+        [(r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served],
+        sorted(
+            (b.tape_id, b.drive, b.dispatched, b.mount_delay, b.n_requests,
+             b.solver_cost, b.rewind, b.preempted)
+            for b in report.batches
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# pool primitives
+# ---------------------------------------------------------------------------
+def test_drive_costs_validate_and_switch():
+    assert DriveCosts().switch == 0
+    assert COSTS.switch == 180_000
+    with pytest.raises(ValueError, match=">= 0"):
+        DriveCosts(mount=-1)
+    with pytest.raises(ValueError, match="at least one drive"):
+        DrivePool(0)
+
+
+def test_pool_allocation_is_deterministic_and_counts_mounts():
+    pool = DrivePool(2, COSTS)
+    d0, delay = pool.acquire("A")
+    assert (d0.drive_id, delay) == (0, COSTS.switch)  # lowest empty drive
+    d1, delay = pool.acquire("B")
+    assert (d1.drive_id, delay) == (1, COSTS.switch)
+    # the holder is preferred and free to re-serve at no mount cost
+    again, delay = pool.acquire("A")
+    assert again is d0 and delay == 0
+    # a third cartridge evicts the lowest-numbered free occupied drive
+    d2, delay = pool.acquire("C")
+    assert d2.drive_id == 0 and delay == COSTS.unmount + COSTS.switch
+    assert d2.mounted == "C" and pool.drive_of("A") is None
+    assert pool.stats() == {
+        "n_drives": 2,
+        "mounts": 3,
+        "unmounts": 1,
+        "mount_time": 3 * COSTS.switch + COSTS.unmount,
+    }
+
+
+def test_pool_cartridge_exclusivity():
+    pool = DrivePool(3)
+    drive, _ = pool.acquire("A")
+    drive.busy = True
+    # A exists once: its holder is busy, so A cannot be served elsewhere even
+    # though two drives sit idle
+    assert not pool.can_serve("A")
+    assert pool.can_serve("B")
+    drive.busy = False
+    assert pool.can_serve("A")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: constrained pool + mount costs on the seeded 240-request trace
+# ---------------------------------------------------------------------------
+def test_constrained_pool_serves_240_requests_deterministically():
+    trace = build_trace(n_requests=240)
+    n_tapes = len(build_library().tapes)
+    assert len({r.tape_id for r in trace}) >= 4
+    for admission in POOL_ADMISSIONS:
+        runs = [
+            _timeline(
+                serve_trace(
+                    build_library(), trace, admission, window=400_000,
+                    policy="dp", n_drives=2, drive_costs=COSTS,
+                )
+            )
+            for _ in range(2)
+        ]
+        assert runs[0] == runs[1], admission  # bit-deterministic
+        summary = runs[0][0]
+        assert summary["n_served"] == 240, admission
+        assert summary["all_verified"], admission
+        assert summary["n_drives"] == 2 < n_tapes
+        assert summary["mounts"] > n_tapes  # cartridges cycled through drives
+        assert summary["unmounts"] > 0
+        assert summary["mount_time"] > 0
+
+
+def test_every_pool_schedule_passes_oracle():
+    """verify=False run: the recorded per-batch flags are real observations;
+    the enforcing run must then agree batch for batch."""
+    trace = build_trace(n_requests=220)
+    for admission in ("fifo-global", "per-drive-accumulate", "batched"):
+        unenforced = serve_trace(
+            build_library(), trace, admission, window=300_000, policy="dp",
+            n_drives=2, drive_costs=COSTS, verify=False,
+        )
+        assert unenforced.batches, admission
+        for batch in unenforced.batches:
+            assert batch.verified, admission
+            assert batch.solver_cost == batch.replay_cost, admission
+        enforced = serve_trace(
+            build_library(), trace, admission, window=300_000, policy="dp",
+            n_drives=2, drive_costs=COSTS,
+        )
+        assert enforced.summary() == unenforced.summary()
+
+
+def test_mount_legs_shift_completions():
+    """With one drive and nonzero mount costs every batch after the first on
+    a new cartridge charges its mount delay ahead of the trajectory."""
+    trace = build_trace(n_requests=120)
+    report = serve_trace(
+        build_library(), trace, "per-drive-accumulate", window=200_000,
+        policy="dp", n_drives=1, drive_costs=COSTS,
+    )
+    delays = [b.mount_delay for b in report.batches]
+    assert delays[0] == COSTS.switch  # first mount: no unmount charged
+    assert all(
+        d in (0, COSTS.switch, COSTS.switch + COSTS.unmount) for d in delays
+    )
+    assert sum(delays) == report.summary()["mount_time"]
+    # served completions all land at/after dispatch + that batch's mount leg
+    by_dispatch = {b.dispatched: b.mount_delay for b in report.batches}
+    for r in report.served:
+        assert r.completed > r.dispatched + by_dispatch.get(r.dispatched, 0) - 1
+
+
+def test_preempt_during_mount_cannot_skip_the_mount():
+    """A preemption landing inside the mount legs must not teleport the head:
+    the drive stays busy until the in-flight mount completes, so no later
+    dispatch on that drive starts its trajectory before the mount could
+    physically finish."""
+    from repro.serving.sim import Request
+
+    lib = build_library()
+    tape_id = lib.tapes[0].tape_id
+    names = sorted(n for n, t in lib.location.items() if t == tape_id)
+    assert len(names) >= 2
+    # second arrival lands deep inside the first dispatch's mount window
+    trace = [
+        Request(time=0, req_id=0, tape_id=tape_id, name=names[0]),
+        Request(time=10, req_id=1, tape_id=tape_id, name=names[1]),
+    ]
+    report = serve_trace(
+        lib, trace, "preempt", policy="dp", n_drives=1, drive_costs=COSTS
+    )
+    assert report.n_preemptions == 1
+    first, second = report.batches
+    assert first.preempted and first.mount_delay == COSTS.switch
+    # re-dispatch waits for the aborted mount to complete
+    assert second.dispatched >= COSTS.switch
+    assert second.mount_delay == 0  # the cartridge is threaded by then
+    assert report.n_served == 2
+    for r in report.served:
+        assert r.completed > COSTS.switch  # nothing finishes before the mount
+
+
+def test_preempt_works_on_constrained_pool():
+    trace = build_trace(n_requests=240, rate=150_000)
+    report = serve_trace(
+        build_library(), trace, "preempt", policy="dp",
+        n_drives=2, drive_costs=COSTS,
+    )
+    assert report.n_served == len(trace)
+    assert sorted(r.req_id for r in report.served) == [r.req_id for r in trace]
+    assert len({r.req_id for r in report.served}) == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# reduction: dedicated pool + zero costs == the PR-3 one-drive-per-cartridge
+# server, and the pool admission names alias the legacy ones there
+# ---------------------------------------------------------------------------
+def test_dedicated_zero_cost_pool_reduces_to_legacy_server():
+    trace = build_trace(n_requests=240)
+    n_tapes = len(build_library().tapes)
+    default = serve_trace(
+        build_library(), trace, "accumulate", window=400_000, policy="dp"
+    )
+    explicit = serve_trace(
+        build_library(), trace, "accumulate", window=400_000, policy="dp",
+        n_drives=n_tapes, drive_costs=DriveCosts(),
+    )
+    assert _timeline(default) == _timeline(explicit)
+    assert default.summary()["mounts"] == n_tapes  # one thread per cartridge
+    assert default.summary()["mount_time"] == 0
+
+
+@pytest.mark.parametrize(
+    "legacy,pooled",
+    [("fifo", "fifo-global"), ("accumulate", "per-drive-accumulate")],
+)
+def test_pool_admissions_alias_legacy_at_special_case(legacy, pooled):
+    trace = build_trace(n_requests=200)
+    a = serve_trace(build_library(), trace, legacy, window=300_000, policy="dp")
+    b = serve_trace(build_library(), trace, pooled, window=300_000, policy="dp")
+    sa, served_a, batches_a = _timeline(a)
+    sb, served_b, batches_b = _timeline(b)
+    assert {**sa, "admission": pooled} == sb
+    assert (served_a, batches_a) == (served_b, batches_b)
+
+
+def test_batched_schedules_identically_to_per_drive_accumulate():
+    trace = build_trace(n_requests=200)
+    kw = dict(window=300_000, policy="dp", n_drives=2, drive_costs=COSTS)
+    acc = serve_trace(build_library(), trace, "per-drive-accumulate", **kw)
+    bat = serve_trace(build_library(), trace, "batched", **kw)
+    sa, served_a, batches_a = _timeline(acc)
+    sb, served_b, batches_b = _timeline(bat)
+    assert {**sa, "admission": "batched"} == sb
+    assert (served_a, batches_a) == (served_b, batches_b)
+
+
+def test_batched_admission_on_device_backend():
+    """The batched admission's one-launch-per-tick path through solve_batch
+    must agree exactly with the python backend."""
+    trace = build_trace(n_requests=60)
+    kw = dict(window=400_000, policy="dp", n_drives=2, drive_costs=COSTS)
+    py = serve_trace(build_library(), trace, "batched",
+                     context=ExecutionContext(), **kw)
+    dev = serve_trace(build_library(), trace, "batched",
+                      context=ExecutionContext(backend="pallas-interpret"), **kw)
+    assert py.total_sojourn == dev.total_sojourn
+    assert [r.completed for r in py.served] == [r.completed for r in dev.served]
+
+
+def test_admission_registry_is_coherent():
+    assert set(LEGACY_ADMISSIONS) | set(POOL_ADMISSIONS) == set(ADMISSIONS)
+    with pytest.raises(ValueError, match="admission"):
+        OnlineTapeServer(build_library(), "lifo")
+    with pytest.raises(ValueError, match="n_drives"):
+        OnlineTapeServer(build_library(), "fifo-global", n_drives=0)

@@ -20,6 +20,7 @@ import pytest
 
 from conftest import HAS_HYPOTHESIS, fallback_instances, instances_property
 from repro.core import (
+    ExecutionContext,
     evaluate_detours,
     list_solvers,
     lower_bound_gap,
@@ -30,7 +31,9 @@ from repro.core import (
 from repro.core.verify import verify_schedule
 from repro.serving.sim import replay_schedule
 
-DP_FAMILY = ("dp", "logdp1", "logdp5")
+#: policies with a device path (simpledp rides the wavefront's disjoint clip)
+DP_FAMILY = ("dp", "logdp1", "logdp5", "simpledp")
+DEV = ExecutionContext(backend="pallas-interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -66,8 +69,8 @@ def test_lower_bound_gap_well_defined(inst):
 def test_python_pallas_interpret_bit_parity(inst):
     """Device backend == python backend, cost *and* detours, DP family."""
     for policy in DP_FAMILY:
-        py = solve(inst, policy=policy, backend="python")
-        dev = solve(inst, policy=policy, backend="pallas-interpret")
+        py = solve(inst, policy=policy)
+        dev = solve(inst, policy=policy, context=DEV)
         assert (dev.cost, dev.detours) == (py.cost, py.detours), policy
         assert verify_schedule(inst, dev.detours, cost=dev.cost) == py.cost
 

@@ -14,7 +14,7 @@ reads a wall clock):
 
 import pytest
 
-from repro.core import SolveCache, evaluate_detours, solve
+from repro.core import ExecutionContext, SolveCache, evaluate_detours, solve
 from repro.core.verify import verify_schedule
 from repro.serving.queue import ADMISSIONS, OnlineTapeServer, serve_trace
 from repro.serving.sim import (
@@ -146,7 +146,7 @@ def test_queue_service_works_with_any_policy_backend_combo():
     ]:
         report = serve_trace(
             build_library(), trace, "accumulate", window=400_000,
-            policy=policy, backend=backend,
+            policy=policy, context=ExecutionContext(backend=backend),
         )
         assert report.n_served == 60
         costs[(policy, backend)] = report.total_sojourn
@@ -159,11 +159,12 @@ def test_cache_shared_across_dispatches():
     """Re-running the same trace against the library cache re-hits the memo."""
     trace = build_trace(n_requests=80)
     cache = SolveCache()
+    ctx = ExecutionContext(cache=cache)
     first = serve_trace(build_library(), trace, "accumulate", window=300_000,
-                        policy="dp", cache=cache)
+                        policy="dp", context=ctx)
     misses = cache.misses
     second = serve_trace(build_library(), trace, "accumulate", window=300_000,
-                         policy="dp", cache=cache)
+                         policy="dp", context=ctx)
     assert cache.misses == misses  # all batch multisets already memoised
     assert cache.hits >= len(second.batches)
     assert first.total_sojourn == second.total_sojourn

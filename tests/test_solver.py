@@ -21,13 +21,15 @@ from repro.core import (
     solve_batch,
     virtual_lb,
 )
-from repro.core import SolveCache, UnsupportedBackendError
+from repro.core import ExecutionContext, SolveCache, UnsupportedBackendError
 from repro.core.solver import BACKENDS, DPSolver, register_solver
 
 POLICIES = [
     "nodetour", "gs", "fgs", "nfgs", "lognfgs5",
     "logdp1", "logdp5", "simpledp", "dp",
 ]
+
+DEV = ExecutionContext(backend="pallas-interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -43,19 +45,18 @@ def test_unknown_policy_and_backend_raise(rng):
     with pytest.raises(KeyError, match="unknown policy"):
         solve(inst, policy="nope")
     with pytest.raises(KeyError, match="unknown backend"):
-        solve(inst, policy="dp", backend="cuda")
-    # heuristics and simpledp have no device backend (yet): loud error
-    for policy in ("gs", "simpledp"):
-        with pytest.raises(ValueError, match="backend"):
-            solve(inst, policy=policy, backend="pallas-interpret")
+        ExecutionContext(backend="cuda")
+    # list heuristics have no device backend: loud error
+    with pytest.raises(ValueError, match="backend"):
+        solve(inst, policy="gs", context=DEV)
 
 
-DEVICE_POLICIES = {"logdp1", "logdp5", "dp"}
+DEVICE_POLICIES = {"logdp1", "logdp5", "dp", "simpledp"}
 
 
 def test_supports_device_capability_flag_all_nine_policies():
     """The registry capability flag matches the advertised backends for every
-    policy: exactly the DP family has a device path today."""
+    policy: the DP family and SIMPLEDP have a device path, heuristics not."""
     for name in POLICIES:
         solver = get_solver(name)
         expected = name in DEVICE_POLICIES
@@ -78,27 +79,31 @@ def test_unsupported_backend_error_is_typed_and_message_stable(rng):
                 f"policy {name!r} has no {backend!r} backend "
                 f"(supported: {solver.backends})"
             )
+            ctx = ExecutionContext(backend=backend)
             with pytest.raises(UnsupportedBackendError) as ei:
-                solve(inst, policy=name, backend=backend)
+                solve(inst, policy=name, context=ctx)
             assert str(ei.value) == expected_msg, name
             assert isinstance(ei.value, ValueError)  # old callers keep working
             assert (ei.value.policy, ei.value.backend) == (name, backend)
             with pytest.raises(UnsupportedBackendError) as ei:
-                solve_batch([inst, inst], policy=name, backend=backend)
+                solve_batch([inst, inst], policy=name, context=ctx)
             assert str(ei.value) == expected_msg, name
 
 
 def test_unsupported_backend_batch_fails_before_any_solve(rng):
-    """simpledp (and every python-only policy) on a device backend must be
-    all-or-nothing through solve_batch: no partial solving, no cache-miss
-    pollution before the raise."""
+    """A python-only policy on a device backend must be all-or-nothing
+    through solve_batch: no partial solving, no cache-miss pollution before
+    the raise."""
     insts = [random_instance(rng, hi=5) for _ in range(3)]
     cache = SolveCache()
     with pytest.raises(UnsupportedBackendError):
-        solve_batch(insts, policy="simpledp", backend="pallas-interpret", cache=cache)
+        solve_batch(insts, policy="gs", context=DEV.replace(cache=cache))
     assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0}
     with pytest.raises(UnsupportedBackendError):
-        solve(insts[0], policy="simpledp", backend="pallas", cache=cache)
+        solve(
+            insts[0], policy="nfgs",
+            context=ExecutionContext(backend="pallas", cache=cache),
+        )
     assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0}
 
 
@@ -187,7 +192,7 @@ def test_pallas_interpret_parity_50_instances():
         with_u += u > 0
 
         opt, _ = dp_schedule(inst)
-        res = solve(inst, policy="dp", backend="pallas-interpret")
+        res = solve(inst, policy="dp", context=DEV)
         assert res.cost == opt, (trial, res.cost, opt)
         assert evaluate_detours(inst, res.detours) == opt, (trial, res.detours)
         checked += 1
@@ -199,15 +204,37 @@ def test_pallas_interpret_logdp_span_parity(rng):
     for _ in range(8):
         inst = random_instance(rng, hi=10)
         for policy in ("logdp1", "logdp5"):
-            py = solve(inst, policy=policy, backend="python")
-            dev = solve(inst, policy=policy, backend="pallas-interpret")
+            py = solve(inst, policy=policy)
+            dev = solve(inst, policy=policy, context=DEV)
             assert dev.cost == py.cost, policy
             assert evaluate_detours(inst, dev.detours) == py.cost
 
 
+def test_pallas_interpret_simpledp_bit_parity(rng):
+    """SIMPLEDP rides the wavefront's disjoint candidate clip: cost *and*
+    detours must be bit-identical to the dedicated 2-D python recursion, and
+    stay sandwiched between the exact DP and the heuristics."""
+    from repro.core import simpledp_schedule
+
+    checked = 0
+    for _ in range(25):
+        inst = random_instance(rng, lo=1, hi=14)
+        py_cost, py_dets = simpledp_schedule(inst)
+        dev = solve(inst, policy="simpledp", context=DEV)
+        assert (dev.cost, dev.detours) == (py_cost, py_dets)
+        assert evaluate_detours(inst, dev.detours) == dev.cost
+        assert dp_schedule(inst)[0] <= dev.cost
+        checked += 1
+    assert checked >= 25
+    # batched simpledp device solving is bit-identical too
+    insts = [random_instance(rng, lo=1, hi=12) for _ in range(8)]
+    for inst, res in zip(insts, solve_batch(insts, policy="simpledp", context=DEV)):
+        assert (res.cost, res.detours) == simpledp_schedule(inst)
+
+
 def test_solve_batch_one_launch_matches_per_instance(rng):
     insts = [random_instance(rng, lo=1, hi=9) for _ in range(6)]
-    batched = solve_batch(insts, policy="dp", backend="pallas-interpret")
+    batched = solve_batch(insts, policy="dp", context=DEV)
     for inst, res in zip(insts, batched):
         assert res.cost == dp_schedule(inst)[0]
         assert evaluate_detours(inst, res.detours) == res.cost
@@ -230,8 +257,8 @@ def test_schedule_reads_backend_selector():
     for i in range(12):
         t.append(f"f{i:02d}", int(rng.integers(1_000, 40_000)))
     reqs = {f"f{i:02d}": int(rng.integers(1, 5)) for i in range(0, 12, 2)}
-    py = schedule_reads(t, reqs, policy="dp", backend="python")
-    dev = schedule_reads(t, reqs, policy="dp", backend="pallas-interpret")
+    py = schedule_reads(t, reqs, policy="dp")
+    dev = schedule_reads(t, reqs, policy="dp", context=DEV)
     assert dev.total_cost == py.total_cost
     assert dev.service_time == py.service_time
     assert dev.backend == "pallas-interpret"
@@ -245,8 +272,8 @@ def test_library_schedule_batches_on_device():
         lib.store(f"shard{i:02d}", 25_000)  # ~4 shards per tape
     assert len(lib.tapes) >= 3
     reqs = {f"shard{i:02d}": 1 + i % 3 for i in range(12)}
-    py = lib.schedule(reqs, policy="dp", backend="python")
-    dev = lib.schedule(reqs, policy="dp", backend="pallas-interpret")
+    py = lib.schedule(reqs, policy="dp")
+    dev = lib.schedule(reqs, policy="dp", context=DEV)
     assert [p.total_cost for p in py] == [p.total_cost for p in dev]
     assert sum(len(p.order) for p in dev) == 12
 
