@@ -19,13 +19,20 @@ Paper artefacts reproduced (on the synthetic IN2P3-calibrated dataset):
     restore vs positional sweep (mean shard service time + solve-cache
     hit/miss counters).
   * ``bench_online_serving``        — online queue service: arrival-rate sweep
-    of mean/p95 request sojourn per admission policy (fifo / accumulate /
-    preempt) on a seeded trace, every emitted schedule re-scored by the
-    discrete-event simulator oracle; asserts accumulate-then-solve beats
-    per-request FIFO under load.  Plus the drive-pool sweep: drive-count x
-    admission-policy (fifo-global / per-drive-accumulate / batched) with a
-    nonzero mount/unmount/load-seek cost model, showing how mount contention
-    degrades sojourn as the pool shrinks below one-drive-per-cartridge.
+    of mean/p50/p95/p99 request sojourn per admission policy (fifo /
+    accumulate / preempt) on a seeded trace, every emitted schedule re-scored
+    by the discrete-event simulator oracle; asserts accumulate-then-solve
+    beats per-request FIFO under load.  Plus the drive-pool sweep:
+    drive-count x admission-policy (fifo-global / per-drive-accumulate /
+    batched) with a nonzero mount/unmount/load-seek cost model, showing how
+    mount contention degrades sojourn as the pool shrinks below
+    one-drive-per-cartridge.  Plus the QoS sweep: deadline-tightness x
+    admission miss-rate curves on a deadline/class-annotated trace
+    (``repro.data.traces.qos_poisson_trace``) — asserts the deadline-aware
+    admissions (``edf-global`` / ``slack-accumulate``) achieve strictly
+    fewer deadline misses than ``fifo-global`` at every swept tightness
+    (exact virtual-time ints) — and the mount-scheduler sweep
+    (greedy / lru / lookahead) on the constrained pool.
 
 All scheduling goes through the solver registry (``repro.core.solver``) under
 an ``ExecutionContext``; every reported cost is re-validated against the
@@ -563,9 +570,26 @@ def bench_online_serving(full: bool = False):
     ``per-drive-accumulate`` (it only changes how solves are batched onto
     the device), and the dedicated pool must serve no worse than the
     single-drive pool under every batching admission.
+
+    The QoS sweep replays one deadline/class-annotated trace per swept
+    tightness (same arrival process at every tightness — only the deadline
+    pressure changes) through ``fifo-global`` and the deadline-aware
+    admissions, recording per-admission miss-rate curves and per-class SLO
+    summaries; the deadline-aware admissions must achieve *strictly fewer*
+    misses than ``fifo-global`` at every tightness, asserted on exact
+    integer virtual time.  The mount-scheduler sweep then runs the
+    constrained pool under each registered eviction policy.
     """
+    from repro.data.traces import DEFAULT_QOS_CLASSES, qos_poisson_trace, to_requests
     from repro.serving.drives import DriveCosts
-    from repro.serving.queue import LEGACY_ADMISSIONS, POOL_ADMISSIONS, serve_trace
+    from repro.serving.qos import slo_report
+    from repro.serving.queue import (
+        LEGACY_ADMISSIONS,
+        POOL_ADMISSIONS,
+        QOS_ADMISSIONS,
+        WINDOWED_ADMISSIONS,
+        serve_trace,
+    )
     from repro.serving.sim import demo_library, poisson_trace
 
     seed = 20260731
@@ -604,7 +628,8 @@ def bench_online_serving(full: bool = False):
                 f"online/{admission}/rate_{rate}",
                 dt * 1e6,
                 f"mean_sojourn={s['mean_sojourn']:.4g};"
-                f"p95={s['p95_sojourn']:.4g};batches={s['n_batches']};"
+                f"p50={s['p50_sojourn']:.4g};p95={s['p95_sojourn']:.4g};"
+                f"p99={s['p99_sojourn']:.4g};batches={s['n_batches']};"
                 f"preempts={s['n_preemptions']}",
             )
         assert per_admission["accumulate"] < per_admission["fifo"], (
@@ -642,7 +667,8 @@ def bench_online_serving(full: bool = False):
                 f"online/pool/{admission}/drives_{n_drives}",
                 dt * 1e6,
                 f"mean_sojourn={s['mean_sojourn']:.4g};"
-                f"p95={s['p95_sojourn']:.4g};batches={s['n_batches']};"
+                f"p50={s['p50_sojourn']:.4g};p95={s['p95_sojourn']:.4g};"
+                f"p99={s['p99_sojourn']:.4g};batches={s['n_batches']};"
                 f"mounts={s['mounts']};unmounts={s['unmounts']}",
             )
     for n_drives in (1, 2, n_tapes):
@@ -655,8 +681,83 @@ def bench_online_serving(full: bool = False):
         assert per_cell[(admission, n_tapes)] <= per_cell[(admission, 1)], (
             f"{admission}: a dedicated pool must serve no worse than one drive"
         )
+
+    # -- QoS sweep: deadline tightness x admission, miss-rate curves ---------
+    qos_rate = 250_000
+    qos_admissions = ("fifo-global",) + QOS_ADMISSIONS + ("per-drive-accumulate",)
+    tightness_sweep = (2_000_000, 8_000_000, 32_000_000)
+    qos_rows = []
+    for tightness in tightness_sweep:
+        records = qos_poisson_trace(
+            build_library(), n_requests=n_requests, mean_interarrival=qos_rate,
+            seed=seed, tightness=tightness,
+        )
+        qtrace, qos = to_requests(records, build_library())
+        missed: dict[str, int] = {}
+        for admission in qos_admissions:
+            lib = build_library()
+            t0 = time.perf_counter()
+            report = serve_trace(
+                lib,
+                qtrace,
+                admission,
+                window=window if admission in WINDOWED_ADMISSIONS else 0,
+                policy="dp",
+                qos=qos,
+                context=lib.context,
+            )
+            dt = time.perf_counter() - t0
+            s = report.summary()
+            assert s["n_served"] == n_requests and s["all_verified"]
+            missed[admission] = report.n_missed  # exact virtual-time int
+            qos_rows.append({
+                "tightness": tightness, "wall_s": dt, **s,
+                "slo": slo_report(report).summary(),
+            })
+            _emit(
+                f"online/qos/{admission}/tight_{tightness}",
+                dt * 1e6,
+                f"missed={s['n_missed']}/{s['n_deadlines']};"
+                f"miss_rate={s['miss_rate']:.3f};"
+                f"p50={s['p50_sojourn']:.4g};p99={s['p99_sojourn']:.4g}",
+            )
+        for admission in QOS_ADMISSIONS:
+            assert missed[admission] < missed["fifo-global"], (
+                f"{admission} must achieve strictly fewer deadline misses "
+                f"than fifo-global at tightness {tightness} "
+                f"({missed[admission]} vs {missed['fifo-global']})"
+            )
+
+    # -- mount-scheduler sweep on the constrained pool -----------------------
+    records = qos_poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=qos_rate,
+        seed=seed, tightness=8_000_000,
+    )
+    qtrace, qos = to_requests(records, build_library())
+    sched_rows = []
+    for admission in ("per-drive-accumulate", "slack-accumulate"):
+        for sched in ("greedy", "lru", "lookahead"):
+            lib = build_library()
+            t0 = time.perf_counter()
+            report = serve_trace(
+                lib, qtrace, admission, window=window, policy="dp",
+                n_drives=2, drive_costs=costs, qos=qos,
+                mount_scheduler=sched, context=lib.context,
+            )
+            dt = time.perf_counter() - t0
+            s = report.summary()
+            assert s["n_served"] == n_requests and s["all_verified"]
+            sched_rows.append({"wall_s": dt, **s})
+            _emit(
+                f"online/sched/{admission}/{sched}",
+                dt * 1e6,
+                f"mean_sojourn={s['mean_sojourn']:.4g};"
+                f"missed={s['n_missed']}/{s['n_deadlines']};"
+                f"mounts={s['mounts']};mount_time={s['mount_time']}",
+            )
+
     (RESULTS / "online_serving.json").write_text(
-        json.dumps(rows + pool_rows, indent=1)
+        json.dumps(rows + pool_rows + qos_rows + sched_rows, indent=1)
     )
     RECORD["online_serving"] = {
         "seed": seed,
@@ -669,8 +770,20 @@ def bench_online_serving(full: bool = False):
             "rate": rate,
             "rows": pool_rows,
         },
+        "qos_sweep": {
+            "rate": qos_rate,
+            "tightness": list(tightness_sweep),
+            "classes": [list(c) for c in DEFAULT_QOS_CLASSES],
+            "rows": qos_rows,
+        },
+        "scheduler_sweep": {
+            "costs": dataclasses.asdict(costs),
+            "n_drives": 2,
+            "tightness": 8_000_000,
+            "rows": sched_rows,
+        },
     }
-    return rows + pool_rows
+    return rows + pool_rows + qos_rows + sched_rows
 
 
 def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:

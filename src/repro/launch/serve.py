@@ -34,15 +34,32 @@ explicit mount cost model (``--tape-mount-cost`` / ``--tape-unmount-cost`` /
   re-solves the survivors together with the newcomer;
 * ``batched`` — cross-cartridge device batching: all mount-ready cartridges
   in an event tick are planned via a **single** ``solve_batch`` bucketed
-  launch.
+  launch;
+* ``edf-global`` / ``slack-accumulate`` — the deadline-aware (QoS)
+  admissions: earliest-deadline-first per-request serving, and
+  accumulate-then-solve whose hold window collapses as a queued request's
+  slack burns down.  They need deadlines on the trace: pass
+  ``--tape-tightness`` to annotate the generated trace
+  (:func:`repro.data.traces.qos_poisson_trace`) or replay a recorded one.
+
+**Recorded traces & SLOs** — ``--trace-file PATH`` replays a JSONL trace
+(:mod:`repro.data.traces`: arrival, tape, file, multiplicity, deadline,
+class) instead of generating one; ``--record-trace PATH`` writes the trace
+that was served (round-trips bit-exactly).  ``--tape-scheduler`` picks the
+drive-eviction policy (``greedy`` / ``lru`` / ``lookahead``,
+:data:`repro.serving.drives.MOUNT_SCHEDULERS`).  With deadlines present the
+table gains deadline-miss columns, and ``--slo-target RATE`` turns the run
+into a check: exit status 1 unless some swept admission meets the target
+miss rate.
 
 Every emitted schedule is validated by the **simulator oracle**
 (:mod:`repro.serving.sim` via :func:`repro.core.verify.verify_schedule`): the
 discrete-event replay independently recomputes the schedule's cost from the
 materialised head trajectory and must match the solver-reported cost exactly
 (integer arithmetic).  The printed table compares admission policies on one
-seeded arrival trace: mean/p95 service time (sojourn), batches, preemptions,
-mounts, and solve-cache hits.  ``--tape-admission all`` sweeps every policy.
+seeded arrival trace: mean/p50/p95 service time (sojourn), batches,
+preemptions, mounts, and solve-cache hits.  ``--tape-admission all`` sweeps
+every policy.
 """
 
 from __future__ import annotations
@@ -110,15 +127,27 @@ def _restore_from_tape(params, policy: str, backend: str) -> None:
     )
 
 
-def _serve_tape_queue(args) -> None:
-    """Drive the online tape-serving subsystem on a seeded arrival trace.
+def _serve_tape_queue(args) -> int:
+    """Drive the online tape-serving subsystem on one arrival trace.
 
-    Builds a small archive library, replays one Poisson-like trace through
-    each requested admission policy on a shared drive pool, and prints the
-    per-policy service-time table.  Every dispatched schedule passes the
-    simulator oracle (see the module docstring); the run is bit-deterministic
-    given ``--tape-seed``.
+    The trace is either replayed from a recorded JSONL file
+    (``--trace-file``), generated with deadline/class annotations
+    (``--tape-tightness``), or the plain seeded Poisson-like trace; each
+    requested admission policy serves it on a shared drive pool under the
+    chosen mount scheduler, and the per-policy service-time table is
+    printed (with deadline-miss columns when the trace carries deadlines).
+    Every dispatched schedule passes the simulator oracle (see the module
+    docstring); the run is bit-deterministic given ``--tape-seed`` (or the
+    trace file).  Returns a shell exit code: nonzero iff ``--slo-target``
+    is set and no swept admission met it.
     """
+    from ..data.traces import (
+        qos_poisson_trace,
+        read_trace,
+        records_of,
+        to_requests,
+        write_trace,
+    )
     from ..serving.drives import DriveCosts
     from ..serving.queue import ADMISSIONS, WINDOWED_ADMISSIONS, serve_trace
     from ..serving.sim import demo_library, poisson_trace
@@ -126,12 +155,39 @@ def _serve_tape_queue(args) -> None:
     def build_library():
         return demo_library(args.tape_seed, n_files=args.tape_files)
 
-    trace = poisson_trace(
-        build_library(),
-        n_requests=args.tape_requests,
-        mean_interarrival=args.tape_rate,
-        seed=args.tape_seed,
-    )
+    qos = {}
+    if args.trace_file:
+        if args.tape_tightness is not None:
+            print("--trace-file replays recorded deadlines; it cannot be "
+                  "combined with --tape-tightness")
+            return 2
+        records = read_trace(args.trace_file)
+        trace, qos = to_requests(records, build_library())
+        source = args.trace_file
+    elif args.tape_tightness is not None:
+        records = qos_poisson_trace(
+            build_library(),
+            n_requests=args.tape_requests,
+            mean_interarrival=args.tape_rate,
+            seed=args.tape_seed,
+            tightness=args.tape_tightness,
+        )
+        trace, qos = to_requests(records, build_library())
+        source = f"generated (tightness {args.tape_tightness})"
+    else:
+        trace = poisson_trace(
+            build_library(),
+            n_requests=args.tape_requests,
+            mean_interarrival=args.tape_rate,
+            seed=args.tape_seed,
+        )
+        records = None  # only materialised if the trace is being recorded
+        source = "generated (best-effort)"
+    if args.record_trace:
+        if records is None:
+            records = records_of(trace)
+        write_trace(args.record_trace, records)
+        print(f"recorded {len(records)} trace record(s) -> {args.record_trace}")
     admissions = (
         list(ADMISSIONS) if args.tape_admission == "all" else [args.tape_admission]
     )
@@ -142,14 +198,16 @@ def _serve_tape_queue(args) -> None:
     )
     n_drives = args.tape_drives  # None = one per cartridge (the PR-3 model)
     print(
-        f"online tape serving: {args.tape_requests} requests, "
+        f"online tape serving: {len(trace)} requests ({source}), "
         f"{len({r.tape_id for r in trace})} cartridge(s), "
         f"{n_drives if n_drives else 'dedicated'} drive(s), "
-        f"mean interarrival {args.tape_rate}, policy {args.tape_policy}/"
+        f"scheduler {args.tape_scheduler}, policy {args.tape_policy}/"
         f"{args.tape_backend}"
     )
-    print("admission,window,mean_sojourn,p95_sojourn,batches,preempts,"
-          "mounts,cache_hits")
+    deadline_cols = ",missed,miss_rate" if qos else ""
+    print("admission,window,mean_sojourn,p50_sojourn,p95_sojourn,batches,"
+          f"preempts,mounts,cache_hits{deadline_cols}")
+    best_miss_rate = None
     for admission in admissions:
         lib = build_library()
         t0 = time.time()
@@ -161,18 +219,44 @@ def _serve_tape_queue(args) -> None:
             policy=args.tape_policy,
             n_drives=n_drives,
             drive_costs=costs,
+            qos=qos or None,
+            mount_scheduler=args.tape_scheduler,
             context=lib.context.replace(backend=args.tape_backend),
         )
         dt = time.time() - t0
         s = report.summary()  # oracle runs per dispatch: a failure raised above
+        extra = ""
+        if qos:
+            extra = f",{s['n_missed']}/{s['n_deadlines']},{s['miss_rate']:.3f}"
+            best_miss_rate = (
+                s["miss_rate"]
+                if best_miss_rate is None
+                else min(best_miss_rate, s["miss_rate"])
+            )
         print(
             f"{admission},{s['window']},{s['mean_sojourn']:.4g},"
-            f"{s['p95_sojourn']:.4g},{s['n_batches']},{s['n_preemptions']},"
-            f"{s['mounts']},{s['cache']['hits']} ({dt*1e3:.0f} ms wall)"
+            f"{s['p50_sojourn']:.4g},{s['p95_sojourn']:.4g},{s['n_batches']},"
+            f"{s['n_preemptions']},{s['mounts']},{s['cache']['hits']}{extra} "
+            f"({dt*1e3:.0f} ms wall)"
         )
+    if args.slo_target is not None:
+        if not any(s.deadline is not None for s in qos.values()):
+            print("--slo-target needs a deadline-annotated trace "
+                  "(--tape-tightness or --trace-file with deadlines)")
+            return 2
+        ok = best_miss_rate is not None and best_miss_rate <= args.slo_target
+        print(
+            f"SLO {'PASS' if ok else 'FAIL'}: best miss rate "
+            f"{best_miss_rate:.3f} vs target {args.slo_target:.3f}"
+        )
+        return 0 if ok else 1
+    return 0
 
 
 def main() -> None:
+    from ..serving.drives import MOUNT_SCHEDULERS
+    from ..serving.queue import ADMISSIONS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b", choices=sorted(ARCHS))
     ap.add_argument("--reduced", action="store_true")
@@ -188,8 +272,23 @@ def main() -> None:
                     help="run the online tape-serving queue simulation "
                          "(admission-policy comparison) instead of model serving")
     ap.add_argument("--tape-admission", default="all",
-                    choices=["fifo", "accumulate", "preempt", "fifo-global",
-                             "per-drive-accumulate", "batched", "all"])
+                    choices=[*ADMISSIONS, "all"])
+    ap.add_argument("--tape-scheduler", default="greedy",
+                    choices=sorted(MOUNT_SCHEDULERS),
+                    help="drive-pool mount/eviction scheduler")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="replay a recorded JSONL trace (repro.data.traces) "
+                         "instead of generating one")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="write the served trace as JSONL (round-trips "
+                         "bit-exactly through --trace-file)")
+    ap.add_argument("--tape-tightness", type=int, default=None,
+                    help="annotate the generated trace with deadlines: "
+                         "deadline = arrival + tightness * class slack "
+                         "multiplier (enables the QoS admissions)")
+    ap.add_argument("--slo-target", type=float, default=None, metavar="RATE",
+                    help="deadline-miss-rate target; exit 1 unless some "
+                         "swept admission meets it")
     ap.add_argument("--tape-window", type=int, default=400_000,
                     help="accumulate-then-solve re-plan window (virtual time)")
     ap.add_argument("--tape-drives", type=int, default=None,
@@ -208,8 +307,7 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.serve_tape_queue:
-        _serve_tape_queue(args)
-        return
+        raise SystemExit(_serve_tape_queue(args))
 
     cfg = ARCHS[args.arch]
     if args.reduced:

@@ -1,0 +1,88 @@
+"""Online tape-serving subsystem: public API.
+
+Callers should import from here rather than the submodules: the event loop
+and admission policies (:mod:`.queue`), the shared drive pool with pluggable
+mount scheduling (:mod:`.drives`), the discrete-event simulator oracle and
+report types (:mod:`.sim`), and the QoS layer (:mod:`.qos`).
+
+The model-serving step builder (:mod:`.serve`) is deliberately *not*
+re-exported: it pulls in the neural-network stack, which tape-serving
+callers don't need.
+"""
+
+from .drives import (
+    MOUNT_SCHEDULERS,
+    DriveCosts,
+    DrivePool,
+    GreedyScheduler,
+    LookaheadScheduler,
+    LRUScheduler,
+    MountScheduler,
+    MountView,
+    PoolDrive,
+    resolve_scheduler,
+)
+from .qos import DEFAULT_CLASS, ClassSLO, QoSSpec, SLOReport, int_quantile, slo_report
+from .queue import (
+    ADMISSIONS,
+    LEGACY_ADMISSIONS,
+    POOL_ADMISSIONS,
+    QOS_ADMISSIONS,
+    WINDOWED_ADMISSIONS,
+    OnlineTapeServer,
+    serve_trace,
+)
+from .sim import (
+    BatchRecord,
+    Leg,
+    Replay,
+    Request,
+    ServedRequest,
+    ServiceReport,
+    demo_library,
+    head_position,
+    poisson_trace,
+    replay_schedule,
+    rewind_time,
+)
+
+__all__ = [
+    # queue / admissions
+    "OnlineTapeServer",
+    "serve_trace",
+    "ADMISSIONS",
+    "LEGACY_ADMISSIONS",
+    "POOL_ADMISSIONS",
+    "QOS_ADMISSIONS",
+    "WINDOWED_ADMISSIONS",
+    # drive pool + mount scheduling
+    "DrivePool",
+    "DriveCosts",
+    "PoolDrive",
+    "MountScheduler",
+    "MountView",
+    "MOUNT_SCHEDULERS",
+    "GreedyScheduler",
+    "LRUScheduler",
+    "LookaheadScheduler",
+    "resolve_scheduler",
+    # QoS layer
+    "QoSSpec",
+    "SLOReport",
+    "ClassSLO",
+    "slo_report",
+    "int_quantile",
+    "DEFAULT_CLASS",
+    # simulator + reports
+    "Request",
+    "ServedRequest",
+    "BatchRecord",
+    "ServiceReport",
+    "Replay",
+    "Leg",
+    "replay_schedule",
+    "head_position",
+    "rewind_time",
+    "poisson_trace",
+    "demo_library",
+]

@@ -19,10 +19,34 @@ This module models that layer:
 * :class:`DrivePool` — the allocator: deterministic drive selection
   (prefer the drive that already holds the cartridge — its head is parked at
   the load point after the post-batch rewind, so re-serving it costs no mount
-  leg; else the lowest-numbered empty free drive; else evict the
-  lowest-numbered free occupied drive), cartridge exclusivity (a physical
-  tape can be mounted in at most one drive), and mount/unmount accounting
-  that the :class:`~repro.serving.sim.ServiceReport` surfaces.
+  leg; otherwise a pluggable :class:`MountScheduler` picks among the free
+  drives), cartridge exclusivity (a physical tape can be mounted in at most
+  one drive), and mount/unmount accounting that the
+  :class:`~repro.serving.sim.ServiceReport` surfaces.
+
+Mount scheduling (which drive to use / evict)
+---------------------------------------------
+Eviction used to be a hardcoded loop; it is now a context-visible choice.
+A :class:`MountScheduler` picks the drive for a cartridge that is not
+currently mounted, given the free drives and a :class:`MountView` of the
+queue state (virtual ``now``, per-cartridge queue depth, per-cartridge
+earliest queued deadline, and the cost model).  Registered implementations
+(:data:`MOUNT_SCHEDULERS`):
+
+``greedy`` (alias ``lowest-numbered``, the default)
+    The PR-4 rule, bit-identical: lowest-numbered empty free drive, else
+    evict the lowest-numbered free occupied drive.  Ignores the view.
+``lru``
+    Evict the least-recently-*used* free drive (smallest ``last_used``
+    acquisition time, drive id breaking ties): cartridges that served
+    recently tend to be asked for again (the Zipf head), so their drives
+    are kept threaded.
+``lookahead``
+    Keep the cartridge the queues will want next: every eviction candidate's
+    mounted cartridge gets a keep-score ``queue depth x remount cost x
+    deadline urgency`` (urgency doubles when the cartridge's earliest queued
+    deadline is within one remount of ``now``), and the drive with the
+    *lowest* keep-score is evicted.  Exact-int, deterministic.
 
 The event loop that drives a pool lives in :mod:`repro.serving.queue`
 (:class:`~repro.serving.queue.OnlineTapeServer`); everything here is plain
@@ -32,10 +56,22 @@ deterministic state — no clocks, no randomness.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Protocol, runtime_checkable
 
 from .sim import Leg, Request
 
-__all__ = ["DriveCosts", "PoolDrive", "DrivePool"]
+__all__ = [
+    "DriveCosts",
+    "PoolDrive",
+    "DrivePool",
+    "MountView",
+    "MountScheduler",
+    "MOUNT_SCHEDULERS",
+    "GreedyScheduler",
+    "LRUScheduler",
+    "LookaheadScheduler",
+    "resolve_scheduler",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,15 +117,129 @@ class PoolDrive:
     batch_idx: int = -1  # index of the in-flight batch's BatchRecord
     load_point: int = 0  # in-flight instance's m (rewind target)
     u_turn: int = 0  # in-flight instance's U-turn penalty
+    last_used: int = 0  # virtual time of the last acquire (LRU eviction)
+
+
+@dataclasses.dataclass(frozen=True)
+class MountView:
+    """Queue-state snapshot a :class:`MountScheduler` decides against.
+
+    ``depth`` maps tape id -> pending queue length, ``urgency`` maps tape id
+    -> earliest queued deadline (absent/None when no queued request carries
+    one).  Both cover only cartridges with pending requests; a mounted
+    cartridge absent from ``depth`` has nothing queued.
+    """
+
+    now: int = 0
+    costs: DriveCosts = dataclasses.field(default_factory=DriveCosts)
+    depth: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    urgency: Mapping[str, int | None] = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class MountScheduler(Protocol):
+    """Eviction policy: which free drive serves a not-mounted cartridge.
+
+    ``pick`` receives the free drives in drive-id order (never empty — the
+    pool checks :meth:`DrivePool.can_serve` first) and the current
+    :class:`MountView`; it must return one of them, deterministically.  The
+    holder-drive fast path (cartridge already threaded) never reaches the
+    scheduler: re-serving a threaded cartridge is free and always preferred.
+    """
+
+    name: str
+
+    def pick(
+        self, free: list[PoolDrive], view: MountView
+    ) -> PoolDrive:  # pragma: no cover - protocol signature
+        ...
+
+
+class GreedyScheduler:
+    """PR-4 default, bit-identical: lowest empty drive, else lowest free."""
+
+    name = "greedy"
+
+    def pick(self, free: list[PoolDrive], view: MountView) -> PoolDrive:
+        empty = [d for d in free if d.mounted is None]
+        return empty[0] if empty else free[0]
+
+
+class LRUScheduler:
+    """Evict the least-recently-acquired free drive (empty drives first)."""
+
+    name = "lru"
+
+    def pick(self, free: list[PoolDrive], view: MountView) -> PoolDrive:
+        empty = [d for d in free if d.mounted is None]
+        pool = empty if empty else free
+        return min(pool, key=lambda d: (d.last_used, d.drive_id))
+
+
+class LookaheadScheduler:
+    """Evict the mounted cartridge the queues want least.
+
+    Keep-score of an eviction candidate's cartridge =
+    ``queue depth x remount cost x urgency`` where urgency is 2 when the
+    cartridge's earliest queued deadline is within one remount of ``now``
+    (evicting it would likely blow that deadline on the round trip back)
+    and 1 otherwise.  The lowest keep-score is evicted, drive id breaking
+    ties; empty drives (keep-score 0 by construction) always win.
+    """
+
+    name = "lookahead"
+
+    def pick(self, free: list[PoolDrive], view: MountView) -> PoolDrive:
+        empty = [d for d in free if d.mounted is None]
+        if empty:
+            return empty[0]
+        remount = max(1, view.costs.unmount + view.costs.switch)
+
+        def keep_score(d: PoolDrive) -> int:
+            depth = view.depth.get(d.mounted, 0)
+            deadline = view.urgency.get(d.mounted)
+            urgent = deadline is not None and deadline - view.now <= remount
+            return depth * remount * (2 if urgent else 1)
+
+        return min(free, key=lambda d: (keep_score(d), d.drive_id))
+
+
+#: registered mount schedulers (``lowest-numbered`` aliases the default).
+MOUNT_SCHEDULERS: dict[str, type] = {
+    "greedy": GreedyScheduler,
+    "lowest-numbered": GreedyScheduler,
+    "lru": LRUScheduler,
+    "lookahead": LookaheadScheduler,
+}
+
+
+def resolve_scheduler(scheduler: str | MountScheduler) -> MountScheduler:
+    """Name -> registered instance; a scheduler object passes through."""
+    if isinstance(scheduler, str):
+        if scheduler not in MOUNT_SCHEDULERS:
+            raise ValueError(
+                f"unknown mount scheduler {scheduler!r}; choose from "
+                f"{sorted(MOUNT_SCHEDULERS)}"
+            )
+        return MOUNT_SCHEDULERS[scheduler]()
+    if not isinstance(scheduler, MountScheduler):
+        raise TypeError(f"not a MountScheduler: {scheduler!r}")
+    return scheduler
 
 
 class DrivePool:
     """N drives shared by every cartridge, with deterministic allocation."""
 
-    def __init__(self, n_drives: int, costs: DriveCosts | None = None):
+    def __init__(
+        self,
+        n_drives: int,
+        costs: DriveCosts | None = None,
+        scheduler: str | MountScheduler = "greedy",
+    ):
         if n_drives < 1:
             raise ValueError("a drive pool needs at least one drive")
         self.costs = costs if costs is not None else DriveCosts()
+        self.scheduler = resolve_scheduler(scheduler)
         self.drives = [PoolDrive(i) for i in range(n_drives)]
         self.n_mounts = 0
         self.n_unmounts = 0
@@ -117,23 +267,31 @@ class DrivePool:
             return not holder.busy
         return any(not d.busy for d in self.drives)
 
-    def acquire(self, tape_id: str) -> tuple[PoolDrive, int]:
+    def acquire(
+        self, tape_id: str, now: int = 0, view: MountView | None = None
+    ) -> tuple[PoolDrive, int]:
         """Pick the drive for a dispatch; returns ``(drive, mount_delay)``.
 
         Only call when :meth:`can_serve` is true.  Selection is deterministic:
-        the holder drive (delay 0), else the lowest-numbered empty free
-        drive (mount + load_seek), else the lowest-numbered free occupied
-        drive (unmount + mount + load_seek).  Mount/unmount counters and the
-        total charged mount time accumulate on the pool.
+        the holder drive (delay 0) always wins — the cartridge is already
+        threaded; otherwise the pool's :class:`MountScheduler` picks among
+        the free drives (empty: mount + load_seek; occupied: unmount + mount
+        + load_seek).  ``view`` gives deadline/queue-aware schedulers their
+        decision context; the default greedy scheduler ignores it.
+        Mount/unmount counters and the total charged mount time accumulate
+        on the pool.
         """
         holder = self.drive_of(tape_id)
         if holder is not None:
             assert not holder.busy, f"{tape_id} is mid-batch in drive {holder.drive_id}"
+            holder.last_used = now
             return holder, 0
         free = [d for d in self.drives if not d.busy]
         assert free, "acquire() without a free drive; check can_serve() first"
-        empty = [d for d in free if d.mounted is None]
-        drive = empty[0] if empty else free[0]
+        if view is None:
+            view = MountView(now=now, costs=self.costs)
+        drive = self.scheduler.pick(free, view)
+        assert not drive.busy, "scheduler picked a busy drive"
         delay = 0
         if drive.mounted is not None:
             delay += self.costs.unmount
@@ -142,6 +300,7 @@ class DrivePool:
         self.n_mounts += 1
         self.mount_time += delay
         drive.mounted = tape_id
+        drive.last_used = now
         return drive, delay
 
     def stats(self) -> dict[str, int]:

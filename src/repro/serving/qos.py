@@ -1,0 +1,217 @@
+"""QoS layer: per-request deadlines/priority classes and SLO reporting.
+
+The paper's stated aim is improving the *quality of service* experienced by
+users of tape storage systems, not only the peak performance; the
+priority-/due-date-flavoured LTSP variants of Cardonha & Villa Real (2018)
+and Cardonha, Cire & Villa Real (2021) ground the deadline model.  This
+module is the request-facing half of that layer:
+
+* :class:`QoSSpec` — one request's service-level contract: an (absolute,
+  virtual-time) ``deadline`` and a ``qos_class`` label.  Specs are attached
+  at ``enqueue`` time — :class:`~repro.serving.queue.OnlineTapeServer` takes
+  a ``qos`` mapping ``req_id -> QoSSpec`` next to the trace — so the request
+  type itself (:class:`~repro.serving.sim.Request`) and every QoS-unaware
+  code path stay bit-identical.
+
+* :class:`SLOReport` / :class:`ClassSLO` — derived from a
+  :class:`~repro.serving.sim.ServiceReport` by :func:`slo_report`: per-class
+  and overall p50/p99 sojourn (exact nearest-rank integers, see
+  :func:`int_quantile`), deadline-miss counts/rate, and total/max lateness.
+  Everything except the float ``miss_rate`` convenience is exact-int virtual
+  time, safe to assert on.
+
+The deadline-aware admissions themselves (``edf-global``,
+``slack-accumulate``) live with the other admission policies in
+:mod:`repro.serving.queue`; the deadline-aware mount scheduling
+(``lookahead``) with the other :class:`~repro.serving.drives.MountScheduler`
+implementations in :mod:`repro.serving.drives`.  QoS is opt-in everywhere:
+with no ``qos`` mapping and the default scheduler, serving reproduces the
+QoS-less behaviour bit for bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+from .sim import ServiceReport
+
+__all__ = [
+    "DEFAULT_CLASS",
+    "QoSSpec",
+    "ClassSLO",
+    "SLOReport",
+    "slo_report",
+    "int_quantile",
+]
+
+#: class label a request gets when no spec (or no class) is attached.
+DEFAULT_CLASS = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSSpec:
+    """One request's service-level contract (attached at ``enqueue``).
+
+    ``deadline`` is an *absolute* virtual-time instant (same exact-integer
+    clock as the simulator): the request's service level is met iff its
+    completion lands at or before it.  ``None`` means best-effort — the
+    request never counts toward deadline-miss statistics.  ``qos_class`` is
+    a free-form label used only for grouping in the :class:`SLOReport`.
+    """
+
+    deadline: int | None = None
+    qos_class: str = DEFAULT_CLASS
+
+    def __post_init__(self) -> None:
+        if self.deadline is not None and self.deadline < 0:
+            raise ValueError("deadline must be an absolute virtual time >= 0")
+        if not self.qos_class:
+            raise ValueError("qos_class must be a non-empty label")
+
+    def slack(self, now: int) -> int | None:
+        """Remaining slack at ``now`` (negative once the deadline passed)."""
+        return None if self.deadline is None else self.deadline - now
+
+
+def int_quantile(values: Iterable[int], num: int, den: int) -> int:
+    """Exact nearest-rank quantile of integer ``values`` (no floats).
+
+    Returns the smallest element whose rank is >= ``ceil(num/den * n)``
+    (the classic nearest-rank definition), computed entirely in integer
+    arithmetic so p50/p99 of virtual times are assertable exactly.  An empty
+    input returns 0.
+    """
+    if not (0 <= num <= den) or den <= 0:
+        raise ValueError(f"quantile {num}/{den} out of [0, 1]")
+    ordered = sorted(values)
+    if not ordered:
+        return 0
+    rank = -(-num * len(ordered) // den)  # ceil without floats
+    return ordered[max(rank, 1) - 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSLO:
+    """SLO aggregates for one QoS class (all virtual-time ints exact)."""
+
+    qos_class: str
+    n: int  # served requests in this class
+    p50_sojourn: int  # nearest-rank, exact
+    p99_sojourn: int  # nearest-rank, exact
+    n_deadlines: int  # requests that carried a deadline
+    n_missed: int  # completed strictly after their deadline
+    total_lateness: int  # sum of max(0, completed - deadline)
+    max_lateness: int
+
+    @property
+    def miss_rate(self) -> float:
+        """Fraction of deadline-carrying requests served late (0.0 if none)."""
+        return self.n_missed / self.n_deadlines if self.n_deadlines else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOReport:
+    """Per-class + overall SLO view of one serving run.
+
+    Derived from a :class:`~repro.serving.sim.ServiceReport` by
+    :func:`slo_report`; ``overall`` aggregates every served request (class
+    label ``"*"``), ``classes`` holds one :class:`ClassSLO` per observed
+    class, sorted by name.
+    """
+
+    admission: str
+    scheduler: str
+    overall: ClassSLO
+    classes: tuple[ClassSLO, ...]
+
+    @property
+    def n_missed(self) -> int:
+        return self.overall.n_missed
+
+    @property
+    def n_deadlines(self) -> int:
+        return self.overall.n_deadlines
+
+    @property
+    def miss_rate(self) -> float:
+        return self.overall.miss_rate
+
+    def for_class(self, qos_class: str) -> ClassSLO:
+        for c in self.classes:
+            if c.qos_class == qos_class:
+                return c
+        raise KeyError(f"no served requests in class {qos_class!r}")
+
+    def summary(self) -> dict:
+        """Machine-readable row for benchmarks and launchers."""
+        return {
+            "admission": self.admission,
+            "scheduler": self.scheduler,
+            "n_served": self.overall.n,
+            "n_deadlines": self.n_deadlines,
+            "n_missed": self.n_missed,
+            "miss_rate": self.miss_rate,
+            "p50_sojourn": self.overall.p50_sojourn,
+            "p99_sojourn": self.overall.p99_sojourn,
+            "total_lateness": self.overall.total_lateness,
+            "max_lateness": self.overall.max_lateness,
+            "classes": {
+                c.qos_class: {
+                    "n": c.n,
+                    "p50_sojourn": c.p50_sojourn,
+                    "p99_sojourn": c.p99_sojourn,
+                    "n_missed": c.n_missed,
+                    "miss_rate": c.miss_rate,
+                    "max_lateness": c.max_lateness,
+                }
+                for c in self.classes
+            },
+        }
+
+
+def _class_slo(label: str, rows: Sequence[tuple[int, int | None]]) -> ClassSLO:
+    """Aggregate ``(sojourn, lateness-or-None)`` rows into one ClassSLO."""
+    sojourns = [s for s, _ in rows]
+    late = [l for _, l in rows if l is not None]
+    return ClassSLO(
+        qos_class=label,
+        n=len(rows),
+        p50_sojourn=int_quantile(sojourns, 1, 2),
+        p99_sojourn=int_quantile(sojourns, 99, 100),
+        n_deadlines=len(late),
+        n_missed=sum(1 for l in late if l > 0),
+        total_lateness=sum(l for l in late if l > 0),
+        max_lateness=max((l for l in late if l > 0), default=0),
+    )
+
+
+def slo_report(
+    report: ServiceReport, qos: Mapping[int, QoSSpec] | None = None
+) -> SLOReport:
+    """Join a service report against its QoS map into per-class SLO stats.
+
+    ``qos`` defaults to the map the server recorded on the report (a run
+    without QoS yields an all-best-effort report: 0 deadlines, 0 misses).
+    Requests absent from the map count as best-effort ``default``-class.
+    """
+    specs: Mapping[int, QoSSpec] = (
+        qos if qos is not None else (report.qos or {})
+    )
+    default = QoSSpec()
+    per_class: dict[str, list[tuple[int, int | None]]] = {}
+    everything: list[tuple[int, int | None]] = []
+    for r in report.served:
+        spec = specs.get(r.req_id, default)
+        lateness = None if spec.deadline is None else r.completed - spec.deadline
+        row = (r.sojourn, lateness)
+        per_class.setdefault(spec.qos_class, []).append(row)
+        everything.append(row)
+    return SLOReport(
+        admission=report.admission,
+        scheduler=report.scheduler,
+        overall=_class_slo("*", everything),
+        classes=tuple(
+            _class_slo(name, rows) for name, rows in sorted(per_class.items())
+        ),
+    )

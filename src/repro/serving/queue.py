@@ -52,6 +52,26 @@ Cartridge-cadence policies (when does a queue dispatch):
     instead of one launch per cartridge.  Scheduling results are identical
     to ``per-drive-accumulate``; only the solve batching differs.
 
+Deadline-aware (QoS) admissions — these read the ``qos`` mapping
+(``req_id`` -> :class:`~repro.serving.qos.QoSSpec`) attached at construction;
+requests without a spec/deadline are best-effort and sort last:
+
+``edf-global``
+    Earliest-deadline-first per-request serving: the next mount is chosen by
+    the most urgent *queued* request across all pending queues (live
+    deadline, then arrival, then id), and that single request is served —
+    the deadline-aware counterpart of ``fifo-global`` (same batching
+    discipline, different order).  Expired deadlines demote to best-effort:
+    a request already past its deadline is missed regardless, so it must
+    not starve still-meetable ones (the EDF overload domino).
+``slack-accumulate``
+    ``per-drive-accumulate`` whose hold window collapses as slack burns
+    down: a cartridge becomes mount-ready at ``min(head arrival + window,
+    earliest live queued deadline - window)``, i.e. the moment any queued
+    request's slack drops below the hold window itself the whole queue
+    dispatches — early enough that the deadline is still reachable.
+    Mount-ready cartridges are served most-urgent-first.
+
 Every dispatched schedule is checked by :func:`repro.core.verify.verify_schedule`
 (structural validity + the simulator's independent cost recomputation must
 equal the solver-reported cost exactly) unless ``verify=False``.  Mount legs
@@ -64,12 +84,21 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Mapping
 
 from ..core.context import ExecutionContext, resolve_context
 from ..core.solver import SolveCache, solve, solve_batch
 from ..core.verify import verify_schedule
-from ..storage.tape import TapeLibrary
-from .drives import DriveCosts, DrivePool, PoolDrive
+from ..storage.tape import PendingQueue, TapeLibrary
+from .drives import (
+    DriveCosts,
+    DrivePool,
+    GreedyScheduler,
+    MountScheduler,
+    MountView,
+    PoolDrive,
+)
+from .qos import QoSSpec
 from .sim import (
     BatchRecord,
     Replay,
@@ -85,6 +114,7 @@ __all__ = [
     "ADMISSIONS",
     "LEGACY_ADMISSIONS",
     "POOL_ADMISSIONS",
+    "QOS_ADMISSIONS",
     "WINDOWED_ADMISSIONS",
     "OnlineTapeServer",
     "serve_trace",
@@ -94,15 +124,24 @@ __all__ = [
 LEGACY_ADMISSIONS = ("fifo", "accumulate", "preempt")
 #: pool-era names (cross-cartridge; ``batched`` adds one-launch-per-tick).
 POOL_ADMISSIONS = ("fifo-global", "per-drive-accumulate", "batched")
-ADMISSIONS = LEGACY_ADMISSIONS + POOL_ADMISSIONS
+#: deadline-aware admissions (read the ``qos`` map; see module docstring).
+QOS_ADMISSIONS = ("edf-global", "slack-accumulate")
+ADMISSIONS = LEGACY_ADMISSIONS + POOL_ADMISSIONS + QOS_ADMISSIONS
 
 #: admissions whose dispatch is gated on the accumulate ``window`` (callers
 #: sweeping admissions use this to decide which ones take a window argument).
-WINDOWED_ADMISSIONS = ("accumulate", "per-drive-accumulate", "batched")
+WINDOWED_ADMISSIONS = (
+    "accumulate",
+    "per-drive-accumulate",
+    "batched",
+    "slack-accumulate",
+)
 
-#: admissions that dispatch one request at a time, in global arrival order.
-_ONE_SHOT = {"fifo", "fifo-global"}
+#: admissions that dispatch one request at a time (global arrival order, or
+#: global deadline order for ``edf-global``).
+_ONE_SHOT = {"fifo", "fifo-global", "edf-global"}
 _WINDOWED = set(WINDOWED_ADMISSIONS)
+_DEADLINE = set(QOS_ADMISSIONS)
 
 
 class OnlineTapeServer:
@@ -115,6 +154,14 @@ class OnlineTapeServer:
     ``n_drives`` defaults to one drive per cartridge and ``drive_costs`` to
     the all-zero model — exactly the PR-3 server.  Shrink the pool and/or
     price the mount legs to simulate a real robotic library.
+
+    QoS is opt-in: ``qos`` attaches a :class:`~repro.serving.qos.QoSSpec`
+    (deadline + priority class) per request id at enqueue time, enabling
+    the deadline-aware admissions and the SLO statistics
+    (:func:`repro.serving.qos.slo_report`); ``mount_scheduler`` selects the
+    :class:`~repro.serving.drives.MountScheduler` eviction policy.  With
+    both left at their defaults every admission reproduces the QoS-less
+    behaviour bit for bit.
     """
 
     def __init__(
@@ -126,6 +173,8 @@ class OnlineTapeServer:
         policy: str = "dp",
         n_drives: int | None = None,
         drive_costs: DriveCosts | None = None,
+        qos: Mapping[int, QoSSpec] | None = None,
+        mount_scheduler: str | MountScheduler = "greedy",
         context: ExecutionContext | None = None,
         backend: str | None = None,
         cache: SolveCache | None = None,
@@ -146,6 +195,8 @@ class OnlineTapeServer:
         self.context = resolve_context(context, backend=backend, cache=cache)
         self.n_drives = n_drives
         self.drive_costs = drive_costs if drive_costs is not None else DriveCosts()
+        self.qos: dict[int, QoSSpec] = dict(qos) if qos else {}
+        self.mount_scheduler = mount_scheduler
         self.verify = verify
 
     # -- event plumbing ------------------------------------------------------
@@ -158,7 +209,7 @@ class OnlineTapeServer:
         self._events: list = []
         self._seq = 0
         n = self.n_drives if self.n_drives is not None else max(1, len(self.lib.tapes))
-        self.pool = DrivePool(n, self.drive_costs)
+        self.pool = DrivePool(n, self.drive_costs, scheduler=self.mount_scheduler)
         self._served: list[ServedRequest] = []
         self._batches: list[BatchRecord] = []
         self._next_wake: dict[str, int] = {}  # tape_id -> pending window timer
@@ -207,9 +258,31 @@ class OnlineTapeServer:
                 self.context.cache.stats() if self.context.cache is not None else None
             ),
             pool_stats=self.pool.stats(),
+            scheduler=self.pool.scheduler.name,
+            qos=self.qos or None,
         )
 
     # -- admission -----------------------------------------------------------
+    def _deadline_of(self, req: Request) -> int | None:
+        spec = self.qos.get(req.req_id)
+        return spec.deadline if spec is not None else None
+
+    def _queue_deadline(
+        self, queue: PendingQueue, now: int | None = None
+    ) -> int | None:
+        """Earliest deadline among a cartridge's queued requests, if any.
+
+        With ``now`` given, only *live* deadlines (not yet expired) count —
+        an expired deadline is missed no matter what happens next, so it
+        must not keep reading as maximally urgent.
+        """
+        deadlines = [
+            d
+            for d in (self._deadline_of(r) for r in queue)
+            if d is not None and (now is None or d > now)
+        ]
+        return min(deadlines) if deadlines else None
+
     def _candidates(self, now: int) -> list[str]:
         """Dispatch-ready cartridges, oldest head-of-queue request first.
 
@@ -217,6 +290,8 @@ class OnlineTapeServer:
         cartridge; timers deduplicate on the ready instant, and a stale timer
         is discarded on pop when its instant no longer matches.
         """
+        if self.admission in _DEADLINE:
+            return self._qos_candidates(now)
         ready: list[tuple[int, int, str]] = []
         for tid in sorted(self.lib.queues):
             queue = self.lib.queues[tid]
@@ -234,18 +309,98 @@ class OnlineTapeServer:
         ready.sort()
         return [tid for _, _, tid in ready]
 
+    def _qos_candidates(self, now: int) -> list[str]:
+        """Dispatch-ready cartridges for the deadline-aware admissions.
+
+        Readiness: ``edf-global`` is always ready (per-request, like
+        ``fifo-global``); ``slack-accumulate`` holds a queue until
+        ``min(head arrival + window, earliest live deadline - window)`` —
+        the accumulate hold collapses once any queued request's slack burns
+        below the hold window itself, so the batch dispatches while the
+        deadline is still reachable (a new arrival with a nearer deadline
+        re-arms the wake timer earlier; the stale timer is discarded on
+        pop).  Ready cartridges are ordered most-urgent-first: earliest
+        live queued deadline, then head arrival/id; queues with no live
+        deadline sort last.
+        """
+        ready: list[tuple[int, int, int, int, str]] = []
+        for tid in sorted(self.lib.queues):
+            queue = self.lib.queues[tid]
+            if len(queue) == 0:
+                continue
+            head = queue.peek()
+            dmin = self._queue_deadline(queue, now)
+            if self.admission == "slack-accumulate":
+                at = head.time + self.window
+                if dmin is not None:
+                    at = min(at, dmin - self.window)
+                if now < at:
+                    if self._next_wake.get(tid) != at:
+                        self._next_wake[tid] = at
+                        self._push(at, "wake", (tid, at))
+                    continue
+            urgency = (1, 0) if dmin is None else (0, dmin)
+            ready.append((*urgency, head.time, head.req_id, tid))
+        ready.sort()
+        return [t[-1] for t in ready]
+
+    def _pop_urgent(self, queue: PendingQueue, now: int) -> Request:
+        """Remove the most urgent queued request (EDF, arrival/id tie-break).
+
+        Expired deadlines are demoted to best-effort: a request already past
+        its deadline is missed no matter when it is served, so letting it
+        keep outranking still-meetable requests would cascade misses (the
+        classic EDF overload domino).
+        """
+        items = queue.drain()
+        pick = min(items, key=lambda r: self._edf_key(r, now))
+        for r in items:
+            if r is not pick:
+                queue.push(r)
+        return pick
+
+    def _edf_key(self, req: Request, now: int) -> tuple[int, int, int, int]:
+        d = self._deadline_of(req)
+        if d is None or d <= now:  # best-effort, or already missed
+            return (1, 0, req.time, req.req_id)
+        return (0, d, req.time, req.req_id)
+
+    def _mount_view(self, now: int) -> MountView | None:
+        """Queue-state snapshot for the pool's mount scheduler.
+
+        ``None`` under the default greedy scheduler, which ignores the view
+        — the per-event depth/urgency scan is only paid when a scheduler
+        actually decides on it (``acquire`` substitutes a bare view).
+        """
+        if isinstance(self.pool.scheduler, GreedyScheduler):
+            return None
+        pending = {
+            tid: q for tid, q in self.lib.queues.items() if len(q) > 0
+        }
+        return MountView(
+            now=now,
+            costs=self.drive_costs,
+            depth={tid: len(q) for tid, q in pending.items()},
+            urgency=(
+                {tid: self._queue_deadline(q, now) for tid, q in pending.items()}
+                if self.qos
+                else {}
+            ),
+        )
+
     def _schedule(self, now: int) -> None:
         """Dispatch every cartridge the admission policy admits at ``now``."""
         cands = self._candidates(now)
         if not cands:
             return
+        view = self._mount_view(now)
         if self.admission == "batched":
             # one event tick -> one solve_batch over every admitted cartridge
             picks: list[tuple[PoolDrive, int, list[Request]]] = []
             for tid in cands:
                 if not self.pool.can_serve(tid):
                     continue
-                drive, delay = self.pool.acquire(tid)
+                drive, delay = self.pool.acquire(tid, now=now, view=view)
                 drive.busy = True  # reserve; _dispatch fills in the timeline
                 picks.append((drive, delay, self.lib.pending(tid).drain()))
             if not picks:
@@ -268,9 +423,14 @@ class OnlineTapeServer:
         for tid in cands:
             if not self.pool.can_serve(tid):
                 continue
-            drive, delay = self.pool.acquire(tid)
+            drive, delay = self.pool.acquire(tid, now=now, view=view)
             queue = self.lib.pending(tid)
-            batch = [queue.pop()] if self.admission in _ONE_SHOT else queue.drain()
+            if self.admission == "edf-global":
+                batch = [self._pop_urgent(queue, now)]
+            elif self.admission in _ONE_SHOT:
+                batch = [queue.pop()]
+            else:
+                batch = queue.drain()
             self._dispatch(drive, batch, now, delay)
 
     # -- drive actions -------------------------------------------------------
@@ -409,6 +569,8 @@ def serve_trace(
     policy: str = "dp",
     n_drives: int | None = None,
     drive_costs: DriveCosts | None = None,
+    qos: Mapping[int, QoSSpec] | None = None,
+    mount_scheduler: str | MountScheduler = "greedy",
     context: ExecutionContext | None = None,
     backend: str | None = None,
     cache: SolveCache | None = None,
@@ -422,6 +584,8 @@ def serve_trace(
         policy=policy,
         n_drives=n_drives,
         drive_costs=drive_costs,
+        qos=qos,
+        mount_scheduler=mount_scheduler,
         context=context,
         backend=backend,
         cache=cache,

@@ -342,6 +342,12 @@ class ServiceReport:
     cache_stats: dict[str, int] | None = None
     #: drive-pool accounting (n_drives, mounts, unmounts, mount_time)
     pool_stats: dict[str, int] | None = None
+    #: mount-scheduler the pool ran (see repro.serving.drives.MOUNT_SCHEDULERS)
+    scheduler: str = "greedy"
+    #: req_id -> QoSSpec the server attached at enqueue (None: QoS unset).
+    #: Typed loosely to keep sim importable without the QoS layer; entries
+    #: only need ``.deadline``.  repro.serving.qos.slo_report joins on it.
+    qos: dict | None = None
 
     # -- exact aggregates (ints, safe to assert on) --------------------------
     @property
@@ -366,19 +372,52 @@ class ServiceReport:
             return 0.0
         return float(np.quantile([r.sojourn for r in self.served], q))
 
+    # -- deadline outcomes (exact ints; require a qos map) -------------------
+    @property
+    def n_deadlines(self) -> int:
+        """Served requests that carried a deadline (0 when QoS is unset)."""
+        if not self.qos:
+            return 0
+        return sum(
+            1
+            for r in self.served
+            if (spec := self.qos.get(r.req_id)) is not None
+            and spec.deadline is not None
+        )
+
+    @property
+    def n_missed(self) -> int:
+        """Served requests completed strictly after their deadline."""
+        if not self.qos:
+            return 0
+        return sum(
+            1
+            for r in self.served
+            if (spec := self.qos.get(r.req_id)) is not None
+            and spec.deadline is not None
+            and r.completed > spec.deadline
+        )
+
+    @property
+    def miss_rate(self) -> float:
+        return self.n_missed / self.n_deadlines if self.n_deadlines else 0.0
+
     def summary(self) -> dict:
         """Machine-readable row for benchmarks (``--record``)."""
-        return {
+        out = {
             "admission": self.admission,
             "policy": self.policy,
             "backend": self.backend,
             "window": self.window,
+            "scheduler": self.scheduler,
             "n_served": self.n_served,
             "n_batches": len(self.batches),
             "n_preemptions": self.n_preemptions,
             "total_sojourn": self.total_sojourn,
             "mean_sojourn": self.mean_sojourn,
+            "p50_sojourn": self.sojourn_quantile(0.50),
             "p95_sojourn": self.sojourn_quantile(0.95),
+            "p99_sojourn": self.sojourn_quantile(0.99),
             "max_sojourn": max((r.sojourn for r in self.served), default=0),
             "makespan": self.makespan,
             "horizon": self.horizon,
@@ -386,3 +425,8 @@ class ServiceReport:
             **(dict(self.pool_stats) if self.pool_stats else {}),
             **({"cache": dict(self.cache_stats)} if self.cache_stats else {}),
         }
+        if self.qos:
+            out["n_deadlines"] = self.n_deadlines
+            out["n_missed"] = self.n_missed
+            out["miss_rate"] = self.miss_rate
+        return out

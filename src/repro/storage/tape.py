@@ -130,6 +130,15 @@ class PendingQueue:
     def __len__(self) -> int:
         return len(self._heap)
 
+    def __iter__(self):
+        """Non-destructive iteration in arbitrary (heap) order.
+
+        For order-insensitive scans only (e.g. the QoS layer's
+        earliest-queued-deadline lookup); use :meth:`drain` for ordered
+        removal.
+        """
+        return iter(self._heap)
+
     def push(self, item) -> None:
         heapq.heappush(self._heap, item)
 

@@ -18,6 +18,7 @@ from repro.serving.queue import (
     ADMISSIONS,
     LEGACY_ADMISSIONS,
     POOL_ADMISSIONS,
+    QOS_ADMISSIONS,
     OnlineTapeServer,
     serve_trace,
 )
@@ -260,7 +261,9 @@ def test_batched_admission_on_device_backend():
 
 
 def test_admission_registry_is_coherent():
-    assert set(LEGACY_ADMISSIONS) | set(POOL_ADMISSIONS) == set(ADMISSIONS)
+    assert (
+        set(LEGACY_ADMISSIONS) | set(POOL_ADMISSIONS) | set(QOS_ADMISSIONS)
+    ) == set(ADMISSIONS)
     with pytest.raises(ValueError, match="admission"):
         OnlineTapeServer(build_library(), "lifo")
     with pytest.raises(ValueError, match="n_drives"):

@@ -1,0 +1,496 @@
+"""QoS subsystem: deadline-aware admissions, mount schedulers, trace replay.
+
+The acceptance bars (all on exact integer virtual time):
+
+* with QoS unset, the ``lowest-numbered`` scheduler + existing admissions
+  reproduce the PR-4 results **bit-identically** — pinned differentially
+  against constants captured from the PR-4 code on the seeded 240-request
+  constrained-pool trace;
+* on the seeded deadline sweep, ``edf-global`` and ``slack-accumulate``
+  achieve strictly fewer deadline misses than ``fifo-global`` at every
+  swept tightness;
+* a JSONL trace round-trips bit-exactly through write -> read -> replay;
+* greedy vs ``lru`` vs ``lookahead`` mount scheduling is deterministic and
+  oracle-verified on the constrained pool.
+"""
+
+import hashlib
+
+import pytest
+
+from repro.data.traces import (
+    TRACE_SCHEMA,
+    TraceRecord,
+    qos_poisson_trace,
+    read_trace,
+    records_of,
+    to_requests,
+    write_trace,
+)
+from repro.serving import (
+    ADMISSIONS,
+    LEGACY_ADMISSIONS,
+    MOUNT_SCHEDULERS,
+    POOL_ADMISSIONS,
+    QOS_ADMISSIONS,
+    DriveCosts,
+    DrivePool,
+    LookaheadScheduler,
+    MountView,
+    OnlineTapeServer,
+    QoSSpec,
+    demo_library,
+    int_quantile,
+    poisson_trace,
+    resolve_scheduler,
+    serve_trace,
+    slo_report,
+)
+from repro.storage.tape import TapeLibrary
+
+pytestmark = pytest.mark.qos
+
+SEED = 20260731
+COSTS = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+
+#: PR-4 timelines on the seeded 240-request constrained-pool trace
+#: (n_drives=2, COSTS, window=400_000, policy="dp"), captured by running the
+#: pre-QoS code: sha256[:16] of the (req_id, arrival, dispatched, completed)
+#: served tuple plus the exact total sojourn.  The QoS-unset default path
+#: must keep reproducing these bit for bit.
+PR4_BASELINE = {
+    "fifo": ("1a79c55063c3f802", 56_368_550_889),
+    "accumulate": ("df9ed258ac816c37", 3_809_190_213),
+    "preempt": ("668366586042762a", 7_347_259_813),
+    "fifo-global": ("1a79c55063c3f802", 56_368_550_889),
+    "per-drive-accumulate": ("df9ed258ac816c37", 3_809_190_213),
+    "batched": ("df9ed258ac816c37", 3_809_190_213),
+}
+
+
+def build_library():
+    return demo_library(SEED)
+
+
+def build_trace(n_requests=240, rate=250_000):
+    return poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=rate, seed=SEED
+    )
+
+
+def build_qos_trace(tightness, n_requests=240, rate=250_000, seed=SEED):
+    records = qos_poisson_trace(
+        demo_library(seed), n_requests=n_requests, mean_interarrival=rate,
+        seed=seed, tightness=tightness,
+    )
+    return to_requests(records, demo_library(seed))
+
+
+def _served_sha(report):
+    served = tuple(
+        (r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served
+    )
+    return hashlib.sha256(repr(served).encode()).hexdigest()[:16]
+
+
+def _timeline(report):
+    return (
+        [(r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served],
+        sorted(
+            (b.tape_id, b.drive, b.dispatched, b.mount_delay, b.n_requests,
+             b.solver_cost, b.rewind, b.preempted)
+            for b in report.batches
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: QoS unset reproduces PR 4 bit-identically (differential pin)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", sorted(PR4_BASELINE))
+def test_qos_unset_default_path_matches_pr4_pin(admission):
+    trace = build_trace()
+    sha, total = PR4_BASELINE[admission]
+    report = serve_trace(
+        build_library(), trace, admission, window=400_000, policy="dp",
+        n_drives=2, drive_costs=COSTS, mount_scheduler="lowest-numbered",
+    )
+    assert report.scheduler == "greedy"  # lowest-numbered aliases the default
+    assert (_served_sha(report), report.total_sojourn) == (sha, total)
+    # the implicit default spells the same run
+    default = serve_trace(
+        build_library(), trace, admission, window=400_000, policy="dp",
+        n_drives=2, drive_costs=COSTS,
+    )
+    assert _timeline(default) == _timeline(report)
+
+
+@pytest.mark.parametrize(
+    "qos_admission,baseline",
+    [("edf-global", "fifo-global"), ("slack-accumulate", "per-drive-accumulate")],
+)
+def test_qos_admissions_without_deadlines_alias_their_baselines(
+    qos_admission, baseline
+):
+    """With no QoS map the deadline-aware admissions degrade to their
+    deadline-blind counterparts bit for bit (deadline order == arrival
+    order, no window collapse)."""
+    trace = build_trace(n_requests=200)
+    kw = dict(window=300_000, policy="dp", n_drives=2, drive_costs=COSTS)
+    a = serve_trace(build_library(), trace, baseline, **kw)
+    b = serve_trace(build_library(), trace, qos_admission, **kw)
+    assert _timeline(a) == _timeline(b)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the seeded deadline sweep, exact virtual-time miss counts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tightness", [2_000_000, 8_000_000, 32_000_000])
+def test_deadline_aware_admissions_strictly_beat_fifo(tightness):
+    trace, qos = build_qos_trace(tightness)
+    missed = {}
+    for admission in ("fifo-global", "edf-global", "slack-accumulate"):
+        report = serve_trace(
+            build_library(), trace, admission,
+            window=400_000 if admission == "slack-accumulate" else 0,
+            policy="dp", qos=qos,
+        )
+        assert report.n_served == len(trace)
+        assert report.n_deadlines == len(trace)  # every request has a deadline
+        missed[admission] = report.n_missed  # exact int
+    assert missed["edf-global"] < missed["fifo-global"]
+    assert missed["slack-accumulate"] < missed["fifo-global"]
+
+
+@pytest.mark.parametrize("seed", [1, 3, 8, 13, 42])
+@pytest.mark.parametrize("tightness", [4_000_000, 16_000_000])
+def test_edf_never_raises_miss_rate_vs_fifo(seed, tightness):
+    """Property (seeded): EDF-with-expiry-demotion never serves more
+    requests late than FIFO order on tight-deadline traces."""
+    trace, qos = build_qos_trace(tightness, n_requests=200, seed=seed)
+    reports = {
+        admission: serve_trace(
+            demo_library(seed), trace, admission, policy="dp", qos=qos
+        )
+        for admission in ("fifo-global", "edf-global")
+    }
+    assert (
+        reports["edf-global"].n_missed <= reports["fifo-global"].n_missed
+    ), (seed, tightness)
+    # same denominator: the miss-rate comparison is the count comparison
+    assert (
+        reports["edf-global"].n_deadlines == reports["fifo-global"].n_deadlines
+    )
+
+
+def test_slack_accumulate_collapses_the_hold_window():
+    """A deadline arriving mid-hold re-arms the wake timer to the collapse
+    instant (earliest live deadline - window): the plain accumulate run
+    holds the full window and misses, slack-accumulate dispatches the whole
+    queue early enough that the deadline is still reachable."""
+    from repro.serving import Request
+
+    def build():
+        lib = TapeLibrary(capacity_per_tape=10_000, u_turn=100)
+        lib.store("a", 2_000)
+        lib.store("b", 2_000)
+        return lib
+
+    tape_id = build().location["a"]
+    # req 0 is best-effort; req 1 lands mid-hold with a deadline of 25_000.
+    # Serving both from the load point takes ~14_100, so the deadline is
+    # comfortable at the collapse instant and hopeless after a 20_000 hold.
+    trace = [
+        Request(time=0, req_id=0, tape_id=tape_id, name="a"),
+        Request(time=100, req_id=1, tape_id=tape_id, name="b"),
+    ]
+    qos = {1: QoSSpec(deadline=25_000)}
+    held = serve_trace(
+        build(), trace, "per-drive-accumulate", window=20_000, policy="dp",
+        qos=qos,
+    )
+    assert held.batches[0].dispatched == 20_000  # full hold: arrival + window
+    assert held.n_missed == 1
+    eager = serve_trace(
+        build(), trace, "slack-accumulate", window=20_000, policy="dp", qos=qos
+    )
+    # collapse instant = deadline - window = 5_000, one batch of both reads
+    assert eager.batches[0].dispatched == 5_000
+    assert eager.batches[0].n_requests == 2
+    assert eager.n_missed == 0
+    assert eager.total_sojourn < held.total_sojourn
+
+
+def test_edf_demotes_expired_deadlines():
+    """A request whose deadline already passed must not outrank a still
+    meetable one: the lost request is served last, the meetable one on
+    time."""
+    from repro.serving import Request
+
+    lib = TapeLibrary(capacity_per_tape=10_000, u_turn=100)
+    lib.store("early", 1_000)
+    lib.store("late", 1_000)
+    lib.store("first", 1_000)
+    tid = lib.location["early"]
+    # req 0 occupies the single drive; by the time it completes (~7k+),
+    # req 1's deadline (100) is long expired while req 2's (40_000) is live
+    trace = [
+        Request(time=0, req_id=0, tape_id=tid, name="first"),
+        Request(time=10, req_id=1, tape_id=tid, name="early"),
+        Request(time=20, req_id=2, tape_id=tid, name="late"),
+    ]
+    qos = {1: QoSSpec(deadline=100), 2: QoSSpec(deadline=40_000)}
+    report = serve_trace(lib, trace, "edf-global", policy="dp", qos=qos, n_drives=1)
+    done = {r.req_id: r.completed for r in report.served}
+    assert done[2] < done[1]  # expired req 1 demoted behind live req 2
+    assert done[2] <= 40_000  # the live deadline is met
+    assert report.n_missed == 1  # only the already-lost request misses
+
+
+# ---------------------------------------------------------------------------
+# SLO reporting: exact nearest-rank quantiles, per-class joins
+# ---------------------------------------------------------------------------
+def test_int_quantile_is_exact_nearest_rank():
+    vals = [10, 20, 30, 40]
+    assert int_quantile(vals, 1, 2) == 20  # ceil(0.5*4)=2nd
+    assert int_quantile(vals, 99, 100) == 40
+    assert int_quantile(vals, 0, 1) == 10
+    assert int_quantile([7], 99, 100) == 7
+    assert int_quantile([], 1, 2) == 0
+    # 99 ints: p99 rank = ceil(0.99*99) = 99 -> the max, exactly
+    assert int_quantile(list(range(99)), 99, 100) == 98
+    with pytest.raises(ValueError, match="quantile"):
+        int_quantile(vals, 3, 2)
+
+
+def test_qos_spec_validation_and_slack():
+    spec = QoSSpec(deadline=1_000, qos_class="interactive")
+    assert spec.slack(400) == 600
+    assert spec.slack(1_500) == -500
+    assert QoSSpec().slack(123) is None
+    with pytest.raises(ValueError, match="deadline"):
+        QoSSpec(deadline=-1)
+    with pytest.raises(ValueError, match="qos_class"):
+        QoSSpec(qos_class="")
+
+
+def test_slo_report_joins_classes_exactly():
+    trace, qos = build_qos_trace(8_000_000, n_requests=160)
+    report = serve_trace(
+        build_library(), trace, "slack-accumulate", window=400_000,
+        policy="dp", qos=qos,
+    )
+    slo = slo_report(report)
+    assert slo.admission == "slack-accumulate"
+    assert sum(c.n for c in slo.classes) == slo.overall.n == report.n_served
+    assert sum(c.n_missed for c in slo.classes) == slo.n_missed == report.n_missed
+    assert slo.n_deadlines == report.n_deadlines
+    # per-class quantiles recompute exactly from the served rows
+    by_class = {}
+    for r in report.served:
+        by_class.setdefault(qos[r.req_id].qos_class, []).append(r.sojourn)
+    for c in slo.classes:
+        assert c.p50_sojourn == int_quantile(by_class[c.qos_class], 1, 2)
+        assert c.p99_sojourn == int_quantile(by_class[c.qos_class], 99, 100)
+    with pytest.raises(KeyError):
+        slo.for_class("no-such-class")
+    # summary() mirrors the exact fields
+    s = slo.summary()
+    assert s["n_missed"] == slo.n_missed
+    assert set(s["classes"]) == {c.qos_class for c in slo.classes}
+
+
+def test_service_report_surfaces_quantiles_and_misses():
+    trace, qos = build_qos_trace(8_000_000, n_requests=120)
+    report = serve_trace(build_library(), trace, "accumulate",
+                         window=400_000, policy="dp", qos=qos)
+    s = report.summary()
+    for key in ("p50_sojourn", "p95_sojourn", "p99_sojourn", "scheduler",
+                "n_deadlines", "n_missed", "miss_rate"):
+        assert key in s, key
+    assert s["n_missed"] == report.n_missed
+    # QoS-unset reports stay miss-free and keep the quantile keys
+    plain = serve_trace(build_library(), build_trace(n_requests=60),
+                        "accumulate", window=400_000, policy="dp")
+    ps = plain.summary()
+    assert "p50_sojourn" in ps and "p99_sojourn" in ps
+    assert "n_missed" not in ps and plain.n_missed == 0
+
+
+# ---------------------------------------------------------------------------
+# mount schedulers: unit determinism + serving determinism/oracle
+# ---------------------------------------------------------------------------
+def test_mount_schedulers_diverge_deterministically_at_unit_level():
+    """3 drives, cartridge A re-used recently: greedy evicts drive 0,
+    LRU evicts the least-recently-acquired drive, lookahead keeps the
+    cartridge with the deepest queue."""
+
+    def pool_with_history(scheduler):
+        pool = DrivePool(3, COSTS, scheduler=scheduler)
+        assert pool.acquire("A", now=0)[0].drive_id == 0
+        assert pool.acquire("B", now=1)[0].drive_id == 1
+        assert pool.acquire("C", now=2)[0].drive_id == 2
+        d, delay = pool.acquire("A", now=3)  # holder, free re-use
+        assert (d.drive_id, delay) == (0, 0)
+        return pool
+
+    view = MountView(now=4, costs=COSTS, depth={"A": 5, "B": 0, "C": 1})
+    greedy = pool_with_history("greedy")
+    assert greedy.acquire("D", now=4, view=view)[0].drive_id == 0
+    lru = pool_with_history("lru")
+    assert lru.acquire("D", now=4, view=view)[0].drive_id == 1  # last_used=1
+    look = pool_with_history("lookahead")
+    # keep-scores: A=5*remount, B=0, C=1*remount -> evict B's drive
+    assert look.acquire("D", now=4, view=view)[0].drive_id == 1
+    view2 = MountView(now=4, costs=COSTS, depth={"A": 0, "B": 3, "C": 1})
+    look2 = pool_with_history("lookahead")
+    assert look2.acquire("D", now=4, view=view2)[0].drive_id == 0
+
+
+def test_lookahead_urgency_doubles_keep_score():
+    sched = LookaheadScheduler()
+    pool = DrivePool(2, COSTS, scheduler=sched)
+    pool.acquire("A", now=0)
+    pool.acquire("B", now=1)
+    remount = COSTS.unmount + COSTS.switch
+    # equal depths; A's earliest deadline is within one remount -> keep A
+    view = MountView(
+        now=1_000_000, costs=COSTS, depth={"A": 2, "B": 2},
+        urgency={"A": 1_000_000 + remount, "B": None},
+    )
+    drive, _ = pool.acquire("C", now=1_000_000, view=view)
+    assert drive.mounted == "C" and drive.drive_id == 1  # B evicted
+
+
+def test_mount_scheduler_serving_determinism_and_oracle():
+    """Every registered scheduler serves the seeded 240-request
+    constrained-pool trace deterministically, all schedules oracle-checked;
+    greedy reproduces the PR-4 pin."""
+    trace = build_trace()
+    for scheduler in ("greedy", "lru", "lookahead"):
+        runs = [
+            serve_trace(
+                build_library(), trace, "per-drive-accumulate", window=400_000,
+                policy="dp", n_drives=3, drive_costs=COSTS,
+                mount_scheduler=scheduler,
+            )
+            for _ in range(2)
+        ]
+        assert _timeline(runs[0]) == _timeline(runs[1]), scheduler
+        assert runs[0].summary()["all_verified"], scheduler
+        assert runs[0].n_served == 240, scheduler
+        assert runs[0].scheduler == scheduler
+
+
+def test_scheduler_registry_and_validation():
+    assert set(MOUNT_SCHEDULERS) == {"greedy", "lowest-numbered", "lru", "lookahead"}
+    assert resolve_scheduler("lowest-numbered").name == "greedy"
+    custom = LookaheadScheduler()
+    assert resolve_scheduler(custom) is custom
+    with pytest.raises(ValueError, match="mount scheduler"):
+        DrivePool(2, scheduler="mru")
+    with pytest.raises(TypeError, match="MountScheduler"):
+        resolve_scheduler(object())
+    with pytest.raises(ValueError, match="admission"):
+        OnlineTapeServer(build_library(), "edf")  # not a registered name
+
+
+def test_admission_registry_includes_qos_tier():
+    assert set(QOS_ADMISSIONS) == {"edf-global", "slack-accumulate"}
+    assert set(ADMISSIONS) == (
+        set(LEGACY_ADMISSIONS) | set(POOL_ADMISSIONS) | set(QOS_ADMISSIONS)
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: JSONL trace write -> read -> replay, bit-exact
+# ---------------------------------------------------------------------------
+def test_trace_roundtrip_bit_exact(tmp_path):
+    records = qos_poisson_trace(
+        build_library(), n_requests=80, mean_interarrival=250_000, seed=SEED,
+        tightness=8_000_000,
+    )
+    path = tmp_path / "trace.jsonl"
+    write_trace(path, records)
+    replayed = read_trace(path)
+    assert replayed == records
+    # writer bytes are deterministic: write(read(write(r))) == write(r)
+    second = tmp_path / "again.jsonl"
+    write_trace(second, replayed)
+    assert second.read_bytes() == path.read_bytes()
+    # ... and the replay reproduces the original run bit for bit
+    kw = dict(window=400_000, policy="dp", n_drives=2, drive_costs=COSTS)
+    trace_a, qos_a = to_requests(records, build_library())
+    trace_b, qos_b = to_requests(replayed, build_library())
+    assert trace_a == trace_b and qos_a == qos_b
+    a = serve_trace(build_library(), trace_a, "slack-accumulate", qos=qos_a, **kw)
+    b = serve_trace(build_library(), trace_b, "slack-accumulate", qos=qos_b, **kw)
+    assert _timeline(a) == _timeline(b)
+    assert a.summary() == b.summary()
+
+
+def test_records_of_inverts_to_requests():
+    trace = build_trace(n_requests=50)
+    qos = {r.req_id: QoSSpec(deadline=r.time + 1_000_000) for r in trace}
+    records = records_of(trace, qos)
+    back, back_qos = to_requests(records)
+    assert back == trace
+    assert back_qos == qos
+
+
+def test_to_requests_expands_multiplicity_and_validates():
+    lib = build_library()
+    name = sorted(lib.location)[0]
+    tid = lib.location[name]
+    rec = TraceRecord(arrival=5, tape=tid, file=name, multiplicity=3,
+                      deadline=9_000, qos_class="batch")
+    trace, qos = to_requests([rec], lib)
+    assert len(trace) == 3
+    assert [r.req_id for r in trace] == [0, 1, 2]
+    assert all(r.time == 5 and r.name == name for r in trace)
+    assert all(qos[r.req_id] == QoSSpec(deadline=9_000, qos_class="batch")
+               for r in trace)
+    with pytest.raises(ValueError, match="not in the library"):
+        to_requests([TraceRecord(arrival=0, tape=tid, file="ghost")], lib)
+    with pytest.raises(ValueError, match="is on"):
+        to_requests([TraceRecord(arrival=0, tape="TAPE999", file=name)], lib)
+
+
+def test_trace_record_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        TraceRecord(arrival=-1, tape="T", file="f")
+    with pytest.raises(ValueError, match="multiplicity"):
+        TraceRecord(arrival=0, tape="T", file="f", multiplicity=0)
+    with pytest.raises(ValueError, match="precedes arrival"):
+        TraceRecord(arrival=10, tape="T", file="f", deadline=9)
+    with pytest.raises(ValueError, match="qos_class"):
+        TraceRecord(arrival=0, tape="T", file="f", qos_class="")
+
+
+def test_read_trace_rejects_malformed_files(tmp_path):
+    good = tmp_path / "good.jsonl"
+    write_trace(good, [TraceRecord(arrival=0, tape="T", file="f")])
+    assert read_trace(good) == [TraceRecord(arrival=0, tape="T", file="f")]
+
+    no_header = tmp_path / "no_header.jsonl"
+    no_header.write_text('{"arrival":0,"file":"f","tape":"T"}\n')
+    with pytest.raises(ValueError, match="schema header"):
+        read_trace(no_header)
+
+    bad_schema = tmp_path / "bad_schema.jsonl"
+    bad_schema.write_text('{"schema":"ltsp-trace/v999"}\n')
+    with pytest.raises(ValueError, match="unsupported schema"):
+        read_trace(bad_schema)
+
+    unknown = tmp_path / "unknown.jsonl"
+    unknown.write_text(
+        '{"schema":"%s"}\n{"arrival":0,"file":"f","tape":"T","prio":1}\n'
+        % TRACE_SCHEMA
+    )
+    with pytest.raises(ValueError, match="unknown field"):
+        read_trace(unknown)
+
+    not_json = tmp_path / "not_json.jsonl"
+    not_json.write_text('{"schema":"%s"}\nnot json\n' % TRACE_SCHEMA)
+    with pytest.raises(ValueError, match="not valid JSON"):
+        read_trace(not_json)
