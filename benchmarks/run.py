@@ -563,6 +563,13 @@ def bench_online_serving(full: bool = False):
     per-request FIFO at every swept rate — the online claim of the paper's
     objective, asserted on virtual time (no wall clocks).
 
+    The warm-vs-cold sweep then re-serves each rate with ``warm_start``
+    on and off: schedules must be bit-identical (warm start only changes
+    how much DP work a re-solve performs), ``preempt`` must evaluate
+    strictly fewer cells warm at every rate, and the loaded regime must
+    show >= 30% fewer per-tick DP cells — the exact integer cell counts
+    land in the record and are gated by ``--baseline``.
+
     The drive-pool sweep then prices the robotic-arm layer: ``n_drives`` in
     {1, 2, n_tapes} under a nonzero mount/unmount/load-seek model for each
     cross-cartridge admission (``fifo-global`` / ``per-drive-accumulate`` /
@@ -630,11 +637,91 @@ def bench_online_serving(full: bool = False):
                 f"mean_sojourn={s['mean_sojourn']:.4g};"
                 f"p50={s['p50_sojourn']:.4g};p95={s['p95_sojourn']:.4g};"
                 f"p99={s['p99_sojourn']:.4g};batches={s['n_batches']};"
-                f"preempts={s['n_preemptions']}",
+                f"preempts={s['n_preemptions']};"
+                f"cells={s['cells_evaluated']};reused={s['cells_reused']};"
+                f"cache_hits={s.get('cache', {}).get('hits', 0)}",
             )
         assert per_admission["accumulate"] < per_admission["fifo"], (
             f"accumulate-then-solve must beat FIFO at rate {rate}"
         )
+
+    # -- warm-vs-cold sweep: per-tick DP work saved by incremental re-solve --
+    # Both arms run the same solve_warm plumbing (so counters compare like
+    # for like); only warm_start differs.  Schedules must be bit-identical
+    # at every swept rate — warm start is a work optimisation, never a
+    # scheduling change — and the cells-evaluated reduction is asserted
+    # where re-solving dominates: `preempt` re-solves the surviving multiset
+    # on every arrival, so reuse must strictly win at every rate and cut
+    # >= 30% of the per-tick DP cells in the most-loaded regime.
+    def _schedule_keys(s):
+        return {
+            k: v for k, v in s.items()
+            if k not in ("warm_start", "cells_evaluated", "cells_reused",
+                         "cells_per_batch", "cache")
+        }
+
+    warm_rows = []
+    warm_cells: dict[tuple[str, int], dict] = {}
+    rates = (100_000, 400_000, 1_600_000)
+    loaded_rate = min(rates)  # smallest inter-arrival gap = highest load
+    for rate in rates:
+        trace = poisson_trace(
+            build_library(), n_requests=n_requests, mean_interarrival=rate, seed=seed
+        )
+        for admission in ("accumulate", "preempt"):
+            per_mode = {}
+            for warm_start in (True, False):
+                lib = build_library()
+                t0 = time.perf_counter()
+                report = serve_trace(
+                    lib, trace, admission,
+                    window=window if admission == "accumulate" else 0,
+                    policy="dp", context=lib.context, warm_start=warm_start,
+                )
+                dt = time.perf_counter() - t0
+                s = report.summary()
+                assert s["n_served"] == n_requests and s["all_verified"]
+                per_mode[warm_start] = s
+                warm_rows.append({"rate": rate, "wall_s": dt, **s})
+            warm_s, cold_s = per_mode[True], per_mode[False]
+            assert _schedule_keys(warm_s) == _schedule_keys(cold_s), (
+                f"warm start changed a schedule: {admission} at rate {rate}"
+            )
+            assert cold_s["cells_reused"] == 0, "cold runs must not reuse"
+            assert warm_s["cells_evaluated"] <= cold_s["cells_evaluated"]
+            if admission == "preempt":
+                # recorded assertion: strictly fewer cells at EVERY rate
+                assert warm_s["cells_evaluated"] < cold_s["cells_evaluated"], (
+                    f"warm start must strictly reduce DP work at rate {rate}"
+                )
+            reduction = (
+                1.0 - warm_s["cells_evaluated"] / cold_s["cells_evaluated"]
+                if cold_s["cells_evaluated"] else 0.0
+            )
+            warm_cells[(admission, rate)] = {
+                "admission": admission,
+                "rate": rate,
+                "warm_cells": warm_s["cells_evaluated"],
+                "cold_cells": cold_s["cells_evaluated"],
+                "cells_reused": warm_s["cells_reused"],
+                "n_batches": warm_s["n_batches"],
+                "warm_cells_per_batch": warm_s["cells_per_batch"],
+                "cold_cells_per_batch": cold_s["cells_per_batch"],
+                "reduction": reduction,
+            }
+            _emit(
+                f"online/warm/{admission}/rate_{rate}",
+                0.0,
+                f"cells_warm={warm_s['cells_evaluated']};"
+                f"cells_cold={cold_s['cells_evaluated']};"
+                f"reused={warm_s['cells_reused']};"
+                f"reduction={reduction:.1%};batches={warm_s['n_batches']}",
+            )
+    headline = warm_cells[("preempt", loaded_rate)]
+    assert headline["reduction"] >= 0.30, (
+        f"warm start must cut >= 30% of per-tick DP cells in the loaded "
+        f"regime (rate={loaded_rate}); measured {headline['reduction']:.1%}"
+    )
 
     # -- drive-pool sweep: contention under an explicit mount cost model -----
     costs = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
@@ -757,7 +844,7 @@ def bench_online_serving(full: bool = False):
             )
 
     (RESULTS / "online_serving.json").write_text(
-        json.dumps(rows + pool_rows + qos_rows + sched_rows, indent=1)
+        json.dumps(rows + warm_rows + pool_rows + qos_rows + sched_rows, indent=1)
     )
     RECORD["online_serving"] = {
         "seed": seed,
@@ -765,6 +852,13 @@ def bench_online_serving(full: bool = False):
         "n_tapes": n_tapes,
         "window": window,
         "rows": rows,
+        "warm_sweep": {
+            "rates": list(rates),
+            "loaded_rate": loaded_rate,
+            "headline": headline,
+            "cells": list(warm_cells.values()),
+            "rows": warm_rows,
+        },
         "drive_sweep": {
             "costs": dataclasses.asdict(costs),
             "rate": rate,
@@ -796,7 +890,15 @@ def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
     calibrates away the runner's absolute speed (a checked-in baseline is
     recorded on a different machine than CI; absolute wall time would gate
     hardware, not code).  The absolute numbers are printed alongside for the
-    trajectory.  Returns a shell exit code.
+    trajectory.
+
+    Second gate, on the serving loop's per-tick solve work: the warm-start
+    sweep's headline cell counts are *exact integers on virtual time* —
+    deterministic given the seeded trace, so machine-independent.  The
+    warm-start reduction in the loaded regime must stay >= 30%, and the
+    per-tick warm cell count must not creep above the baseline by more than
+    :data:`REGRESSION_TOLERANCE` (a creep means reuse quietly degraded even
+    if the ratio still clears the floor).  Returns a shell exit code.
     """
     baseline = json.loads(baseline_path.read_text())
     try:
@@ -833,7 +935,29 @@ def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
             "shared wavefront path may have uniformly regressed (invisible "
             "to the speedup-ratio gate)."
         )
-    return 0 if new_speedup >= floor else 1
+
+    # -- per-tick solve-work gate (exact virtual-time cell counts) -----------
+    try:
+        base_head = baseline["online_serving"]["warm_sweep"]["headline"]
+        new_head = record["online_serving"]["warm_sweep"]["headline"]
+    except KeyError as e:
+        print(f"baseline check: missing warm_sweep record ({e})")
+        return 2
+    cells_ceiling = (1.0 + REGRESSION_TOLERANCE) * base_head["warm_cells_per_batch"]
+    warm_ok = (
+        new_head["reduction"] >= 0.30
+        and new_head["warm_cells_per_batch"] <= cells_ceiling
+    )
+    print(
+        f"baseline check [{'OK' if warm_ok else 'REGRESSED'}]: warm-start "
+        f"per-tick DP work ({new_head['admission']} at rate "
+        f"{new_head['rate']}): {new_head['warm_cells_per_batch']:.1f} "
+        f"cells/batch vs baseline {base_head['warm_cells_per_batch']:.1f} "
+        f"(ceiling {cells_ceiling:.1f}); reduction vs cold "
+        f"{new_head['reduction']:.1%} (floor 30%, baseline "
+        f"{base_head['reduction']:.1%})"
+    )
+    return 0 if (new_speedup >= floor and warm_ok) else 1
 
 
 def main() -> None:

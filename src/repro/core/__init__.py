@@ -23,7 +23,14 @@ from .schedule import (
     schedule_makespan,
     service_times,
 )
-from .dp import dp_schedule, dp_value, logdp_schedule, simpledp_schedule, logdp_span
+from .dp import (
+    dp_schedule,
+    dp_schedule_warm,
+    dp_value,
+    logdp_schedule,
+    simpledp_schedule,
+    logdp_span,
+)
 from .heuristics import no_detour, gs, fgs, nfgs, lognfgs
 from .solver import (
     ALGORITHMS,
@@ -37,7 +44,11 @@ from .solver import (
     register_solver,
     solve,
     solve_batch,
+    solve_batch_warm,
+    solve_warm,
 )
+from .cache import CacheBackend, JsonlCacheBackend
+from .warm import WarmState, WarmStats
 
 __all__ = [
     "ExecutionContext",
@@ -53,6 +64,7 @@ __all__ = [
     "schedule_makespan",
     "lower_bound_gap",
     "dp_schedule",
+    "dp_schedule_warm",
     "dp_value",
     "logdp_schedule",
     "simpledp_schedule",
@@ -72,5 +84,11 @@ __all__ = [
     "list_solvers",
     "solve",
     "solve_batch",
+    "solve_warm",
+    "solve_batch_warm",
+    "CacheBackend",
+    "JsonlCacheBackend",
+    "WarmState",
+    "WarmStats",
     "ALGORITHMS",
 ]

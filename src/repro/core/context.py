@@ -9,8 +9,11 @@ a dozen signatures.  :class:`ExecutionContext` bundles all of it:
 * ``backend`` — execution engine: ``"python"`` (exact CPU, default),
   ``"pallas"`` (compiled TPU wavefront), ``"pallas-interpret"`` (same kernel
   through the Pallas interpreter — the validated device path in this repo);
-* ``cache`` — an optional :class:`~repro.core.solver.SolveCache` memoising
-  repeated solves of identical request multisets;
+* ``cache`` — an optional :class:`~repro.core.cache.CacheBackend` memoising
+  repeated solves of identical request multisets (and carrying advisory
+  :class:`~repro.core.warm.WarmState` objects for warm-started re-solves);
+  :class:`~repro.core.solver.SolveCache` is the in-process LRU default,
+  :class:`~repro.core.cache.JsonlCacheBackend` persists across restarts;
 * ``bucketed`` — whether device batches go through the size-bucketed launch
   planner (``False`` reproduces the seed's single maximally-padded launch,
   kept for A/B benchmarking);
@@ -42,7 +45,7 @@ import warnings
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (solver imports us)
-    from .solver import SolveCache
+    from .cache import CacheBackend
 
 __all__ = [
     "BACKENDS",
@@ -65,7 +68,7 @@ class ExecutionContext:
     """Immutable bundle of execution options for the scheduling API."""
 
     backend: str = DEFAULT_BACKEND
-    cache: "SolveCache | None" = None
+    cache: "CacheBackend | None" = None
     bucketed: bool = True
     cand_tile: int | None = None
     numeric_policy: str = "strict"
@@ -96,7 +99,7 @@ def resolve_context(
     context: ExecutionContext | None = None,
     *,
     backend: str | None = None,
-    cache: "SolveCache | None" = None,
+    cache: "CacheBackend | None" = None,
     default: ExecutionContext | None = None,
     stacklevel: int = 3,
 ) -> ExecutionContext:

@@ -38,8 +38,16 @@ from __future__ import annotations
 import math
 
 from .instance import Instance, virtual_lb
+from .warm import DictStore, WarmState, WarmStats, align_warm, warm_from_instance
 
-__all__ = ["dp_schedule", "logdp_schedule", "simpledp_schedule", "dp_value", "logdp_span"]
+__all__ = [
+    "dp_schedule",
+    "dp_schedule_warm",
+    "logdp_schedule",
+    "simpledp_schedule",
+    "dp_value",
+    "logdp_span",
+]
 
 
 def dp_schedule(
@@ -51,6 +59,28 @@ def dp_schedule(
     and ``detours`` is the list of detours realising it (the implicit final
     global pass is not listed).  ``span`` restricts detour spans (LOGDP).
     """
+    cost, detours, _, _ = dp_schedule_warm(inst, span=span)
+    return cost, detours
+
+
+def dp_schedule_warm(
+    inst: Instance,
+    span: int | None = None,
+    warm: WarmState | None = None,
+) -> tuple[int, list[tuple[int, int]], WarmState, WarmStats]:
+    """:func:`dp_schedule` with warm-start reuse and exact work counters.
+
+    ``warm`` is a :class:`~repro.core.warm.WarmState` from a previous solve
+    of a *related* instance (same cartridge, perturbed request multiset).
+    Cells covered by an aligned segment (see :mod:`repro.core.warm`) are
+    installed from the warm store instead of being folded; everything else —
+    including the whole table when no alignment exists — evaluates exactly
+    as the cold DP does, so ``(cost, detours)`` is bit-identical to
+    :func:`dp_schedule` by construction *and* asserted differentially in the
+    tests.  Returns ``(cost, detours, new_warm, stats)`` where ``new_warm``
+    wraps this solve's memo for the next tick (handed over by reference, no
+    copy) and ``stats`` counts recurrence folds vs. warm transfers.
+    """
     R = inst.n_req
     left = inst.left.tolist()
     right = inst.right.tolist()
@@ -61,9 +91,34 @@ def dp_schedule(
 
     memo: dict[tuple[int, int, int], int] = {}
     choice: dict[tuple[int, int, int], int] = {}  # -1 = skip, else c
+    stats = WarmStats(mode="cold")
+    al = align_warm(warm, inst, span)
+    if al is not None:
+        stats.mode = "warm"
+        w_store, w_seg, w_map, w_delta, w_off = (
+            warm.store, al.seg, al.map_idx, al.delta, al.off,
+        )
 
     def base(b: int, s: int) -> int:
         return 2 * size[b] * (s + nl[b])
+
+    def try_warm(a: int, b: int, s: int) -> bool:
+        """Install ``(a, b, s)`` from the warm store if an aligned segment
+        covers it (value and index-shifted choice; see repro.core.warm)."""
+        sa = w_seg[a]
+        if sa < 0 or sa != w_seg[b]:
+            return False
+        sw = s + w_delta[sa]
+        if sw < 0:
+            return False
+        hit = w_store.lookup(w_map[a], w_map[b], sw)
+        if hit is None:
+            return False
+        v, cw = hit
+        memo[(a, b, s)] = v
+        choice[(a, b, s)] = cw if cw < 0 else cw - w_off[sa]
+        stats.cells_reused += 1
+        return True
 
     def deps(a: int, b: int, s: int):
         """Non-base cells the recurrence for ``(a, b, s)`` reads."""
@@ -102,36 +157,54 @@ def dp_schedule(
                 best, arg = v, c
         return best, arg
 
-    root = (0, R - 1, 0)
-    if R == 1:
-        opt_rel = base(0, 0)
-    else:
-        # Post-order over the dependency DAG with an explicit stack: a cell is
-        # pushed unexpanded, re-pushed expanded together with its unresolved
-        # dependencies, and folded when seen expanded (all deps then memoised).
-        stack: list[tuple[int, int, int, bool]] = [(*root, False)]
+    def run(cell: tuple[int, int, int]) -> None:
+        """Evaluate ``cell`` (and everything it transitively needs).
+
+        Post-order over the dependency DAG with an explicit stack: a cell is
+        pushed unexpanded, re-pushed expanded together with its unresolved
+        dependencies, and folded when seen expanded (all deps then memoised).
+        A warm transfer at first encounter short-circuits the expansion —
+        the reused value stands in for the whole subtree below it.
+        """
+        stack: list[tuple[int, int, int, bool]] = [(*cell, False)]
         while stack:
             a, b, s, expanded = stack.pop()
             if (a, b, s) in memo:
                 continue
             if expanded:
                 memo[(a, b, s)], choice[(a, b, s)] = value(a, b, s)
+                stats.cells_evaluated += 1
+                continue
+            if al is not None and try_warm(a, b, s):
                 continue
             stack.append((a, b, s, True))
-            for cell in deps(a, b, s):
-                if cell not in memo:
-                    stack.append((*cell, False))
+            for dep in deps(a, b, s):
+                if dep not in memo:
+                    stack.append((*dep, False))
+
+    root = (0, R - 1, 0)
+    if R == 1:
+        opt_rel = base(0, 0)
+    else:
+        run(root)
         opt_rel = memo[root]
 
     opt = opt_rel + virtual_lb(inst)
 
     # -- traceback: pre-order replay of the recorded choices ------------------
+    # A warm-transferred cell carries its choice but not its inner structure;
+    # when the optimal path descends past one, run() lazily resolves the
+    # missing cell (warm store first, recurrence otherwise) — exact either
+    # way, and any extra folds are counted in stats.cells_evaluated.
     detours: list[tuple[int, int]] = []
     work: list[tuple[int, int, int]] = [root]
     while work:
         a, b, s = work.pop()
         while a < b:
-            c = choice[(a, b, s)]
+            c = choice.get((a, b, s))
+            if c is None:
+                run((a, b, s))
+                c = choice[(a, b, s)]
             if c == -1:  # skip b
                 s += x[b]
                 b -= 1
@@ -143,7 +216,8 @@ def dp_schedule(
             work.append((a, c - 1, s))
             a = c
         # a == b: base cell, single-file handling folded into parent detour
-    return opt, detours
+    new_warm = warm_from_instance(inst, span, DictStore(memo, choice))
+    return opt, detours, new_warm, stats
 
 
 def dp_value(inst: Instance, span: int | None = None) -> int:

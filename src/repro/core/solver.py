@@ -42,37 +42,60 @@ Registering a custom policy::
                              span_policy=lambda n_req: logdp_span(n_req, 2.0),
                              description="LOGDP with lambda=2"))
 
-Memoising repeated solves
--------------------------
+Memoising repeated solves: the ``CacheBackend`` protocol
+--------------------------------------------------------
 Serving and restore loops frequently re-plan *identical* tapes (the same
-request multiset against the same cartridge).  :class:`SolveCache` is a
-bounded LRU memo for those: hang one on the :class:`ExecutionContext` (or a
-``TapeLibrary``'s context) and repeated identical solves return the stored
-result without touching a backend.
+request multiset against the same cartridge).  ``ExecutionContext.cache``
+accepts any object implementing the
+:class:`~repro.core.cache.CacheBackend` protocol —
+``get``/``put``/``stats``/``clear``/``__len__`` over canonicalized solve
+keys, plus ``get_warm``/``put_warm`` for carrying
+:class:`~repro.core.warm.WarmState` objects alongside the memoised full
+solves.  :class:`SolveCache` (in-process bounded LRU) is the default
+implementation; :class:`~repro.core.cache.JsonlCacheBackend` adds an
+append-only on-disk journal so a restarted serving fleet rewarms from its
+previous runs.  Backends only ever memoise exact results, so swapping one
+for another (or bounding one below the working set) changes wall time, never
+a single schedule — asserted in the cache-eviction serving tests.
 
-The cache key is the **canonicalized request multiset**:
-``(policy, backend, m, u_turn, left.tobytes(), right.tobytes(),
-mult.tobytes())``.  An :class:`~repro.core.instance.Instance` already stores
-requested files sorted by position with aggregated multiplicities, so two
-request batches that read the same files the same number of times on the same
-cartridge canonicalize to the same key regardless of arrival order.  The key
-captures array *contents* at call time and hits return a fresh
-:class:`SolveResult` (detours copied), so mutating an instance or a returned
-schedule never aliases into — or invalidates silently — a cached entry.
-``backend`` is part of the key because a hit reports the backend that
-actually computed it; all backends are bit-identical (the f64 fallback only
-fires where strict mode would raise, and is exact in its domain), so sharing
-keys across backends would be sound but would misreport provenance.  The
-remaining context options (bucketing, ``cand_tile``, ``numeric_policy``)
-never change results, so they stay out of the key — deliberately, including
-``numeric_policy``: a strict-policy call may therefore consume a result an
-f64-policy call cached earlier instead of raising the int32-guard error
-(the value is identical either way; only share a cache across numeric
-policies if that error-signalling looseness is acceptable).
+The cache key is the **canonicalized request multiset** plus the full
+result-affecting execution fingerprint: ``(policy, backend, numeric_policy,
+cand_tile, m, u_turn, left.tobytes(), right.tobytes(), mult.tobytes())``.
+An :class:`~repro.core.instance.Instance` already stores requested files
+sorted by position with aggregated multiplicities, so two request batches
+that read the same files the same number of times on the same cartridge
+canonicalize to the same key regardless of arrival order.  The key captures
+array *contents* at call time and hits return a fresh :class:`SolveResult`
+(detours copied), so mutating an instance or a returned schedule never
+aliases into — or invalidates silently — a cached entry.  ``backend`` is
+part of the key because a hit reports the backend that actually computed
+it.  ``numeric_policy`` and ``cand_tile`` are part of the key for the same
+provenance reason, with a sharper edge: every backend/policy/tile
+combination is bit-identical *where it computes at all*, but their error
+domains differ — a strict-policy call must raise the int32-guard error on a
+wide instance, not silently consume a result an f64-policy call cached
+earlier, and a cached result must never claim it was computed under a tile
+configuration that never ran.  (Earlier revisions deliberately excluded
+both; the serving stack now distinguishes numeric configurations per
+cartridge, so the aliasing became an observable bug.)  Only ``bucketed``
+stays out of the key: it is launch *packing*, invisible in the result and
+carrying no error-domain of its own.
 
 The legacy ``ALGORITHMS`` mapping is kept as a read-only view over the
 registry (name → ``inst -> detours`` callable) for downstream code that only
 wants detour lists.
+
+Warm-started solving
+--------------------
+:func:`solve_warm`/:func:`solve_batch_warm` mirror :func:`solve`/
+:func:`solve_batch` but additionally thread a
+:class:`~repro.core.warm.WarmState` per instance: pass the state returned by
+the previous solve of a perturbed sibling (same cartridge, one request
+added/completed/aborted) and the DP re-evaluates only the invalidated cells
+— bit-identical results, with exact evaluated/reused cell counters in the
+returned :class:`~repro.core.warm.WarmStats`.  Policies advertise support
+via ``Solver.supports_warm`` (the DP family: ``dp``/``logdp*``); unsupported
+policies fall back to a plain full solve with ``mode="unsupported"``.
 """
 
 from __future__ import annotations
@@ -90,10 +113,11 @@ from .context import (
     ExecutionContext,
     resolve_context,
 )
-from .dp import dp_schedule, logdp_span, simpledp_schedule
+from .dp import dp_schedule, dp_schedule_warm, logdp_span, simpledp_schedule
 from .heuristics import fgs, gs, lognfgs, nfgs, no_detour
 from .instance import Instance
 from .schedule import evaluate_detours
+from .warm import WarmState, WarmStats
 
 __all__ = [
     "BACKENDS",
@@ -112,6 +136,8 @@ __all__ = [
     "list_solvers",
     "solve",
     "solve_batch",
+    "solve_warm",
+    "solve_batch_warm",
     "ALGORITHMS",
 ]
 
@@ -154,24 +180,40 @@ class SolveResult:
 class SolveCache:
     """Bounded LRU memo of solved instances (see the module docstring).
 
-    Keys canonicalize the request multiset plus ``(policy, backend)``; values
-    are immutable snapshots (detours stored as tuples), re-materialised into a
-    fresh :class:`SolveResult` on every hit.  ``hits``/``misses`` counters
-    feed the benchmark summaries.
+    The reference :class:`~repro.core.cache.CacheBackend` implementation.
+    Keys canonicalize the request multiset plus ``(policy, backend,
+    numeric_policy, cand_tile)``; values are immutable snapshots (detours
+    stored as tuples), re-materialised into a fresh :class:`SolveResult` on
+    every hit.  ``hits``/``misses`` counters feed the benchmark summaries.
+    A separate, independently bounded LRU side-table carries per-cartridge
+    :class:`~repro.core.warm.WarmState` objects
+    (:meth:`get_warm`/:meth:`put_warm`) — warm states are advisory (any
+    solve is exact without one), so they are never persisted and evicting
+    one costs a little extra DP work, never correctness.
     """
 
-    def __init__(self, maxsize: int = 4096):
+    def __init__(self, maxsize: int = 4096, warm_maxsize: int = 512):
         self.maxsize = maxsize
+        self.warm_maxsize = warm_maxsize
         self.hits = 0
         self.misses = 0
         self._store: OrderedDict[tuple, tuple] = OrderedDict()
+        self._warm: OrderedDict[tuple, object] = OrderedDict()
 
     @staticmethod
-    def key(inst: Instance, policy: str, backend: str) -> tuple:
+    def key(
+        inst: Instance,
+        policy: str,
+        backend: str,
+        numeric_policy: str = "strict",
+        cand_tile: int | None = None,
+    ) -> tuple:
         """Canonical cache key; captures array contents at call time."""
         return (
             policy,
             backend,
+            numeric_policy,
+            cand_tile,
             inst.m,
             inst.u_turn,
             inst.left.tobytes(),
@@ -182,8 +224,15 @@ class SolveCache:
     def __len__(self) -> int:
         return len(self._store)
 
-    def get(self, inst: Instance, policy: str, backend: str) -> SolveResult | None:
-        key = self.key(inst, policy, backend)
+    def get(
+        self,
+        inst: Instance,
+        policy: str,
+        backend: str,
+        numeric_policy: str = "strict",
+        cand_tile: int | None = None,
+    ) -> SolveResult | None:
+        key = self.key(inst, policy, backend, numeric_policy, cand_tile)
         entry = self._store.get(key)
         if entry is None:
             self.misses += 1
@@ -193,19 +242,47 @@ class SolveCache:
         cost, detours = entry
         return SolveResult(policy, backend, cost, [tuple(d) for d in detours])
 
-    def put(self, inst: Instance, policy: str, backend: str, res: SolveResult) -> None:
-        self._store[self.key(inst, policy, backend)] = (
+    def put(
+        self,
+        inst: Instance,
+        policy: str,
+        backend: str,
+        res: SolveResult,
+        numeric_policy: str = "strict",
+        cand_tile: int | None = None,
+    ) -> None:
+        key = self.key(inst, policy, backend, numeric_policy, cand_tile)
+        self._store[key] = (
             res.cost,
             tuple((int(c), int(b)) for c, b in res.detours),
         )
         while len(self._store) > self.maxsize:
             self._store.popitem(last=False)
 
+    # -- warm-state side-table (advisory, in-memory only) ---------------------
+    def get_warm(self, key: tuple):
+        """The stored :class:`WarmState` for ``key`` (e.g. a cartridge id)."""
+        state = self._warm.get(key)
+        if state is not None:
+            self._warm.move_to_end(key)
+        return state
+
+    def put_warm(self, key: tuple, state) -> None:
+        self._warm[key] = state
+        while len(self._warm) > self.warm_maxsize:
+            self._warm.popitem(last=False)
+
     def stats(self) -> dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses, "entries": len(self)}
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "entries": len(self),
+            "warm_entries": len(self._warm),
+        }
 
     def clear(self) -> None:
         self._store.clear()
+        self._warm.clear()
         self.hits = 0
         self.misses = 0
 
@@ -257,6 +334,15 @@ class Solver(Protocol):
     def supports_device(self) -> bool:
         """Capability flag: True iff a ``pallas*`` backend is implemented."""
 
+    @property
+    def supports_warm(self) -> bool:
+        """Capability flag: True iff warm-start re-solve is implemented.
+
+        Warm-capable solvers additionally expose ``solve_warm`` /
+        ``solve_batch_warm`` with the :func:`solve_warm` module-function
+        signatures (minus policy/cache handling).
+        """
+
     def solve(
         self, inst: Instance, context: ExecutionContext = DEFAULT_CONTEXT
     ) -> SolveResult:
@@ -293,6 +379,10 @@ class HeuristicSolver:
 
     @property
     def supports_device(self) -> bool:
+        return False
+
+    @property
+    def supports_warm(self) -> bool:
         return False
 
     def solve(
@@ -336,6 +426,10 @@ class DPSolver:
 
     @property
     def supports_device(self) -> bool:
+        return True
+
+    @property
+    def supports_warm(self) -> bool:
         return True
 
     def _span(self, inst: Instance) -> int | None:
@@ -384,6 +478,68 @@ class DPSolver:
                 results[i] = SolveResult(self.name, ctx.backend, cost, detours)
         return results  # type: ignore[return-value]
 
+    def solve_warm(
+        self,
+        inst: Instance,
+        context: ExecutionContext | str = DEFAULT_CONTEXT,
+        warm=None,
+    ):
+        """Warm-startable solve: ``(SolveResult, new WarmState, WarmStats)``.
+
+        Bit-identical to :meth:`solve` whatever ``warm`` holds (asserted
+        differentially in the tests); the state/counters travel alongside.
+        """
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
+        if ctx.backend == "python":
+            cost, detours, new_warm, stats = dp_schedule_warm(
+                inst, span=self._span(inst), warm=warm
+            )
+        else:
+            from ..kernels.ltsp_dp.ops import ltsp_solve_instance_warm
+
+            cost, detours, new_warm, stats = ltsp_solve_instance_warm(
+                inst, span=self._span(inst), warm=warm, **_device_kwargs(ctx)
+            )
+        return SolveResult(self.name, ctx.backend, cost, detours), new_warm, stats
+
+    def solve_batch_warm(
+        self,
+        instances: list[Instance],
+        context: ExecutionContext | str = DEFAULT_CONTEXT,
+        warms=None,
+    ):
+        """Batch :meth:`solve_warm`; device backends group launches by span."""
+        ctx = _as_context(context)
+        _check_backend(self, ctx.backend)
+        if warms is None:
+            warms = [None] * len(instances)
+        if ctx.backend == "python":
+            out = [self.solve_warm(inst, ctx, warm=w)
+                   for inst, w in zip(instances, warms)]
+            return ([r for r, _, _ in out], [w for _, w, _ in out],
+                    [s for _, _, s in out])
+        from ..kernels.ltsp_dp.ops import ltsp_solve_batch_warm
+
+        groups: dict[int | None, list[int]] = {}
+        for i, inst in enumerate(instances):
+            groups.setdefault(self._span(inst), []).append(i)
+        results: list[SolveResult | None] = [None] * len(instances)
+        new_warms: list = [None] * len(instances)
+        stats: list = [None] * len(instances)
+        for span, idxs in groups.items():
+            solved, ws, sts = ltsp_solve_batch_warm(
+                [instances[i] for i in idxs],
+                [warms[i] for i in idxs],
+                span=span,
+                bucketed=ctx.bucketed,
+                **_device_kwargs(ctx),
+            )
+            for i, (cost, detours), w, st in zip(idxs, solved, ws, sts):
+                results[i] = SolveResult(self.name, ctx.backend, cost, detours)
+                new_warms[i], stats[i] = w, st
+        return results, new_warms, stats
+
 
 @dataclasses.dataclass(frozen=True)
 class SimpleDPSolver:
@@ -408,6 +564,12 @@ class SimpleDPSolver:
     @property
     def supports_device(self) -> bool:
         return True
+
+    @property
+    def supports_warm(self) -> bool:
+        # the 2-D table collapses the first index: its cells are not the
+        # 3-D cells WarmState stores, so transfer does not apply
+        return False
 
     def solve(
         self, inst: Instance, context: ExecutionContext | str = DEFAULT_CONTEXT
@@ -491,12 +653,12 @@ def solve(
     _check_backend(solver, ctx.backend)  # before the cache: no miss-count pollution
     memo = ctx.cache
     if memo is not None:
-        hit = memo.get(inst, policy, ctx.backend)
+        hit = memo.get(inst, policy, ctx.backend, ctx.numeric_policy, ctx.cand_tile)
         if hit is not None:
             return hit
     res = solver.solve(inst, ctx)
     if memo is not None:
-        memo.put(inst, policy, ctx.backend, res)
+        memo.put(inst, policy, ctx.backend, res, ctx.numeric_policy, ctx.cand_tile)
     return res
 
 
@@ -526,15 +688,100 @@ def solve_batch(
     if memo is None:
         return solver.solve_batch(instances, ctx)
     results: list[SolveResult | None] = [
-        memo.get(inst, policy, ctx.backend) for inst in instances
+        memo.get(inst, policy, ctx.backend, ctx.numeric_policy, ctx.cand_tile)
+        for inst in instances
     ]
     miss = [i for i, r in enumerate(results) if r is None]
     if miss:
         solved = solver.solve_batch([instances[i] for i in miss], ctx)
         for i, res in zip(miss, solved):
-            memo.put(instances[i], policy, ctx.backend, res)
+            memo.put(instances[i], policy, ctx.backend, res,
+                     ctx.numeric_policy, ctx.cand_tile)
             results[i] = res
     return results  # type: ignore[return-value]
+
+
+def solve_warm(
+    inst: Instance,
+    policy: str = "dp",
+    *,
+    context: ExecutionContext | None = None,
+    warm: WarmState | None = None,
+) -> tuple[SolveResult, WarmState | None, WarmStats]:
+    """:func:`solve` with warm-start threading and exact work counters.
+
+    Returns ``(result, new_warm, stats)``.  ``result`` is bit-identical to
+    :func:`solve` — a warm state can only change *how much work* the solve
+    performs, never its outcome (differentially asserted in the tests).
+    ``new_warm`` is the state to pass into the next solve of a perturbed
+    sibling instance (``None`` when the policy cannot produce one); on a
+    cache hit the incoming ``warm`` is handed back unchanged — it stays
+    valid, the alignment revalidates per file on the next miss.  ``stats``
+    counts DP cells evaluated vs. reused (``mode="cache"`` marks a memo hit
+    that did no DP work at all).
+    """
+    ctx = context if context is not None else DEFAULT_CONTEXT
+    solver = get_solver(policy)
+    _check_backend(solver, ctx.backend)
+    memo = ctx.cache
+    if memo is not None:
+        hit = memo.get(inst, policy, ctx.backend, ctx.numeric_policy, ctx.cand_tile)
+        if hit is not None:
+            return hit, warm, WarmStats(mode="cache")
+    if getattr(solver, "supports_warm", False):
+        res, new_warm, stats = solver.solve_warm(inst, ctx, warm=warm)
+    else:
+        res, new_warm, stats = (
+            solver.solve(inst, ctx), None, WarmStats(mode="unsupported")
+        )
+    if memo is not None:
+        memo.put(inst, policy, ctx.backend, res, ctx.numeric_policy, ctx.cand_tile)
+    return res, new_warm, stats
+
+
+def solve_batch_warm(
+    instances: list[Instance],
+    policy: str = "dp",
+    *,
+    context: ExecutionContext | None = None,
+    warms: list[WarmState | None] | None = None,
+) -> tuple[list[SolveResult], list[WarmState | None], list[WarmStats]]:
+    """Batch :func:`solve_warm`: per-instance warm states in, results +
+    fresh states + counters out (all parallel to ``instances``).
+
+    Cache hits skip the solver and keep the incoming state, exactly like
+    :func:`solve_warm`; misses go to the backend in one warm-aware batch.
+    """
+    ctx = context if context is not None else DEFAULT_CONTEXT
+    solver = get_solver(policy)
+    _check_backend(solver, ctx.backend)
+    if warms is None:
+        warms = [None] * len(instances)
+    memo = ctx.cache
+    results: list[SolveResult | None] = [None] * len(instances)
+    new_warms: list[WarmState | None] = list(warms)
+    stats: list[WarmStats] = [WarmStats(mode="cache") for _ in instances]
+    if memo is not None:
+        for i, inst in enumerate(instances):
+            results[i] = memo.get(
+                inst, policy, ctx.backend, ctx.numeric_policy, ctx.cand_tile
+            )
+    miss = [i for i, r in enumerate(results) if r is None]
+    if miss:
+        if getattr(solver, "supports_warm", False):
+            solved, ws, sts = solver.solve_batch_warm(
+                [instances[i] for i in miss], ctx, warms=[warms[i] for i in miss]
+            )
+        else:
+            solved = solver.solve_batch([instances[i] for i in miss], ctx)
+            ws = [None] * len(miss)
+            sts = [WarmStats(mode="unsupported") for _ in miss]
+        for i, res, w, st in zip(miss, solved, ws, sts):
+            if memo is not None:
+                memo.put(instances[i], policy, ctx.backend, res,
+                         ctx.numeric_policy, ctx.cand_tile)
+            results[i], new_warms[i], stats[i] = res, w, st
+    return results, new_warms, stats  # type: ignore[return-value]
 
 
 # the paper's nine policies

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.instance import Instance, virtual_lb
+from ...core.warm import DenseStore, WarmState, WarmStats, align_warm, warm_from_instance
 from .ltsp_dp import DEFAULT_CAND_TILE, ltsp_dp_tables
 
 __all__ = [
@@ -88,6 +89,8 @@ __all__ = [
     "ltsp_opt_instance",
     "ltsp_solve_instance",
     "ltsp_solve_batch",
+    "ltsp_solve_instance_warm",
+    "ltsp_solve_batch_warm",
 ]
 
 
@@ -313,8 +316,15 @@ def _solve_packed(
     cand_tile: int,
     disjoint: bool = False,
     dtype=jnp.int32,
-) -> list[tuple[int, list[tuple[int, int]]]]:
-    """One padded device launch; results refer to the *original* instances."""
+    capture: bool = False,
+) -> tuple[list[tuple[int, list[tuple[int, int]]]], list[DenseStore | None]]:
+    """One padded device launch; results refer to the *original* instances.
+
+    ``capture=True`` additionally snapshots each instance's dense value and
+    argmin planes into a :class:`~repro.core.warm.DenseStore` (kept in the
+    launch's gcd-rescaled units together with ``g``, so lookups reconstruct
+    original-unit values with python-int arithmetic).
+    """
     left, right, x, nl, u, S = prepare_batch(
         scaled, dtype=dtype, R_pad=R_pad, S_pad=S_pad, B_pad=B_pad
     )
@@ -325,7 +335,9 @@ def _solve_packed(
     R = left.shape[1]
     C_host = np.asarray(C)
     T_root = np.asarray(T[:, 0, R - 1, 0])
+    T_host = np.asarray(T) if capture else None
     out = []
+    stores: list[DenseStore | None] = []
     x_host = np.asarray(x)
     for i, (inst, g) in enumerate(zip(originals, gs)):
         dets = traceback_detours(C_host[i], x_host[i])
@@ -336,7 +348,14 @@ def _solve_packed(
         # rescale_instance); VirtualLB comes from the original coordinates.
         cost = g * int(T_root[i]) + virtual_lb(inst)
         out.append((cost, dets))
-    return out
+        if capture:
+            prefix = np.cumsum(inst.mult).tolist()
+            stores.append(
+                DenseStore(T_host[i].copy(), C_host[i].copy(), g, inst.n, prefix)
+            )
+        else:
+            stores.append(None)
+    return out, stores
 
 
 def ltsp_solve_batch(
@@ -347,6 +366,7 @@ def ltsp_solve_batch(
     cand_tile: int = DEFAULT_CAND_TILE,
     disjoint: bool = False,
     numeric_policy: str = "strict",
+    capture: bool = False,
 ) -> list[tuple[int, list[tuple[int, int]]]]:
     """Solve several instances in a few size-bucketed device launches.
 
@@ -365,9 +385,15 @@ def ltsp_solve_batch(
     int32 magnitude guard after gcd/shift rescaling through an exact float64
     **interpret** table instead of raising (see the module docstring); the
     int32-safe majority still takes the int32 launches unchanged.
+
+    ``capture=True`` changes the return to ``(results, stores)`` where
+    ``stores[i]`` is a :class:`~repro.core.warm.DenseStore` snapshot of
+    instance ``i``'s dense value/argmin planes — the raw material for
+    warm-starting the next solve of a perturbed sibling (see
+    :func:`ltsp_solve_batch_warm`).
     """
     if not instances:
-        return []
+        return ([], []) if capture else []
     pairs = [rescale_instance(inst) for inst in instances]
     scaled = [p[0] for p in pairs]
     gs = [p[1] for p in pairs]
@@ -380,14 +406,23 @@ def ltsp_solve_batch(
     wide_set = set(wide)
     narrow = [i for i in range(len(instances)) if i not in wide_set]
 
-    def solve(idxs, R_pad, S_pad, B_pad, dtype=jnp.int32):
-        return _solve_packed(
+    stores: list[DenseStore | None] = [None] * len(instances)
+
+    def solve(idxs, R_pad, S_pad, B_pad, dtype=jnp.int32, interp=None):
+        out, subs = _solve_packed(
             [instances[i] for i in idxs],
             [scaled[i] for i in idxs],
             [gs[i] for i in idxs],
-            R_pad, S_pad, B_pad, span, interpret, cand_tile,
-            disjoint=disjoint, dtype=dtype,
+            R_pad, S_pad, B_pad, span,
+            interpret if interp is None else interp, cand_tile,
+            disjoint=disjoint, dtype=dtype, capture=capture,
         )
+        for i, st in zip(idxs, subs):
+            stores[i] = st
+        return out
+
+    def done(results):
+        return (results, stores) if capture else results
 
     results: list[tuple[int, list[tuple[int, int]]] | None] = [None] * len(instances)
     if wide:
@@ -399,28 +434,122 @@ def ltsp_solve_batch(
         with enable_x64():
             for i in wide:
                 R_pad, S_pad = bucket_shape(scaled[i])
-                [results[i]] = _solve_packed(
-                    [instances[i]], [scaled[i]], [gs[i]],
-                    R_pad, S_pad, None, span,
-                    True,  # interpret: f64 is emulated on TPU, never compiled
-                    cand_tile, disjoint=disjoint, dtype=jnp.float64,
+                # interp=True: f64 is emulated on TPU, never compiled
+                [results[i]] = solve(
+                    [i], R_pad, S_pad, None, dtype=jnp.float64, interp=True
                 )
     if not narrow:
-        return results  # type: ignore[return-value]
+        return done(results)  # type: ignore[return-value]
     if not bucketed:  # seed behaviour: one launch padded to the batch maxima
         for i, res in zip(narrow, solve(narrow, None, None, None)):
             results[i] = res
-        return results  # type: ignore[return-value]
+        return done(results)  # type: ignore[return-value]
     if len(narrow) == 1:  # fast path: no planner, one tight launch
         [i] = narrow
         R_pad, S_pad = bucket_shape(scaled[i])
         [results[i]] = solve([i], R_pad, S_pad, None)
-        return results  # type: ignore[return-value]
+        return done(results)  # type: ignore[return-value]
     for (R_pad, S_pad), sub in plan_buckets([scaled[i] for i in narrow]).items():
         idxs = [narrow[j] for j in sub]
         for idx, res in zip(idxs, solve(idxs, R_pad, S_pad, _pow2(len(idxs)))):
             results[idx] = res
-    return results  # type: ignore[return-value]
+    return done(results)  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# warm-start entry points
+# ---------------------------------------------------------------------------
+def ltsp_solve_instance_warm(
+    inst: Instance,
+    span: int | None = None,
+    warm: WarmState | None = None,
+    interpret: bool = True,
+    cand_tile: int = DEFAULT_CAND_TILE,
+    numeric_policy: str = "strict",
+) -> tuple[int, list[tuple[int, int]], WarmState | None, WarmStats]:
+    """Warm-startable single-instance solve (see :func:`ltsp_solve_batch_warm`)."""
+    results, warms, stats = ltsp_solve_batch_warm(
+        [inst], [warm], span=span, interpret=interpret,
+        cand_tile=cand_tile, numeric_policy=numeric_policy,
+    )
+    (cost, dets) = results[0]
+    return cost, dets, warms[0], stats[0]
+
+
+def ltsp_solve_batch_warm(
+    instances: list[Instance],
+    warms: list[WarmState | None] | None = None,
+    span: int | None = None,
+    interpret: bool = True,
+    bucketed: bool = True,
+    cand_tile: int = DEFAULT_CAND_TILE,
+    numeric_policy: str = "strict",
+) -> tuple[
+    list[tuple[int, list[tuple[int, int]]]],
+    list[WarmState | None],
+    list[WarmStats],
+]:
+    """Warm-startable batch solve, bit-identical to :func:`ltsp_solve_batch`.
+
+    Instances whose :class:`~repro.core.warm.WarmState` aligns (same U-turn
+    penalty and span, at least one matching file run — see
+    :func:`repro.core.warm.align_warm`) re-evaluate **only the invalidated
+    cells on the host**, in exact python ints, reading every still-valid cell
+    out of the warm store: a device relaunch would recompute the whole dense
+    table, which is precisely the work warm-starting exists to avoid, and
+    the host incremental path is bit-identical to the device wavefront (the
+    python and device backends are pinned bit-identical by the kernel parity
+    tests, and warm-vs-cold identity is asserted differentially on top).
+    Everything else takes the normal bucketed device launches with
+    ``capture=True``, so each cold solve yields a dense
+    :class:`~repro.core.warm.DenseStore` warm state for the next tick.
+
+    The numeric-policy magnitude guards run for *every* instance first —
+    including warm-aligned ones, which the guards' failure modes could
+    otherwise bypass — so strict-mode error behaviour matches the cold path
+    exactly.  Returns ``(results, new_warm_states, stats)``, all parallel to
+    ``instances``.
+    """
+    if not instances:
+        return [], [], []
+    if warms is None:
+        warms = [None] * len(instances)
+    # same guard discipline as the cold path (before any solving: a batch
+    # never fails mid-flight)
+    scaled = [rescale_instance(inst)[0] for inst in instances]
+    if numeric_policy == "f64":
+        _check_f64_safe([s for s in scaled if _table_bound(s) >= 2**31])
+    else:
+        _check_int32_safe(scaled)
+
+    from ...core.dp import dp_schedule_warm
+
+    results: list[tuple[int, list[tuple[int, int]]] | None] = [None] * len(instances)
+    new_warms: list[WarmState | None] = [None] * len(instances)
+    stats: list[WarmStats | None] = [None] * len(instances)
+    cold: list[int] = []
+    for i, (inst, warm) in enumerate(zip(instances, warms)):
+        if align_warm(warm, inst, span) is not None:
+            cost, dets, new_warm, st = dp_schedule_warm(inst, span=span, warm=warm)
+            results[i], new_warms[i], stats[i] = (cost, dets), new_warm, st
+        else:
+            cold.append(i)
+    if cold:
+        solved, stores = ltsp_solve_batch(
+            [instances[i] for i in cold], span=span, interpret=interpret,
+            bucketed=bucketed, cand_tile=cand_tile,
+            numeric_policy=numeric_policy, capture=True,
+        )
+        for i, res, store in zip(cold, solved, stores):
+            results[i] = res
+            new_warms[i] = (
+                warm_from_instance(instances[i], span, store)
+                if store is not None else None
+            )
+            # honest device work accounting: the wavefront evaluates every
+            # dense cell of the padded launch shape
+            stats[i] = WarmStats(cells_evaluated=len(store) if store else 0)
+    return results, new_warms, stats  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------

@@ -52,14 +52,23 @@ table gains deadline-miss columns, and ``--slo-target RATE`` turns the run
 into a check: exit status 1 unless some swept admission meets the target
 miss rate.
 
+**Warm starts & persistent caching** — re-solving admissions warm-start
+each cartridge's DP from the previous tick's table by default
+(bit-identical schedules, fewer DP cells evaluated; disable with
+``--no-tape-warm`` to A/B the work counters).  ``--tape-cache-file PATH``
+swaps the in-process solve memo for a persistent
+:class:`~repro.core.JsonlCacheBackend`: re-running the launcher against the
+same path replays the journal into memo hits, the restart story for a
+serving fleet.
+
 Every emitted schedule is validated by the **simulator oracle**
 (:mod:`repro.serving.sim` via :func:`repro.core.verify.verify_schedule`): the
 discrete-event replay independently recomputes the schedule's cost from the
 materialised head trajectory and must match the solver-reported cost exactly
 (integer arithmetic).  The printed table compares admission policies on one
 seeded arrival trace: mean/p50/p95 service time (sojourn), batches,
-preemptions, mounts, and solve-cache hits.  ``--tape-admission all`` sweeps
-every policy.
+preemptions, mounts, solve-cache hits, and exact DP cells
+evaluated/reused.  ``--tape-admission all`` sweeps every policy.
 """
 
 from __future__ import annotations
@@ -197,19 +206,32 @@ def _serve_tape_queue(args) -> int:
         load_seek=args.tape_load_seek,
     )
     n_drives = args.tape_drives  # None = one per cartridge (the PR-3 model)
+    journal = None
+    if args.tape_cache_file:
+        from ..core.cache import JsonlCacheBackend
+
+        journal = JsonlCacheBackend(args.tape_cache_file)
+        print(
+            f"persistent solve memo: {args.tape_cache_file} "
+            f"({journal.loaded} journaled solve(s) replayed)"
+        )
     print(
         f"online tape serving: {len(trace)} requests ({source}), "
         f"{len({r.tape_id for r in trace})} cartridge(s), "
         f"{n_drives if n_drives else 'dedicated'} drive(s), "
         f"scheduler {args.tape_scheduler}, policy {args.tape_policy}/"
-        f"{args.tape_backend}"
+        f"{args.tape_backend}, warm start "
+        f"{'off' if args.no_tape_warm else 'on'}"
     )
     deadline_cols = ",missed,miss_rate" if qos else ""
     print("admission,window,mean_sojourn,p50_sojourn,p95_sojourn,batches,"
-          f"preempts,mounts,cache_hits{deadline_cols}")
+          f"preempts,mounts,cache_hits,cells,reused{deadline_cols}")
     best_miss_rate = None
     for admission in admissions:
         lib = build_library()
+        ctx = lib.context.replace(backend=args.tape_backend)
+        if journal is not None:
+            ctx = ctx.replace(cache=journal)
         t0 = time.time()
         report = serve_trace(
             lib,
@@ -221,7 +243,8 @@ def _serve_tape_queue(args) -> int:
             drive_costs=costs,
             qos=qos or None,
             mount_scheduler=args.tape_scheduler,
-            context=lib.context.replace(backend=args.tape_backend),
+            context=ctx,
+            warm_start=not args.no_tape_warm,
         )
         dt = time.time() - t0
         s = report.summary()  # oracle runs per dispatch: a failure raised above
@@ -236,9 +259,12 @@ def _serve_tape_queue(args) -> int:
         print(
             f"{admission},{s['window']},{s['mean_sojourn']:.4g},"
             f"{s['p50_sojourn']:.4g},{s['p95_sojourn']:.4g},{s['n_batches']},"
-            f"{s['n_preemptions']},{s['mounts']},{s['cache']['hits']}{extra} "
+            f"{s['n_preemptions']},{s['mounts']},{s['cache']['hits']},"
+            f"{s['cells_evaluated']},{s['cells_reused']}{extra} "
             f"({dt*1e3:.0f} ms wall)"
         )
+    if journal is not None:
+        journal.close()
     if args.slo_target is not None:
         if not any(s.deadline is not None for s in qos.values()):
             print("--slo-target needs a deadline-annotated trace "
@@ -289,6 +315,12 @@ def main() -> None:
     ap.add_argument("--slo-target", type=float, default=None, metavar="RATE",
                     help="deadline-miss-rate target; exit 1 unless some "
                          "swept admission meets it")
+    ap.add_argument("--no-tape-warm", action="store_true",
+                    help="disable warm-started re-solves (bit-identical "
+                         "schedules either way; cold re-solves every tick)")
+    ap.add_argument("--tape-cache-file", default=None, metavar="PATH",
+                    help="persist the solve memo to a JSONL journal "
+                         "(replayed on the next run against the same path)")
     ap.add_argument("--tape-window", type=int, default=400_000,
                     help="accumulate-then-solve re-plan window (virtual time)")
     ap.add_argument("--tape-drives", type=int, default=None,

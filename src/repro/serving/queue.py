@@ -12,14 +12,43 @@ server is the ``n_drives = len(tapes)``, zero-mount-cost special case of this
 loop, bit-identically.
 
 Solving dispatches through the solver engine under an
-:class:`~repro.core.ExecutionContext` (:func:`repro.core.solve` /
-:func:`repro.core.solve_batch` — any registered policy × backend,
-:class:`~repro.core.SolveCache`-aware); the pre-context ``backend=``/``cache=``
-keywords survive as warning-emitting deprecation shims.  The discrete-event
-simulator in :mod:`repro.serving.sim` advances virtual time and independently
-re-scores every emitted schedule, so online-vs-offline regret,
-batching-vs-FIFO improvements, and mount-contention penalties are exact
-integers, not anecdotes.
+:class:`~repro.core.ExecutionContext` (:func:`repro.core.solve_warm` /
+:func:`repro.core.solve_batch_warm` — any registered policy × backend); the
+pre-context ``backend=``/``cache=`` keywords survive as warning-emitting
+deprecation shims.  The discrete-event simulator in :mod:`repro.serving.sim`
+advances virtual time and independently re-scores every emitted schedule, so
+online-vs-offline regret, batching-vs-FIFO improvements, and
+mount-contention penalties are exact integers, not anecdotes.
+
+Warm-started re-solving and the cache backend
+---------------------------------------------
+Consecutive solves of one cartridge are usually *perturbations* of each
+other — ``preempt`` re-plans the surviving multiset plus one newcomer, and
+every ``accumulate``/``slack-accumulate`` tick re-plans whatever overlaps
+the previous mix — so the server threads one
+:class:`~repro.core.warm.WarmState` per ``(cartridge, policy)`` through its
+dispatches (``warm_start=True``, the default): each solve receives the
+state captured by the cartridge's previous solve and returns a fresh one,
+and only the DP cells invalidated by the multiset diff are re-evaluated.
+Warm-starting is a pure accelerator — results are bit-identical with it on,
+off, or with states evicted mid-run (differentially asserted in the tests
+and the warm benchmark sweep) — and the exact evaluated/reused cell
+counters land per batch in :class:`~repro.serving.sim.BatchRecord` and
+aggregate on :class:`~repro.serving.sim.ServiceReport`.  With
+``warm_start=False`` every solve runs cold but the counters still record,
+so warm-vs-cold sweeps compare like for like.
+
+Warm states live wherever the context's cache backend lives: any
+:class:`~repro.core.cache.CacheBackend` on the
+:class:`~repro.core.ExecutionContext` stores them next to its memoised full
+solves (``get_warm``/``put_warm`` keyed ``("warm", tape_id, policy)``), so
+servers sharing a cache share warm states; without a cache they live on the
+server for the run.  A memoised *solve* hit short-circuits warm handling
+entirely (zero DP work beats any warm start) and keeps the cartridge's
+previous state for the next miss.  Warm states are advisory and in-memory
+only — a persistent backend (:class:`~repro.core.cache.JsonlCacheBackend`)
+rewarms a restarted fleet through its journaled solves, then rebuilds warm
+states on the first post-restart miss per cartridge.
 
 Admission policies
 ------------------
@@ -87,7 +116,7 @@ import heapq
 from typing import Mapping
 
 from ..core.context import ExecutionContext, resolve_context
-from ..core.solver import SolveCache, solve, solve_batch
+from ..core.solver import SolveCache, solve_batch_warm, solve_warm
 from ..core.verify import verify_schedule
 from ..storage.tape import PendingQueue, TapeLibrary
 from .drives import (
@@ -179,6 +208,7 @@ class OnlineTapeServer:
         backend: str | None = None,
         cache: SolveCache | None = None,
         verify: bool = True,
+        warm_start: bool = True,
     ):
         if admission not in ADMISSIONS:
             raise ValueError(
@@ -198,11 +228,36 @@ class OnlineTapeServer:
         self.qos: dict[int, QoSSpec] = dict(qos) if qos else {}
         self.mount_scheduler = mount_scheduler
         self.verify = verify
+        self.warm_start = warm_start
+        # per-(cartridge, policy) WarmState store for runs without a cache
+        # backend; with one, states live on the backend (get_warm/put_warm)
+        self._warm_local: dict[tuple, object] = {}
 
     # -- event plumbing ------------------------------------------------------
     def _push(self, when: int, kind: str, data) -> None:
         self._seq += 1
         heapq.heappush(self._events, (when, self._seq, kind, data))
+
+    # -- warm-state plumbing (see the module docstring) ----------------------
+    def _warm_key(self, tape_id: str) -> tuple:
+        return ("warm", tape_id, self.policy)
+
+    def _get_warm(self, tape_id: str):
+        if not self.warm_start:
+            return None
+        cache = self.context.cache
+        if cache is not None and hasattr(cache, "get_warm"):
+            return cache.get_warm(self._warm_key(tape_id))
+        return self._warm_local.get(self._warm_key(tape_id))
+
+    def _put_warm(self, tape_id: str, state) -> None:
+        if not self.warm_start or state is None:
+            return
+        cache = self.context.cache
+        if cache is not None and hasattr(cache, "put_warm"):
+            cache.put_warm(self._warm_key(tape_id), state)
+        else:
+            self._warm_local[self._warm_key(tape_id)] = state
 
     def run(self, trace: list[Request]) -> ServiceReport:
         """Serve a full arrival trace; returns the per-request report."""
@@ -260,6 +315,7 @@ class OnlineTapeServer:
             pool_stats=self.pool.stats(),
             scheduler=self.pool.scheduler.name,
             qos=self.qos or None,
+            warm_start=self.warm_start,
         )
 
     # -- admission -----------------------------------------------------------
@@ -410,15 +466,19 @@ class OnlineTapeServer:
                 tape = self.lib.tape_of(batch[0].name)
                 inst, names = tape.instance(_multiset(batch))
                 prepared.append((tape, inst, names))
-            results = solve_batch(
+            results, new_warms, stats = solve_batch_warm(
                 [inst for _, inst, _ in prepared],
                 policy=self.policy,
                 context=self.context,
+                warms=[self._get_warm(t.tape_id) for t, _, _ in prepared],
             )
-            for (drive, delay, batch), (tape, inst, names), res in zip(
-                picks, prepared, results
+            for (drive, delay, batch), (tape, inst, names), res, warm, st in zip(
+                picks, prepared, results, new_warms, stats
             ):
-                self._dispatch(drive, batch, now, delay, (tape, inst, names, res))
+                self._put_warm(tape.tape_id, warm)
+                self._dispatch(
+                    drive, batch, now, delay, (tape, inst, names, res, st)
+                )
             return
         for tid in cands:
             if not self.pool.can_serve(tid):
@@ -445,9 +505,15 @@ class OnlineTapeServer:
         if prepared is None:
             tape = self.lib.tape_of(batch[0].name)
             inst, names = tape.instance(_multiset(batch))
-            res = solve(inst, policy=self.policy, context=self.context)
+            res, new_warm, stats = solve_warm(
+                inst,
+                policy=self.policy,
+                context=self.context,
+                warm=self._get_warm(tape.tape_id),
+            )
+            self._put_warm(tape.tape_id, new_warm)
         else:
-            tape, inst, names, res = prepared
+            tape, inst, names, res, stats = prepared
         assert drive.mounted == tape.tape_id
         replay: Replay = replay_schedule(inst, res.detours)
         # the independent recomputation always lands in the BatchRecord; with
@@ -485,6 +551,9 @@ class OnlineTapeServer:
                 verified=verified,
                 drive=drive.drive_id,
                 mount_delay=delay,
+                cells_evaluated=stats.cells_evaluated,
+                cells_reused=stats.cells_reused,
+                warm_mode=stats.mode,
             )
         )
         self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
@@ -575,6 +644,7 @@ def serve_trace(
     backend: str | None = None,
     cache: SolveCache | None = None,
     verify: bool = True,
+    warm_start: bool = True,
 ) -> ServiceReport:
     """One-shot convenience: build an :class:`OnlineTapeServer` and run it."""
     server = OnlineTapeServer(
@@ -590,5 +660,6 @@ def serve_trace(
         backend=backend,
         cache=cache,
         verify=verify,
+        warm_start=warm_start,
     )
     return server.run(trace)

@@ -3,7 +3,13 @@
 ``make_serve_step(cfg)`` returns ``(params, cache, tokens, pos) ->
 (next_tokens, logits, cache)``; the KV/recurrent cache layout and sharding is
 described in :mod:`repro.distributed.sharding` (sequence-sharded split-K
-decode)."""
+decode).
+
+This module is deliberately *not* re-exported from :mod:`repro.serving`
+(see that package docstring): it pulls in the neural-network stack
+(``repro.models``), which the tape-serving event loop and its callers never
+need.  Import it directly — ``from repro.serving.serve import
+make_serve_step`` — as :mod:`repro.launch.serve` does."""
 
 from __future__ import annotations
 

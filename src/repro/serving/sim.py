@@ -325,6 +325,12 @@ class BatchRecord:
     n_completed: int | None = None  # only set when preempted
     drive: int = 0  # drive the pool assigned
     mount_delay: int = 0
+    #: exact DP work accounting for this batch's solve (see repro.core.warm):
+    #: recurrence folds performed vs. cells transferred from a WarmState;
+    #: ``warm_mode`` is the WarmStats mode ("cold"/"warm"/"cache"/...).
+    cells_evaluated: int = 0
+    cells_reused: int = 0
+    warm_mode: str = "cold"
 
 
 @dataclasses.dataclass
@@ -348,6 +354,8 @@ class ServiceReport:
     #: Typed loosely to keep sim importable without the QoS layer; entries
     #: only need ``.deadline``.  repro.serving.qos.slo_report joins on it.
     qos: dict | None = None
+    #: whether the server carried WarmStates across this run's solves
+    warm_start: bool = False
 
     # -- exact aggregates (ints, safe to assert on) --------------------------
     @property
@@ -361,6 +369,16 @@ class ServiceReport:
     @property
     def makespan(self) -> int:
         return max((r.completed for r in self.served), default=0)
+
+    @property
+    def cells_evaluated(self) -> int:
+        """Total DP recurrence folds across every batch solve (exact)."""
+        return sum(b.cells_evaluated for b in self.batches)
+
+    @property
+    def cells_reused(self) -> int:
+        """Total DP cells transferred from warm states instead of folded."""
+        return sum(b.cells_reused for b in self.batches)
 
     # -- float conveniences for tables ---------------------------------------
     @property
@@ -422,6 +440,12 @@ class ServiceReport:
             "makespan": self.makespan,
             "horizon": self.horizon,
             "all_verified": all(b.verified for b in self.batches),
+            "warm_start": self.warm_start,
+            "cells_evaluated": self.cells_evaluated,
+            "cells_reused": self.cells_reused,
+            "cells_per_batch": (
+                self.cells_evaluated / len(self.batches) if self.batches else 0.0
+            ),
             **(dict(self.pool_stats) if self.pool_stats else {}),
             **({"cache": dict(self.cache_stats)} if self.cache_stats else {}),
         }

@@ -233,7 +233,7 @@ def test_cache_hit_is_equal_and_counted(rng):
     inst = _hetero_instance(rng)
     r1 = solve(inst, policy="dp", context=DEV.replace(cache=cache))
     r2 = solve(inst, policy="dp", context=DEV.replace(cache=cache))
-    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1, "warm_entries": 0}
     assert (r1.cost, r1.detours) == (r2.cost, r2.detours)
 
 

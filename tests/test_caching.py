@@ -1,0 +1,227 @@
+"""CacheBackend protocol: LRU bounds, persistent JSONL journal, key safety.
+
+Acceptance bars:
+
+* the solve-memo key includes every result-affecting execution option —
+  ``numeric_policy`` and ``cand_tile`` must never cross-serve hits
+  (regression: earlier revisions keyed on neither);
+* a bounded LRU *smaller than the working set* on the seeded 240-request
+  constrained-pool trace yields bit-identical schedules to an unbounded
+  cache — eviction can only cost re-solves, never change a result;
+* :class:`~repro.core.JsonlCacheBackend` round-trips its journal across
+  restarts (replay -> memo hits without re-solving), tolerates torn/foreign
+  lines, and ``compact()``/``clear()`` behave;
+* both shipped backends satisfy the runtime-checkable
+  :class:`~repro.core.CacheBackend` protocol.
+"""
+
+import json
+
+from repro.core import (
+    CacheBackend,
+    ExecutionContext,
+    JsonlCacheBackend,
+    SolveCache,
+    solve,
+)
+from repro.serving import DriveCosts, demo_library, poisson_trace, serve_trace
+
+from conftest import random_instance
+
+SEED = 20260731
+COSTS = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+DEV = ExecutionContext(backend="pallas-interpret")
+
+#: summary() keys that measure *work done*, not *what was served* — cache
+#: behavior is allowed to change these (a memo hit does zero DP work; an
+#: evicted entry forces a re-solve), never anything else
+WORK_KEYS = ("cache", "cells_evaluated", "cells_reused", "cells_per_batch")
+
+
+def _scrub_work(summary):
+    for key in WORK_KEYS:
+        summary.pop(key, None)
+    return summary
+
+
+def build_trace(n_requests=240):
+    return poisson_trace(
+        demo_library(SEED), n_requests=n_requests, mean_interarrival=250_000,
+        seed=SEED,
+    )
+
+
+# ---------------------------------------------------------------------------
+# key regression: numeric_policy and cand_tile are part of the identity
+# ---------------------------------------------------------------------------
+def test_cache_key_separates_numeric_policy_and_cand_tile(rng):
+    """A memo populated under one (numeric_policy, cand_tile) must not serve
+    hits to another — the options change the execution (error domain,
+    launch shape), so a cross-hit would misreport provenance."""
+    cache = SolveCache()
+    inst = random_instance(rng, lo=3, hi=8)
+    ctx = DEV.replace(cache=cache)
+    r1 = solve(inst, policy="dp", context=ctx)
+    assert cache.stats()["misses"] == 1 and cache.stats()["entries"] == 1
+    r2 = solve(inst, policy="dp", context=ctx.replace(cand_tile=8))
+    assert cache.stats()["hits"] == 0, "cand_tile variant must not hit"
+    r3 = solve(inst, policy="dp", context=ctx.replace(numeric_policy="f64"))
+    assert cache.stats()["hits"] == 0, "numeric_policy variant must not hit"
+    assert cache.stats() == {
+        "hits": 0, "misses": 3, "entries": 3, "warm_entries": 0,
+    }
+    # all three are exact solves of the same instance -> same answer
+    assert (r1.cost, r1.detours) == (r2.cost, r2.detours) == (r3.cost, r3.detours)
+    # and each variant re-hits itself
+    solve(inst, policy="dp", context=ctx)
+    solve(inst, policy="dp", context=ctx.replace(cand_tile=8))
+    solve(inst, policy="dp", context=ctx.replace(numeric_policy="f64"))
+    assert cache.stats()["hits"] == 3
+
+
+def test_positional_get_put_defaults_match_default_context(rng):
+    """Pre-protocol call sites (3-arg get/put) key as strict/None."""
+    cache = SolveCache()
+    inst = random_instance(rng, lo=2, hi=6)
+    res = solve(inst, policy="dp", context=ExecutionContext(cache=cache))
+    hit = cache.get(inst, "dp", "python")  # legacy positional form
+    assert hit is not None and (hit.cost, hit.detours) == (res.cost, res.detours)
+    assert cache.get(inst, "dp", "python", "f64") is None
+
+
+# ---------------------------------------------------------------------------
+# bounded LRU below the working set: slower, never different
+# ---------------------------------------------------------------------------
+def test_bounded_lru_below_working_set_is_bit_identical():
+    """240-request constrained-pool trace, served twice through each cache:
+    maxsize=4 thrashes (evictions force re-solves on the second pass) yet
+    every schedule and timeline matches the unbounded run both times."""
+    trace = build_trace(240)
+    small = SolveCache(maxsize=4)
+    big = SolveCache(maxsize=1 << 20)
+
+    def run(cache):
+        return _scrub_work(serve_trace(
+            demo_library(SEED, with_cache=False), trace, "accumulate",
+            window=400_000, policy="dp", n_drives=2, drive_costs=COSTS,
+            context=ExecutionContext(cache=cache),
+        ).summary())
+
+    assert run(small) == run(big)  # first pass: cold caches
+    assert small.stats()["entries"] == 4  # pinned at the bound
+    assert big.stats()["entries"] > 4  # the true working set is larger
+    assert run(small) == run(big)  # second pass: hits vs evictions
+    # eviction forced strictly more solver work on the replay, and only that
+    assert small.stats()["misses"] > big.stats()["misses"]
+    assert big.stats()["hits"] > small.stats()["hits"]
+
+
+# ---------------------------------------------------------------------------
+# JSONL journal backend
+# ---------------------------------------------------------------------------
+def test_jsonl_backend_rewarms_across_restart(tmp_path, rng):
+    path = tmp_path / "memo.jsonl"
+    insts = [random_instance(rng, lo=2, hi=8) for _ in range(5)]
+    first = JsonlCacheBackend(path)
+    ctx = ExecutionContext(cache=first)
+    originals = [solve(i, policy="dp", context=ctx) for i in insts]
+    assert first.stats()["misses"] == 5 and first.stats()["loaded"] == 0
+    first.close()
+
+    second = JsonlCacheBackend(path)
+    assert second.loaded == 5 and len(second) == 5
+    replayed = [
+        solve(i, policy="dp", context=ExecutionContext(cache=second))
+        for i in insts
+    ]
+    assert second.stats()["hits"] == 5 and second.stats()["misses"] == 0
+    assert [(r.cost, r.detours) for r in replayed] == [
+        (r.cost, r.detours) for r in originals
+    ]
+    second.close()
+
+
+def test_jsonl_backend_skips_torn_and_foreign_lines(tmp_path, rng):
+    path = tmp_path / "memo.jsonl"
+    inst = random_instance(rng, lo=2, hi=6)
+    backend = JsonlCacheBackend(path)
+    res = solve(inst, policy="dp", context=ExecutionContext(cache=backend))
+    backend.close()
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write("not json at all\n")
+        fh.write(json.dumps({"unrelated": True}) + "\n")
+        fh.write('{"k": ["dp", "python"')  # torn mid-write
+    reopened = JsonlCacheBackend(path)
+    assert reopened.loaded == 1
+    hit = reopened.get(inst, "dp", "python")
+    assert hit is not None and (hit.cost, hit.detours) == (res.cost, res.detours)
+    reopened.close()
+
+
+def test_jsonl_backend_compact_and_clear(tmp_path, rng):
+    path = tmp_path / "memo.jsonl"
+    backend = JsonlCacheBackend(path, maxsize=3)
+    ctx = ExecutionContext(cache=backend)
+    insts = [random_instance(rng, lo=2, hi=6) for _ in range(6)]
+    for i in insts:
+        solve(i, policy="dp", context=ctx)
+    assert len(backend) == 3  # LRU bound holds in memory
+    assert sum(1 for _ in open(path)) == 6  # journal is append-only
+    backend.compact()
+    assert sum(1 for _ in open(path)) == 3  # rewritten to live entries
+    # the three most-recent instances survive compaction as hits
+    for i in insts[-3:]:
+        assert backend.get(i, "dp", "python") is not None
+    backend.clear()
+    assert len(backend) == 0 and path.read_text() == ""
+    backend.close()
+
+
+def test_jsonl_backend_serves_trace_identically(tmp_path):
+    """The persistent backend behind a serving run changes nothing but the
+    journal on disk; a restarted run replays to pure memo hits."""
+    trace = build_trace(120)
+    path = tmp_path / "serve-memo.jsonl"
+
+    def run(cache):
+        return _scrub_work(serve_trace(
+            demo_library(SEED, with_cache=False), trace, "accumulate",
+            window=400_000, policy="dp",
+            context=ExecutionContext(cache=cache),
+        ).summary())
+
+    journal = JsonlCacheBackend(path)
+    with_journal = run(journal)
+    journal.close()
+    plain = run(SolveCache())
+    assert with_journal == plain
+
+    rewarmed = JsonlCacheBackend(path)
+    assert rewarmed.loaded > 0
+    assert run(rewarmed) == plain
+    assert rewarmed.stats()["misses"] == 0  # every solve was a replayed hit
+    rewarmed.close()
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance
+# ---------------------------------------------------------------------------
+def test_shipped_backends_satisfy_protocol(tmp_path):
+    assert isinstance(SolveCache(), CacheBackend)
+    backend = JsonlCacheBackend(tmp_path / "p.jsonl")
+    assert isinstance(backend, CacheBackend)
+    backend.close()
+
+
+def test_warm_states_ride_the_backend():
+    cache = SolveCache(warm_maxsize=2)
+    cache.put_warm(("warm", "t1", "dp"), object())
+    cache.put_warm(("warm", "t2", "dp"), object())
+    s2 = cache.get_warm(("warm", "t2", "dp"))
+    assert s2 is not None
+    cache.put_warm(("warm", "t3", "dp"), object())  # evicts the LRU entry
+    assert cache.get_warm(("warm", "t1", "dp")) is None
+    assert cache.stats()["warm_entries"] == 2
+    cache.clear()
+    assert cache.get_warm(("warm", "t2", "dp")) is None
+    assert cache.stats()["warm_entries"] == 0

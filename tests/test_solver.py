@@ -98,13 +98,13 @@ def test_unsupported_backend_batch_fails_before_any_solve(rng):
     cache = SolveCache()
     with pytest.raises(UnsupportedBackendError):
         solve_batch(insts, policy="gs", context=DEV.replace(cache=cache))
-    assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0}
+    assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0, "warm_entries": 0}
     with pytest.raises(UnsupportedBackendError):
         solve(
             insts[0], policy="nfgs",
             context=ExecutionContext(backend="pallas", cache=cache),
         )
-    assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0}
+    assert cache.stats() == {"hits": 0, "misses": 0, "entries": 0, "warm_entries": 0}
 
 
 def test_register_custom_solver(rng):

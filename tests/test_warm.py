@@ -1,0 +1,257 @@
+"""Warm-start incremental re-solve: bit-identity and work-counter bars.
+
+The acceptance bars for warm-started solving (all exact, no tolerances):
+
+* ``dp_schedule_warm`` with *any* warm state — aligned, misaligned, stale,
+  or ``None`` — returns ``(cost, detours)`` bit-identical to the cold
+  ``dp_schedule``, across chained request-multiset perturbations;
+* the device path (``pallas-interpret``) reuses the dense table/argmin
+  planes captured by a cold device solve and stays bit-identical to the
+  exact python DP on perturbed re-solves;
+* warm states cut work: over perturbation chains ``cells_reused`` is
+  strictly positive and warm ``cells_evaluated`` stays below cold;
+* the serving loop with ``warm_start=True`` (the default) emits the same
+  schedules, timelines, and sojourns as ``warm_start=False`` — only the
+  work counters may differ.
+"""
+
+import hashlib
+
+import numpy as np
+
+from repro.core import (
+    ExecutionContext,
+    SolveCache,
+    dp_schedule,
+    dp_schedule_warm,
+    make_instance,
+    solve,
+    solve_batch,
+    solve_batch_warm,
+    solve_warm,
+)
+from repro.serving.queue import serve_trace
+from repro.serving.sim import demo_library, poisson_trace
+
+from conftest import random_instance
+
+SEED = 20260731
+DEV = ExecutionContext(backend="pallas-interpret")
+
+
+# ---------------------------------------------------------------------------
+# instance perturbations: the shapes serving admission actually produces
+# ---------------------------------------------------------------------------
+def perturb(inst, rng, ops=None):
+    """A valid sibling instance: one request added, completed, or aborted.
+
+    ``ops`` restricts the move set (``"bump"`` = one more request on an
+    already-requested file, ``"drop"`` = a requested file leaves the set,
+    ``"insert"`` = a brand-new file is requested in a free gap).
+    """
+    left = [int(v) for v in inst.left]
+    right = [int(v) for v in inst.right]
+    mult = [int(v) for v in inst.mult]
+    R = len(left)
+    moves = list(ops) if ops is not None else []
+    if ops is None:
+        moves = ["bump"]
+        if R > 1:
+            moves.append("drop")
+    gaps = []
+    prev = 0
+    for i in range(R):
+        if left[i] - prev >= 2:
+            gaps.append((prev, left[i]))
+        prev = right[i]
+    if inst.m - prev >= 2:
+        gaps.append((prev, inst.m))
+    if gaps and ops is None:
+        moves.append("insert")
+    op = moves[int(rng.integers(0, len(moves)))]
+    if op == "bump":
+        mult[int(rng.integers(0, R))] += 1
+    elif op == "drop":
+        i = int(rng.integers(0, R))
+        del left[i], right[i], mult[i]
+    else:  # insert into a free gap
+        lo, hi = gaps[int(rng.integers(0, len(gaps)))]
+        a = lo + int(rng.integers(0, hi - lo - 1))
+        b = a + 1 + int(rng.integers(0, hi - a - 1))
+        i = 0
+        while i < len(left) and left[i] < a:
+            i += 1
+        left.insert(i, a)
+        right.insert(i, b)
+        mult.insert(i, 1 + int(rng.integers(0, 3)))
+    sizes = [r - l for l, r in zip(left, right)]
+    return make_instance(left, sizes, mult, m=inst.m, u_turn=inst.u_turn)
+
+
+# ---------------------------------------------------------------------------
+# python path: differential vs cold over chained perturbations
+# ---------------------------------------------------------------------------
+def test_warm_chain_bit_identical_and_reuses(rng):
+    """Warm re-solve == cold solve on every chain step; reuse is real."""
+    total_reused = total_cold = total_warm = 0
+    for _ in range(25):
+        inst = random_instance(rng, lo=3, hi=12)
+        warm = None
+        for step in range(4):
+            cold_cost, cold_det = dp_schedule(inst)
+            cost, det, warm, stats = dp_schedule_warm(inst, warm=warm)
+            assert (cost, det) == (cold_cost, cold_det)
+            if step == 0:
+                assert stats.cells_reused == 0  # nothing to reuse yet
+            else:
+                _, _, _, cold_stats = dp_schedule_warm(inst)
+                total_cold += cold_stats.cells_evaluated
+                total_warm += stats.cells_evaluated
+                total_reused += stats.cells_reused
+            inst = perturb(inst, rng)
+    assert total_reused > 0
+    assert total_warm < total_cold  # strictly less DP work over the chains
+
+
+def test_warm_against_unrelated_instance_is_safe(rng):
+    """A warm state from a different cartridge must not change results."""
+    for _ in range(20):
+        a = random_instance(rng, lo=2, hi=10)
+        b = random_instance(rng, lo=2, hi=10)
+        _, _, warm_a, _ = dp_schedule_warm(a)
+        cost, det, _, _ = dp_schedule_warm(b, warm=warm_a)
+        assert (cost, det) == dp_schedule(b)
+
+
+def test_warm_mult_bump_reuses_cells(rng):
+    """The single-request-arrival shape must reuse on instances with R>=4."""
+    reused = 0
+    for _ in range(10):
+        inst = random_instance(rng, lo=6, hi=14)
+        _, _, warm, _ = dp_schedule_warm(inst)
+        bumped = perturb(inst, rng, ops=["bump"])
+        cost, det, _, stats = dp_schedule_warm(bumped, warm=warm)
+        assert (cost, det) == dp_schedule(bumped)
+        reused += stats.cells_reused
+    assert reused > 0
+
+
+def test_solve_warm_matches_solve_and_counts(rng):
+    """Module-level solve_warm: result identity + cache-hit short circuit."""
+    cache = SolveCache()
+    ctx = ExecutionContext(cache=cache)
+    inst = random_instance(rng, lo=4, hi=10)
+    plain = solve(inst, policy="dp")
+    r1, w1, s1 = solve_warm(inst, policy="dp", context=ctx)
+    assert (r1.cost, r1.detours) == (plain.cost, plain.detours)
+    assert s1.mode == "cold" and s1.cells_evaluated > 0 and w1 is not None
+    # identical multiset -> memo hit: zero DP work, incoming state kept
+    r2, w2, s2 = solve_warm(inst, policy="dp", context=ctx, warm=w1)
+    assert (r2.cost, r2.detours) == (plain.cost, plain.detours)
+    assert s2.mode == "cache" and s2.cells_evaluated == 0
+    assert w2 is w1
+
+
+def test_solve_warm_unsupported_policy_falls_back(rng):
+    """Policies without warm support still solve, flagged honestly."""
+    inst = random_instance(rng, lo=3, hi=8)
+    for policy in ("simpledp", "gs"):
+        plain = solve(inst, policy=policy)
+        res, warm, stats = solve_warm(inst, policy=policy)
+        assert (res.cost, res.detours) == (plain.cost, plain.detours)
+        assert stats.mode == "unsupported" and warm is None
+
+
+def test_solve_batch_warm_matches_solve_batch(rng):
+    insts = [random_instance(rng, lo=3, hi=10) for _ in range(6)]
+    cold = solve_batch(insts, policy="dp")
+    results, warms, stats = solve_batch_warm(insts, policy="dp")
+    assert [(r.cost, r.detours) for r in results] == [
+        (r.cost, r.detours) for r in cold
+    ]
+    assert all(w is not None for w in warms)
+    # perturbed second round, threading the states back in
+    rng2 = np.random.default_rng(7)
+    bumped = [perturb(i, rng2) for i in insts]
+    cold2 = solve_batch(bumped, policy="dp")
+    results2, _, stats2 = solve_batch_warm(bumped, policy="dp", warms=warms)
+    assert [(r.cost, r.detours) for r in results2] == [
+        (r.cost, r.detours) for r in cold2
+    ]
+    assert sum(s.cells_reused for s in stats2) > 0
+
+
+# ---------------------------------------------------------------------------
+# device path: dense-plane reuse from a cold device solve
+# ---------------------------------------------------------------------------
+def test_device_warm_bit_identical_to_python(rng):
+    """Cold device solve -> captured dense planes -> warm perturbed re-solve
+    must equal the exact python DP bit for bit, and reuse cells."""
+    reused = 0
+    for _ in range(6):
+        inst = random_instance(rng, lo=4, hi=9)
+        res, warm, stats = solve_warm(inst, policy="dp", context=DEV)
+        oracle = solve(inst, policy="dp")
+        assert (res.cost, res.detours) == (oracle.cost, oracle.detours)
+        assert stats.mode == "cold" and stats.cells_evaluated > 0
+        for _ in range(2):
+            inst = perturb(inst, rng, ops=["bump", "drop"])
+            oracle = solve(inst, policy="dp")
+            res, warm, stats = solve_warm(
+                inst, policy="dp", context=DEV, warm=warm
+            )
+            assert (res.cost, res.detours) == (oracle.cost, oracle.detours)
+            reused += stats.cells_reused
+    assert reused > 0
+
+
+def test_device_batch_warm_mixed_alignment(rng):
+    """A batch mixing warm-aligned and fresh instances stays exact."""
+    insts = [random_instance(rng, lo=4, hi=8) for _ in range(4)]
+    _, warms, _ = solve_batch_warm(insts, policy="dp", context=DEV)
+    rng2 = np.random.default_rng(11)
+    nxt = [perturb(i, rng2, ops=["bump"]) for i in insts[:2]] + [
+        random_instance(rng, lo=4, hi=8) for _ in range(2)
+    ]
+    cold = solve_batch(nxt, policy="dp")
+    results, _, stats = solve_batch_warm(
+        nxt, policy="dp", context=DEV, warms=warms[:2] + [None, None]
+    )
+    assert [(r.cost, r.detours) for r in results] == [
+        (r.cost, r.detours) for r in cold
+    ]
+    assert all(s.cells_evaluated > 0 or s.cells_reused > 0 for s in stats)
+
+
+# ---------------------------------------------------------------------------
+# serving loop: warm-start on (default) vs off — schedules bit-identical
+# ---------------------------------------------------------------------------
+def _served_sha(report):
+    served = tuple(
+        (r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served
+    )
+    return hashlib.sha256(repr(served).encode()).hexdigest()[:16]
+
+
+WORK_KEYS = ("warm_start", "cells_evaluated", "cells_reused", "cells_per_batch")
+
+
+def test_serving_warm_vs_cold_bit_identical():
+    """Every admission that re-solves: warm on/off differ only in work."""
+    lib = demo_library(SEED)
+    trace = poisson_trace(lib, n_requests=220, mean_interarrival=250_000,
+                          seed=SEED)
+    for admission in ("accumulate", "preempt", "batched", "slack-accumulate"):
+        w = serve_trace(demo_library(SEED), trace, admission, window=300_000,
+                        policy="dp", warm_start=True)
+        c = serve_trace(demo_library(SEED), trace, admission, window=300_000,
+                        policy="dp", warm_start=False)
+        assert _served_sha(w) == _served_sha(c), admission
+        ws, cs = w.summary(), c.summary()
+        for key in WORK_KEYS + ("cache",):
+            ws.pop(key, None)
+            cs.pop(key, None)
+        assert ws == cs, admission
+        assert w.cells_reused > 0, admission
+        assert w.cells_evaluated < c.cells_evaluated, admission
+        assert c.cells_reused == 0, admission  # cold runs must not reuse
