@@ -586,6 +586,14 @@ def bench_online_serving(full: bool = False):
     misses than ``fifo-global`` at every tightness, asserted on exact
     integer virtual time.  The mount-scheduler sweep then runs the
     constrained pool under each registered eviction policy.
+
+    The availability sweep prices the fault layer: recorded drive hard-
+    failures (0/1/2 of a 3-drive pool, failure instants derived from the
+    no-fault run so the first failure is guaranteed to abort live work)
+    crossed with the retry policy (``FAIL_STOP`` vs retry+failover),
+    reporting completion rate and p99 sojourn per cell; retry+failover must
+    complete strictly more requests than fail-stop at every nonzero failure
+    count, asserted on exact request counts.
     """
     from repro.data.traces import DEFAULT_QOS_CLASSES, qos_poisson_trace, to_requests
     from repro.serving.drives import DriveCosts
@@ -843,8 +851,94 @@ def bench_online_serving(full: bool = False):
                 f"mounts={s['mounts']};mount_time={s['mount_time']}",
             )
 
+    # -- availability sweep: recorded drive failures x retry policy ----------
+    from repro.serving.drives import FAIL_STOP, RetryPolicy
+    from repro.serving.faults import DriveFailure, FaultPlan
+
+    avail_drives = 3
+    avail_rate = 100_000
+    trace = poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=avail_rate,
+        seed=seed,
+    )
+    lib = build_library()
+    base = serve_trace(
+        lib, trace, "per-drive-accumulate", window=window, policy="dp",
+        n_drives=avail_drives, drive_costs=costs, context=lib.context,
+    )
+    # failure instants come from the no-fault run: one virtual tick after a
+    # mid-trace batch starts service every request aboard is still pending,
+    # and the pre-failure prefix is shared by construction, so the first
+    # failure is guaranteed to abort live work in both policy arms
+    mid = sorted(
+        (b for b in base.batches if b.n_requests >= 2),
+        key=lambda b: b.dispatched,
+    )
+    mid = mid[len(mid) // 2:]
+    first = mid[0]
+    second = next(
+        b for b in mid + list(base.batches) if b.drive != first.drive
+    )
+    fail_points = (
+        DriveFailure(at=first.dispatched + first.mount_delay + 1,
+                     drive=first.drive),
+        DriveFailure(at=second.dispatched + second.mount_delay + 1,
+                     drive=second.drive),
+    )
+    retry_arms = {
+        "fail-stop": FAIL_STOP,
+        "retry-failover": RetryPolicy(on_exhausted="drop"),
+    }
+    avail_rows = []
+    n_completed: dict[tuple[str, int], int] = {}
+    for n_failures in (0, 1, 2):
+        plan = FaultPlan(drive_failures=fail_points[:n_failures])
+        for arm, retry in retry_arms.items():
+            lib = build_library()
+            t0 = time.perf_counter()
+            report = serve_trace(
+                lib, trace, "per-drive-accumulate", window=window,
+                policy="dp", n_drives=avail_drives, drive_costs=costs,
+                context=lib.context, faults=plan or None, retry=retry,
+            )
+            dt = time.perf_counter() - t0
+            s = report.summary()
+            assert report.n_served + report.n_failed == n_requests, (
+                "requests must be conserved: served or typed-failed"
+            )
+            n_completed[(arm, n_failures)] = report.n_served
+            avail_rows.append({
+                "arm": arm, "n_failures": n_failures, "wall_s": dt, **s,
+            })
+            _emit(
+                f"online/avail/{arm}/failures_{n_failures}",
+                dt * 1e6,
+                f"completed={report.n_served}/{n_requests};"
+                f"rate={report.completion_rate:.3f};"
+                f"p99={s['p99_sojourn']:.4g};"
+                f"requeued={s.get('faults', {}).get('requeued', 0)}",
+            )
+    assert (
+        n_completed[("fail-stop", 0)]
+        == n_completed[("retry-failover", 0)]
+        == n_requests
+    ), "with no failures both arms must complete everything"
+    for n_failures in (1, 2):
+        assert (
+            n_completed[("retry-failover", n_failures)]
+            > n_completed[("fail-stop", n_failures)]
+        ), (
+            f"retry+failover must complete strictly more requests than "
+            f"fail-stop at {n_failures} drive failure(s): "
+            f"{n_completed[('retry-failover', n_failures)]} vs "
+            f"{n_completed[('fail-stop', n_failures)]}"
+        )
+
     (RESULTS / "online_serving.json").write_text(
-        json.dumps(rows + warm_rows + pool_rows + qos_rows + sched_rows, indent=1)
+        json.dumps(
+            rows + warm_rows + pool_rows + qos_rows + sched_rows + avail_rows,
+            indent=1,
+        )
     )
     RECORD["online_serving"] = {
         "seed": seed,
@@ -876,8 +970,20 @@ def bench_online_serving(full: bool = False):
             "tightness": 8_000_000,
             "rows": sched_rows,
         },
+        "availability_sweep": {
+            "costs": dataclasses.asdict(costs),
+            "n_drives": avail_drives,
+            "rate": avail_rate,
+            "fail_points": [
+                {"at": f.at, "drive": f.drive} for f in fail_points
+            ],
+            "completed": {
+                f"{arm}/{n}": v for (arm, n), v in sorted(n_completed.items())
+            },
+            "rows": avail_rows,
+        },
     }
-    return rows + pool_rows + qos_rows + sched_rows
+    return rows + pool_rows + qos_rows + sched_rows + avail_rows
 
 
 def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:

@@ -162,18 +162,30 @@ class JsonlCacheBackend(SolveCache):
         self._fh.flush()
 
     def compact(self) -> None:
-        """Rewrite the journal to the live LRU entries (oldest first)."""
+        """Rewrite the journal to the live LRU entries (oldest first).
+
+        Crash-safe: the replacement journal is staged in a temp file that is
+        flushed and fsynced *before* the atomic ``os.replace``, so a process
+        killed at any point leaves either the old journal or the new one on
+        disk — never a torn mix.  The append handle is reopened in a
+        ``finally`` block, so a failure mid-stage leaves the backend usable
+        (and the old journal intact).
+        """
         self._fh.close()
         tmp = self.path + ".tmp"
-        with open(tmp, "w", encoding="utf-8") as fh:
-            for key, (cost, det) in self._store.items():
-                fh.write(json.dumps({
-                    "k": self._encode_key(key),
-                    "cost": cost,
-                    "det": [list(d) for d in det],
-                }) + "\n")
-        os.replace(tmp, self.path)
-        self._fh = open(self.path, "a", encoding="utf-8")
+        try:
+            with open(tmp, "w", encoding="utf-8") as fh:
+                for key, (cost, det) in self._store.items():
+                    fh.write(json.dumps({
+                        "k": self._encode_key(key),
+                        "cost": cost,
+                        "det": [list(d) for d in det],
+                    }) + "\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, self.path)
+        finally:
+            self._fh = open(self.path, "a", encoding="utf-8")
 
     def clear(self) -> None:
         super().clear()

@@ -85,6 +85,30 @@ The legacy ``ALGORITHMS`` mapping is kept as a read-only view over the
 registry (name → ``inst -> detours`` callable) for downstream code that only
 wants detour lists.
 
+Degradation chain (fault tolerance)
+-----------------------------------
+Device backends can fault transiently (a wedged accelerator runtime, a
+driver hiccup — modelled by :class:`TransientSolverError`).  Because every
+backend is bit-identical where it computes at all, a faulting backend can be
+*degraded* through :data:`DEGRADATION_CHAIN` — ``pallas →
+pallas-interpret → python`` — without changing a single schedule:
+:func:`solve_warm_degraded` / :func:`solve_batch_warm_degraded` retry each
+tier up to ``attempts_per_backend`` times and fall through to the next on a
+:class:`TransientSolverError` or :class:`UnsupportedBackendError`, dropping
+any incoming warm state on the first fallback (warm states are not
+guaranteed portable across tiers) and returning none themselves after one —
+invalidation is the safe direction for an advisory accelerator.  The
+``python`` tier is the last resort (always available, arbitrary
+magnitudes); if even it faults, the typed :class:`SolverUnavailableError`
+carries the per-tier failure history.  The memo cache keys on the backend
+that actually computed, so a degraded result can never be served to a
+healthy-backend call later.
+
+Per-instance failures in a batch: :func:`solve_batch` is all-or-nothing by
+default, but ``partial=True`` solves the good instances and returns a typed
+:class:`FailedSolve` (policy, backend, index, error) in place of each bad
+one — nothing failing ever touches the cache.
+
 Warm-started solving
 --------------------
 :func:`solve_warm`/:func:`solve_batch_warm` mirror :func:`solve`/
@@ -125,6 +149,12 @@ __all__ = [
     "ExecutionContext",
     "DEFAULT_CONTEXT",
     "UnsupportedBackendError",
+    "TransientSolverError",
+    "SolverUnavailableError",
+    "DEGRADATION_CHAIN",
+    "degraded_backends",
+    "FallbackRecord",
+    "FailedSolve",
     "SolveResult",
     "SolveCache",
     "Solver",
@@ -138,6 +168,8 @@ __all__ = [
     "solve_batch",
     "solve_warm",
     "solve_batch_warm",
+    "solve_warm_degraded",
+    "solve_batch_warm_degraded",
     "ALGORITHMS",
 ]
 
@@ -161,6 +193,87 @@ class UnsupportedBackendError(ValueError):
             f"policy {policy!r} has no {backend!r} backend "
             f"(supported: {supported})"
         )
+
+
+class TransientSolverError(RuntimeError):
+    """A backend faulted transiently (device wedge, runtime hiccup).
+
+    Retryable by construction: the same solve on the same backend may
+    succeed on the next attempt, and any other tier of
+    :data:`DEGRADATION_CHAIN` computes the bit-identical result.  Raised by
+    fault-injection hooks and catchable by :func:`solve_warm_degraded`.
+    """
+
+    def __init__(self, backend: str, message: str | None = None):
+        self.backend = backend
+        super().__init__(
+            message or f"transient solver fault on backend {backend!r}"
+        )
+
+
+class SolverUnavailableError(RuntimeError):
+    """Every tier of the degradation chain failed for this solve."""
+
+    def __init__(self, policy: str, backend: str, failed: tuple[str, ...]):
+        self.policy = policy
+        self.backend = backend
+        self.failed = failed
+        super().__init__(
+            f"policy {policy!r} could not be solved on any backend tier "
+            f"(requested {backend!r}; attempts failed on: {list(failed)})"
+        )
+
+
+#: backend tiers in degradation order: compiled device kernel, interpreted
+#: kernel on CPU, pure-Python exact DP (the always-available last resort).
+DEGRADATION_CHAIN = ("pallas", "pallas-interpret", "python")
+
+
+def degraded_backends(backend: str) -> tuple[str, ...]:
+    """The degradation-chain suffix starting at ``backend``."""
+    if backend not in DEGRADATION_CHAIN:
+        raise ValueError(
+            f"unknown backend {backend!r}; chain is {DEGRADATION_CHAIN}"
+        )
+    return DEGRADATION_CHAIN[DEGRADATION_CHAIN.index(backend):]
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackRecord:
+    """How a degraded solve landed: requested tier, used tier, fault trail.
+
+    ``failed`` lists the backend of every faulted attempt in order (a tier
+    retried twice before falling through appears twice); ``used ==
+    requested`` with a non-empty trail means retries on the requested tier
+    eventually succeeded — no fallback happened.
+    """
+
+    requested: str
+    used: str
+    failed: tuple[str, ...] = ()
+
+    @property
+    def n_faults(self) -> int:
+        return len(self.failed)
+
+    @property
+    def fell_back(self) -> bool:
+        return self.used != self.requested
+
+
+@dataclasses.dataclass(frozen=True)
+class FailedSolve:
+    """Typed per-instance failure returned by ``solve_batch(partial=True)``.
+
+    Sits in the result list at the failing instance's position; ``index``
+    is that position in the input batch, ``error`` the exception the solve
+    raised.  Never cached.
+    """
+
+    policy: str
+    backend: str
+    index: int
+    error: Exception
 
 
 @dataclasses.dataclass(frozen=True)
@@ -669,7 +782,8 @@ def solve_batch(
     cache: SolveCache | None = None,
     *,
     context: ExecutionContext | None = None,
-) -> list[SolveResult]:
+    partial: bool = False,
+) -> list["SolveResult | FailedSolve"]:
     """Solve a batch; device backends pack it into size-bucketed launches.
 
     With a cache on the context, hits are served from the memo and only the
@@ -679,24 +793,47 @@ def solve_batch(
     An unsupported policy/backend combination raises
     :class:`UnsupportedBackendError` before any instance is solved or any
     cache entry is touched — a batch is all-or-nothing, never mid-flight.
-    ``backend=``/``cache=`` are deprecation shims, as in :func:`solve`.
+    One *bad instance* (e.g. an int32-guard overflow under the strict
+    numeric policy) is also all-or-nothing by default, but ``partial=True``
+    relaxes that: the good instances are solved (and cached) normally while
+    each failing one yields a typed :class:`FailedSolve` at its position —
+    failures never pollute the cache, so a later retry (on another backend
+    or numeric policy) starts clean.  ``backend=``/``cache=`` are
+    deprecation shims, as in :func:`solve`.
     """
     ctx = resolve_context(context, backend=backend, cache=cache)
     solver = get_solver(policy)
     _check_backend(solver, ctx.backend)
     memo = ctx.cache
-    if memo is None:
+    if memo is None and not partial:
         return solver.solve_batch(instances, ctx)
-    results: list[SolveResult | None] = [
+    results: list[SolveResult | FailedSolve | None] = [
         memo.get(inst, policy, ctx.backend, ctx.numeric_policy, ctx.cand_tile)
+        if memo is not None
+        else None
         for inst in instances
     ]
     miss = [i for i, r in enumerate(results) if r is None]
     if miss:
-        solved = solver.solve_batch([instances[i] for i in miss], ctx)
+        solved: list[SolveResult | FailedSolve]
+        if not partial:
+            solved = solver.solve_batch([instances[i] for i in miss], ctx)
+        else:
+            try:
+                solved = solver.solve_batch([instances[i] for i in miss], ctx)
+            except Exception:
+                # the fast whole-batch path failed somewhere mid-bucket:
+                # fall back to per-instance solves so the good ones survive
+                solved = []
+                for i in miss:
+                    try:
+                        solved.append(solver.solve(instances[i], ctx))
+                    except Exception as err:  # noqa: BLE001 - typed re-wrap
+                        solved.append(FailedSolve(policy, ctx.backend, i, err))
         for i, res in zip(miss, solved):
-            memo.put(instances[i], policy, ctx.backend, res,
-                     ctx.numeric_policy, ctx.cand_tile)
+            if isinstance(res, SolveResult) and memo is not None:
+                memo.put(instances[i], policy, ctx.backend, res,
+                         ctx.numeric_policy, ctx.cand_tile)
             results[i] = res
     return results  # type: ignore[return-value]
 
@@ -782,6 +919,102 @@ def solve_batch_warm(
                          ctx.numeric_policy, ctx.cand_tile)
             results[i], new_warms[i], stats[i] = res, w, st
     return results, new_warms, stats  # type: ignore[return-value]
+
+
+def solve_warm_degraded(
+    inst: Instance,
+    policy: str = "dp",
+    *,
+    context: ExecutionContext | None = None,
+    warm: WarmState | None = None,
+    fault_hook: Callable[[str], None] | None = None,
+    attempts_per_backend: int = 1,
+) -> tuple[SolveResult, WarmState | None, WarmStats, FallbackRecord]:
+    """:func:`solve_warm` through the backend degradation chain.
+
+    Walks :func:`degraded_backends` from the context's backend, retrying
+    each tier up to ``attempts_per_backend`` times on a
+    :class:`TransientSolverError` before falling through (an
+    :class:`UnsupportedBackendError` falls through immediately — retrying
+    cannot help).  ``fault_hook(backend)`` runs before every attempt; fault
+    injectors raise :class:`TransientSolverError` from it.  Results are
+    bit-identical across tiers, so only the :class:`FallbackRecord` tells a
+    degraded solve from a healthy one.  After any fault the incoming warm
+    state is dropped and no new one is returned (``new_warm is None``):
+    warm states are advisory accelerators and invalidation is the safe
+    direction across tiers.  Raises :class:`SolverUnavailableError` when
+    every tier (including ``python``) failed.
+    """
+    ctx = context if context is not None else DEFAULT_CONTEXT
+    failed: list[str] = []
+    for b in degraded_backends(ctx.backend):
+        bctx = ctx if b == ctx.backend else ctx.replace(backend=b)
+        for _ in range(max(1, attempts_per_backend)):
+            try:
+                if fault_hook is not None:
+                    fault_hook(b)
+                res, new_warm, stats = solve_warm(
+                    inst, policy, context=bctx,
+                    warm=warm if not failed else None,
+                )
+            except UnsupportedBackendError:
+                failed.append(b)
+                break
+            except TransientSolverError:
+                failed.append(b)
+                continue
+            if failed:
+                new_warm = None
+            return res, new_warm, stats, FallbackRecord(
+                requested=ctx.backend, used=b, failed=tuple(failed)
+            )
+    raise SolverUnavailableError(policy, ctx.backend, tuple(failed))
+
+
+def solve_batch_warm_degraded(
+    instances: list[Instance],
+    policy: str = "dp",
+    *,
+    context: ExecutionContext | None = None,
+    warms: list[WarmState | None] | None = None,
+    fault_hook: Callable[[str], None] | None = None,
+    attempts_per_backend: int = 1,
+) -> tuple[
+    list[SolveResult], list[WarmState | None], list[WarmStats], FallbackRecord
+]:
+    """:func:`solve_batch_warm` through the degradation chain.
+
+    One batch is one launch and therefore one fault domain: a transient
+    fault retries/degrades the *whole* batch (per-instance bad-input
+    errors are :func:`solve_batch`'s ``partial=True`` concern, not a
+    backend-health one).  Semantics otherwise match
+    :func:`solve_warm_degraded`, including warm-state invalidation after
+    any fault.
+    """
+    ctx = context if context is not None else DEFAULT_CONTEXT
+    failed: list[str] = []
+    for b in degraded_backends(ctx.backend):
+        bctx = ctx if b == ctx.backend else ctx.replace(backend=b)
+        for _ in range(max(1, attempts_per_backend)):
+            try:
+                if fault_hook is not None:
+                    fault_hook(b)
+                results, new_warms, stats = solve_batch_warm(
+                    instances, policy, context=bctx,
+                    warms=warms if not failed else None,
+                )
+            except UnsupportedBackendError:
+                failed.append(b)
+                break
+            except TransientSolverError:
+                failed.append(b)
+                continue
+            if failed:
+                new_warms = [None] * len(instances)
+            return results, new_warms, stats, FallbackRecord(
+                requested=ctx.backend, used=b, failed=tuple(failed)
+            )
+    raise SolverUnavailableError(policy, ctx.backend, tuple(failed))
 
 
 # the paper's nine policies

@@ -61,6 +61,15 @@ swaps the in-process solve memo for a persistent
 same path replays the journal into memo hits, the restart story for a
 serving fleet.
 
+**Fault injection & crash recovery** — ``--tape-fault-profile light|heavy``
+injects a seeded :class:`~repro.serving.faults.FaultPlan` (drive hard-
+failures, transient mount faults; ``heavy`` adds media read errors and
+solver faults) with a ``--tape-retries``-deep retry/backoff budget per
+fault site; the table gains completed/failed/requeued columns.
+``--tape-journal PATH`` writes a write-ahead event journal; pointed at a
+(possibly torn) journal from a crashed run it recovers bit-identically and
+completes the log (single-admission runs only).
+
 Every emitted schedule is validated by the **simulator oracle**
 (:mod:`repro.serving.sim` via :func:`repro.core.verify.verify_schedule`): the
 discrete-event replay independently recomputes the schedule's cost from the
@@ -75,6 +84,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -157,7 +167,8 @@ def _serve_tape_queue(args) -> int:
         to_requests,
         write_trace,
     )
-    from ..serving.drives import DriveCosts
+    from ..serving.drives import DriveCosts, RetryPolicy
+    from ..serving.faults import recover_server, seeded_fault_plan
     from ..serving.queue import ADMISSIONS, WINDOWED_ADMISSIONS, serve_trace
     from ..serving.sim import demo_library, poisson_trace
 
@@ -200,12 +211,41 @@ def _serve_tape_queue(args) -> int:
     admissions = (
         list(ADMISSIONS) if args.tape_admission == "all" else [args.tape_admission]
     )
+    if args.tape_journal and len(admissions) != 1:
+        print("--tape-journal records exactly one run; pick a single "
+              "--tape-admission")
+        return 2
     costs = DriveCosts(
         mount=args.tape_mount_cost,
         unmount=args.tape_unmount_cost,
         load_seek=args.tape_load_seek,
     )
     n_drives = args.tape_drives  # None = one per cartridge (the PR-3 model)
+    faults = None
+    retry = None
+    if args.tape_fault_profile != "off":
+        pool_size = n_drives if n_drives else len(build_library().tapes)
+        heavy = args.tape_fault_profile == "heavy"
+        faults = seeded_fault_plan(
+            build_library(), trace, seed=args.tape_seed, n_drives=pool_size,
+            drive_failures=2 if heavy else 1,
+            mount_faults=1,
+            media_faults=1 if heavy else 0,
+            solver_faults=2 if heavy else 0,
+            backend=args.tape_backend,
+        )
+        # drop (typed FailedRequest rows) rather than raise: the table below
+        # reports completion per admission instead of dying on the first run
+        retry = RetryPolicy(max_attempts=args.tape_retries, on_exhausted="drop")
+        print(
+            f"fault profile {args.tape_fault_profile}: "
+            f"{len(faults.drive_failures)} drive failure(s), "
+            f"{len(faults.mount_faults)} mount fault(s), "
+            f"{len(faults.media_faults)} media fault(s), "
+            f"{len(faults.solver_faults)} solver fault(s); "
+            f"{args.tape_retries} retr{'y' if args.tape_retries == 1 else 'ies'} "
+            f"per fault site"
+        )
     journal = None
     if args.tape_cache_file:
         from ..core.cache import JsonlCacheBackend
@@ -224,19 +264,16 @@ def _serve_tape_queue(args) -> int:
         f"{'off' if args.no_tape_warm else 'on'}"
     )
     deadline_cols = ",missed,miss_rate" if qos else ""
+    fault_cols = ",completed,failed,requeued" if faults is not None else ""
     print("admission,window,mean_sojourn,p50_sojourn,p95_sojourn,batches,"
-          f"preempts,mounts,cache_hits,cells,reused{deadline_cols}")
+          f"preempts,mounts,cache_hits,cells,reused{deadline_cols}{fault_cols}")
     best_miss_rate = None
     for admission in admissions:
         lib = build_library()
         ctx = lib.context.replace(backend=args.tape_backend)
         if journal is not None:
             ctx = ctx.replace(cache=journal)
-        t0 = time.time()
-        report = serve_trace(
-            lib,
-            trace,
-            admission,
+        common = dict(
             window=args.tape_window if admission in WINDOWED_ADMISSIONS else 0,
             policy=args.tape_policy,
             n_drives=n_drives,
@@ -245,7 +282,20 @@ def _serve_tape_queue(args) -> int:
             mount_scheduler=args.tape_scheduler,
             context=ctx,
             warm_start=not args.no_tape_warm,
+            faults=faults,
+            retry=retry,
         )
+        t0 = time.time()
+        if args.tape_journal and os.path.exists(args.tape_journal) \
+                and os.path.getsize(args.tape_journal) > 0:
+            report = recover_server(
+                lib, trace, args.tape_journal, admission=admission, **common
+            )
+            print(f"recovered from journal {args.tape_journal}")
+        else:
+            report = serve_trace(
+                lib, trace, admission, journal=args.tape_journal, **common
+            )
         dt = time.time() - t0
         s = report.summary()  # oracle runs per dispatch: a failure raised above
         extra = ""
@@ -255,6 +305,11 @@ def _serve_tape_queue(args) -> int:
                 s["miss_rate"]
                 if best_miss_rate is None
                 else min(best_miss_rate, s["miss_rate"])
+            )
+        if faults is not None:
+            extra += (
+                f",{report.n_served}/{len(trace)},{report.n_failed},"
+                f"{s['faults']['requeued']}"
             )
         print(
             f"{admission},{s['window']},{s['mean_sojourn']:.4g},"
@@ -321,6 +376,20 @@ def main() -> None:
     ap.add_argument("--tape-cache-file", default=None, metavar="PATH",
                     help="persist the solve memo to a JSONL journal "
                          "(replayed on the next run against the same path)")
+    ap.add_argument("--tape-fault-profile", default="off",
+                    choices=["off", "light", "heavy"],
+                    help="inject a seeded fault plan into the serving run: "
+                         "'light' = 1 drive failure + 1 transient mount "
+                         "fault, 'heavy' adds media + solver faults "
+                         "(deterministic given --tape-seed)")
+    ap.add_argument("--tape-retries", type=int, default=3, metavar="N",
+                    help="retry budget per fault site (mount attempts, media "
+                         "read attempts, solver attempts per backend tier); "
+                         "exhausted budgets drop requests as typed failures")
+    ap.add_argument("--tape-journal", default=None, metavar="PATH",
+                    help="write-ahead event journal; if PATH already holds a "
+                         "(possibly torn) journal from a crashed run, the "
+                         "run recovers from it bit-identically")
     ap.add_argument("--tape-window", type=int, default=400_000,
                     help="accumulate-then-solve re-plan window (virtual time)")
     ap.add_argument("--tape-drives", type=int, default=None,

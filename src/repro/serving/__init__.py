@@ -3,7 +3,8 @@
 Callers should import from here rather than the submodules: the event loop
 and admission policies (:mod:`.queue`), the shared drive pool with pluggable
 mount scheduling (:mod:`.drives`), the discrete-event simulator oracle and
-report types (:mod:`.sim`), and the QoS layer (:mod:`.qos`).
+report types (:mod:`.sim`), the QoS layer (:mod:`.qos`), and the opt-in
+fault-injection / crash-recovery layer (:mod:`.faults`).
 
 The model-serving step builder (:mod:`.serve`) is deliberately *not*
 re-exported: it pulls in the neural-network stack, which tape-serving
@@ -11,6 +12,7 @@ callers don't need.
 """
 
 from .drives import (
+    FAIL_STOP,
     MOUNT_SCHEDULERS,
     DriveCosts,
     DrivePool,
@@ -19,8 +21,24 @@ from .drives import (
     LRUScheduler,
     MountScheduler,
     MountView,
+    NoDriveAvailableError,
     PoolDrive,
+    RetryPolicy,
     resolve_scheduler,
+)
+from .faults import (
+    DriveFailure,
+    EventJournal,
+    FaultInjector,
+    FaultPlan,
+    JournalReplayError,
+    MediaFault,
+    MediaReadError,
+    MountFailedError,
+    MountFault,
+    SolverFault,
+    recover_server,
+    seeded_fault_plan,
 )
 from .qos import DEFAULT_CLASS, ClassSLO, QoSSpec, SLOReport, int_quantile, slo_report
 from .queue import (
@@ -34,6 +52,7 @@ from .queue import (
 )
 from .sim import (
     BatchRecord,
+    FailedRequest,
     Leg,
     Replay,
     Request,
@@ -85,4 +104,21 @@ __all__ = [
     "rewind_time",
     "poisson_trace",
     "demo_library",
+    # fault injection / retries / crash recovery
+    "FaultPlan",
+    "FaultInjector",
+    "DriveFailure",
+    "MountFault",
+    "MediaFault",
+    "SolverFault",
+    "seeded_fault_plan",
+    "RetryPolicy",
+    "FAIL_STOP",
+    "EventJournal",
+    "recover_server",
+    "JournalReplayError",
+    "MountFailedError",
+    "MediaReadError",
+    "NoDriveAvailableError",
+    "FailedRequest",
 ]

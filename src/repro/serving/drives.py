@@ -48,6 +48,27 @@ earliest queued deadline, and the cost model).  Registered implementations
     deadline is within one remount of ``now``), and the drive with the
     *lowest* keep-score is evicted.  Exact-int, deterministic.
 
+Failure model and retries
+-------------------------
+A drive can hard-fail (:meth:`DrivePool.fail_drive`, driven by the fault
+layer in :mod:`repro.serving.faults`): a failed drive is excluded from every
+allocation path — :meth:`DrivePool.drive_of`, :meth:`DrivePool.can_serve`,
+:meth:`DrivePool.acquire`, and therefore from every
+:class:`MountScheduler`'s candidate list — and its cartridge is extracted so
+it can remount on a surviving drive (at full remount cost, charged through
+the normal :meth:`DrivePool.acquire` accounting).  When every drive has
+failed while requests are still queued, the serving loop raises the typed
+:class:`NoDriveAvailableError` (requests stay queued) or drops them as typed
+failures, per the pool's :class:`RetryPolicy`.
+
+:class:`RetryPolicy` is the pool's knob set for *transient* faults: maximum
+attempts (overridable per fault class — ``mount``/``media``/``solver``),
+exponential backoff charged in exact virtual time between attempts, whether
+aborted in-flight requests fail over (requeue) or fail stop (drop), and
+whether exhausted budgets raise typed errors or record typed
+:class:`~repro.serving.sim.FailedRequest` rows.  The policy is pure data;
+the event loop in :mod:`repro.serving.queue` enforces it.
+
 The event loop that drives a pool lives in :mod:`repro.serving.queue`
 (:class:`~repro.serving.queue.OnlineTapeServer`); everything here is plain
 deterministic state — no clocks, no randomness.
@@ -71,7 +92,80 @@ __all__ = [
     "LRUScheduler",
     "LookaheadScheduler",
     "resolve_scheduler",
+    "RetryPolicy",
+    "FAIL_STOP",
+    "NoDriveAvailableError",
 ]
+
+
+class NoDriveAvailableError(RuntimeError):
+    """Every drive in the pool has failed while requests are still queued.
+
+    Raised by the serving loop under ``RetryPolicy(on_exhausted="error")``
+    (the default); the undispatched requests stay in their pending queues so
+    a caller can inspect or re-drive them against a repaired pool.
+    """
+
+    def __init__(self, n_queued: int):
+        self.n_queued = n_queued
+        super().__init__(
+            f"all drives have failed with {n_queued} request(s) still queued"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How the serving loop reacts to transient faults (pure data, exact-int).
+
+    ``max_attempts`` bounds the attempts per fault site — mount attempts per
+    cartridge acquisition, read attempts per bad media span, solve attempts
+    per backend tier — with optional per-class overrides.  Between attempts
+    the loop charges ``backoff(attempt)`` virtual time units, exponential in
+    the attempt number (solver retries are exempt: solving is instantaneous
+    in virtual time).  ``failover`` decides whether requests aborted by a
+    drive failure or media error are requeued onto surviving capacity
+    (``True``, the default) or dropped fail-stop; ``on_exhausted`` decides
+    whether an exhausted budget raises the typed error (``"error"``) or
+    records the affected requests as typed
+    :class:`~repro.serving.sim.FailedRequest` rows (``"drop"``).
+    """
+
+    max_attempts: int = 3
+    backoff_base: int = 10_000
+    backoff_factor: int = 2
+    mount_attempts: int | None = None
+    media_attempts: int | None = None
+    solver_attempts: int | None = None
+    failover: bool = True
+    on_exhausted: str = "error"  # "error" | "drop"
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff_base < 0 or self.backoff_factor < 1:
+            raise ValueError("backoff_base must be >= 0, backoff_factor >= 1")
+        for name in ("mount_attempts", "media_attempts", "solver_attempts"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be >= 1 when set")
+        if self.on_exhausted not in ("error", "drop"):
+            raise ValueError("on_exhausted must be 'error' or 'drop'")
+
+    def attempts(self, fault_class: str) -> int:
+        """Attempt budget for ``"mount"``/``"media"``/``"solver"``."""
+        override = getattr(self, f"{fault_class}_attempts")
+        return override if override is not None else self.max_attempts
+
+    def backoff(self, attempt: int) -> int:
+        """Virtual-time delay charged after failed attempt ``attempt`` (>=1)."""
+        if attempt < 1:
+            raise ValueError("attempt numbers start at 1")
+        return self.backoff_base * self.backoff_factor ** (attempt - 1)
+
+
+#: no retries, no failover, no typed raise: aborted/unservable requests are
+#: dropped as FailedRequest rows — the baseline the availability sweep beats.
+FAIL_STOP = RetryPolicy(max_attempts=1, failover=False, on_exhausted="drop")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +212,7 @@ class PoolDrive:
     load_point: int = 0  # in-flight instance's m (rewind target)
     u_turn: int = 0  # in-flight instance's U-turn penalty
     last_used: int = 0  # virtual time of the last acquire (LRU eviction)
+    failed: bool = False  # hard-failed: permanently out of the pool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,24 +330,48 @@ class DrivePool:
         n_drives: int,
         costs: DriveCosts | None = None,
         scheduler: str | MountScheduler = "greedy",
+        retry: RetryPolicy | None = None,
     ):
         if n_drives < 1:
             raise ValueError("a drive pool needs at least one drive")
         self.costs = costs if costs is not None else DriveCosts()
         self.scheduler = resolve_scheduler(scheduler)
+        self.retry = retry if retry is not None else RetryPolicy()
         self.drives = [PoolDrive(i) for i in range(n_drives)]
         self.n_mounts = 0
         self.n_unmounts = 0
         self.mount_time = 0  # total charged mount/unmount/seek time
+        self.n_drive_failures = 0
 
     @property
     def n_drives(self) -> int:
         return len(self.drives)
 
+    @property
+    def alive(self) -> list[PoolDrive]:
+        """Drives still in service (hard-failed ones are gone for good)."""
+        return [d for d in self.drives if not d.failed]
+
+    def fail_drive(self, drive: PoolDrive) -> None:
+        """Hard-fail a drive: out of every allocation path, cartridge freed.
+
+        The cartridge (if any) is extracted by the robot so it can remount
+        on a surviving drive — the remount cost is charged by the next
+        :meth:`acquire` like any other mount.  The caller (the serving
+        loop's fault handler) is responsible for aborting the in-flight
+        batch and requeueing its unserved requests first.
+        """
+        if drive.failed:
+            return
+        drive.failed = True
+        drive.mounted = None
+        drive.busy = False
+        self.n_drive_failures += 1
+
     def drive_of(self, tape_id: str) -> PoolDrive | None:
         """The drive holding ``tape_id``, if any (cartridge exclusivity)."""
         for d in self.drives:
-            if d.mounted == tape_id:
+            if d.mounted == tape_id and not d.failed:
                 return d
         return None
 
@@ -260,12 +379,12 @@ class DrivePool:
         """Whether a dispatch for this cartridge could start right now.
 
         A mounted cartridge can only be served by its own drive (a physical
-        tape exists once); an unmounted one needs any free drive.
+        tape exists once); an unmounted one needs any free surviving drive.
         """
         holder = self.drive_of(tape_id)
         if holder is not None:
             return not holder.busy
-        return any(not d.busy for d in self.drives)
+        return any(not d.busy and not d.failed for d in self.drives)
 
     def acquire(
         self, tape_id: str, now: int = 0, view: MountView | None = None
@@ -286,7 +405,7 @@ class DrivePool:
             assert not holder.busy, f"{tape_id} is mid-batch in drive {holder.drive_id}"
             holder.last_used = now
             return holder, 0
-        free = [d for d in self.drives if not d.busy]
+        free = [d for d in self.drives if not d.busy and not d.failed]
         assert free, "acquire() without a free drive; check can_serve() first"
         if view is None:
             view = MountView(now=now, costs=self.costs)
@@ -304,9 +423,14 @@ class DrivePool:
         return drive, delay
 
     def stats(self) -> dict[str, int]:
-        return {
+        out = {
             "n_drives": self.n_drives,
             "mounts": self.n_mounts,
             "unmounts": self.n_unmounts,
             "mount_time": self.mount_time,
         }
+        # conditional so fault-free reports stay key-for-key identical to
+        # the pre-fault-layer format
+        if self.n_drive_failures:
+            out["drive_failures"] = self.n_drive_failures
+        return out

@@ -18,7 +18,11 @@ module is the request-facing half of that layer:
   and overall p50/p99 sojourn (exact nearest-rank integers, see
   :func:`int_quantile`), deadline-miss counts/rate, and total/max lateness.
   Everything except the float ``miss_rate`` convenience is exact-int virtual
-  time, safe to assert on.
+  time, safe to assert on.  When serving ran under fault injection
+  (:mod:`repro.serving.faults`), ``n_missed_faulted`` attributes deadline
+  misses to requests a fault touched (retried mount, media abort, drive
+  failover requeue) so operators can separate SLO debt caused by hardware
+  events from scheduling debt.
 
 The deadline-aware admissions themselves (``edf-global``,
 ``slack-accumulate``) live with the other admission policies in
@@ -103,6 +107,7 @@ class ClassSLO:
     n_missed: int  # completed strictly after their deadline
     total_lateness: int  # sum of max(0, completed - deadline)
     max_lateness: int
+    n_missed_faulted: int = 0  # misses on requests a fault touched (retry/requeue)
 
     @property
     def miss_rate(self) -> float:
@@ -137,6 +142,11 @@ class SLOReport:
     def miss_rate(self) -> float:
         return self.overall.miss_rate
 
+    @property
+    def n_missed_faulted(self) -> int:
+        """Deadline misses on requests that a fault touched (retry/requeue)."""
+        return self.overall.n_missed_faulted
+
     def for_class(self, qos_class: str) -> ClassSLO:
         for c in self.classes:
             if c.qos_class == qos_class:
@@ -151,6 +161,7 @@ class SLOReport:
             "n_served": self.overall.n,
             "n_deadlines": self.n_deadlines,
             "n_missed": self.n_missed,
+            "n_missed_faulted": self.n_missed_faulted,
             "miss_rate": self.miss_rate,
             "p50_sojourn": self.overall.p50_sojourn,
             "p99_sojourn": self.overall.p99_sojourn,
@@ -170,19 +181,22 @@ class SLOReport:
         }
 
 
-def _class_slo(label: str, rows: Sequence[tuple[int, int | None]]) -> ClassSLO:
-    """Aggregate ``(sojourn, lateness-or-None)`` rows into one ClassSLO."""
-    sojourns = [s for s, _ in rows]
-    late = [l for _, l in rows if l is not None]
+def _class_slo(
+    label: str, rows: Sequence[tuple[int, int | None, bool]]
+) -> ClassSLO:
+    """Aggregate ``(sojourn, lateness-or-None, faulted)`` rows into one ClassSLO."""
+    sojourns = [s for s, _, _ in rows]
+    late = [(l, f) for _, l, f in rows if l is not None]
     return ClassSLO(
         qos_class=label,
         n=len(rows),
         p50_sojourn=int_quantile(sojourns, 1, 2),
         p99_sojourn=int_quantile(sojourns, 99, 100),
         n_deadlines=len(late),
-        n_missed=sum(1 for l in late if l > 0),
-        total_lateness=sum(l for l in late if l > 0),
-        max_lateness=max((l for l in late if l > 0), default=0),
+        n_missed=sum(1 for l, _ in late if l > 0),
+        total_lateness=sum(l for l, _ in late if l > 0),
+        max_lateness=max((l for l, _ in late if l > 0), default=0),
+        n_missed_faulted=sum(1 for l, f in late if l > 0 and f),
     )
 
 
@@ -199,12 +213,12 @@ def slo_report(
         qos if qos is not None else (report.qos or {})
     )
     default = QoSSpec()
-    per_class: dict[str, list[tuple[int, int | None]]] = {}
-    everything: list[tuple[int, int | None]] = []
+    per_class: dict[str, list[tuple[int, int | None, bool]]] = {}
+    everything: list[tuple[int, int | None, bool]] = []
     for r in report.served:
         spec = specs.get(r.req_id, default)
         lateness = None if spec.deadline is None else r.completed - spec.deadline
-        row = (r.sojourn, lateness)
+        row = (r.sojourn, lateness, r.faulted)
         per_class.setdefault(spec.qos_class, []).append(row)
         everything.append(row)
     return SLOReport(

@@ -107,16 +107,47 @@ equal the solver-reported cost exactly) unless ``verify=False``.  Mount legs
 are charged ahead of each batch's trajectory: completions shift by the
 drive's mount delay and the pool's mount/unmount accounting lands in the
 :class:`~repro.serving.sim.ServiceReport`.
+
+Fault tolerance and crash recovery (opt-in)
+-------------------------------------------
+``faults=`` takes a deterministic :class:`~repro.serving.faults.FaultPlan`
+(drive hard-failures, transient mount failures, bad media spans, transient
+solver faults) and ``retry=`` a :class:`~repro.serving.drives.RetryPolicy`
+(attempt budgets, exponential backoff charged in exact virtual time,
+failover vs. fail-stop, typed-error vs. typed-drop exhaustion).  A failed
+drive leaves the pool for good: its in-flight batch aborts through the
+``preempt`` machinery (completions at or before the failure stand, the
+survivors requeue marked ``faulted``) and its cartridge remounts on a
+surviving drive at full remount cost.  Media faults abort at the exact
+instant the head touches the bad span; mount faults charge backoff before
+the retry; solver faults degrade through
+:func:`repro.core.solver.solve_warm_degraded` (``pallas →
+pallas-interpret → python``, bit-identical, warm states invalidated on
+fallback).  All counts land in :class:`~repro.serving.sim.BatchRecord` /
+:class:`~repro.serving.sim.ServiceReport`.  ``journal=`` appends every
+observable event to a :class:`~repro.serving.faults.EventJournal`
+write-ahead log; :func:`repro.serving.faults.recover_server` resumes a
+killed run from it, bit-identical.  With all three unset, every code path
+and report is bit-identical to the fault-unaware server.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
+from collections import deque
 from typing import Mapping
 
 from ..core.context import ExecutionContext, resolve_context
-from ..core.solver import SolveCache, solve_batch_warm, solve_warm
+from ..core.solver import (
+    SolveCache,
+    SolverUnavailableError,
+    solve_batch_warm,
+    solve_batch_warm_degraded,
+    solve_warm,
+    solve_warm_degraded,
+)
 from ..core.verify import verify_schedule
 from ..storage.tape import PendingQueue, TapeLibrary
 from .drives import (
@@ -125,11 +156,22 @@ from .drives import (
     GreedyScheduler,
     MountScheduler,
     MountView,
+    NoDriveAvailableError,
     PoolDrive,
+    RetryPolicy,
+)
+from .faults import (
+    EventJournal,
+    FaultInjector,
+    FaultPlan,
+    JournalReplayError,
+    MediaReadError,
+    MountFailedError,
 )
 from .qos import QoSSpec
 from .sim import (
     BatchRecord,
+    FailedRequest,
     Replay,
     Request,
     ServedRequest,
@@ -209,6 +251,9 @@ class OnlineTapeServer:
         cache: SolveCache | None = None,
         verify: bool = True,
         warm_start: bool = True,
+        faults: FaultPlan | None = None,
+        retry: RetryPolicy | None = None,
+        journal: EventJournal | str | os.PathLike | None = None,
     ):
         if admission not in ADMISSIONS:
             raise ValueError(
@@ -229,6 +274,15 @@ class OnlineTapeServer:
         self.mount_scheduler = mount_scheduler
         self.verify = verify
         self.warm_start = warm_start
+        self.faults = faults if faults else None  # empty plan == no plan
+        self._retry_given = retry is not None
+        self.retry = retry if retry is not None else RetryPolicy()
+        if isinstance(journal, EventJournal) or journal is None:
+            self._journal = journal
+        else:
+            self._journal = EventJournal(journal)
+        # journal-replay cross-check prefix; recover_server fills it
+        self._expect: deque = deque()
         # per-(cartridge, policy) WarmState store for runs without a cache
         # backend; with one, states live on the backend (get_warm/put_warm)
         self._warm_local: dict[tuple, object] = {}
@@ -259,20 +313,222 @@ class OnlineTapeServer:
         else:
             self._warm_local[self._warm_key(tape_id)] = state
 
+    def _drop_warm(self, tape_id: str) -> None:
+        """Invalidate a cartridge's warm state (degradation-chain fallback)."""
+        cache = self.context.cache
+        if cache is not None and hasattr(cache, "put_warm"):
+            cache.put_warm(self._warm_key(tape_id), None)
+        else:
+            self._warm_local.pop(self._warm_key(tape_id), None)
+
+    # -- write-ahead journal (see repro.serving.faults) ----------------------
+    def _log(self, **ev) -> None:
+        """Journal one event — or, while recovering, cross-check it.
+
+        Values must be JSON primitives (ints/strs/lists) so a journaled
+        event round-trips to an equal dict.  While the recovery prefix
+        (``self._expect``) lasts, re-produced events are verified against
+        it instead of re-written; any divergence means the journal belongs
+        to a different run and raises :class:`JournalReplayError`.
+        """
+        if self._journal is None:
+            return
+        if self._expect:
+            want = self._expect.popleft()
+            if want != ev:
+                raise JournalReplayError(
+                    f"journal replay diverged: journaled {want!r}, "
+                    f"re-execution produced {ev!r}"
+                )
+            return
+        self._journal.append(ev)
+
+    # -- fault handling (see repro.serving.faults) ---------------------------
+    def _record_served(self, drive: PoolDrive, pairs) -> None:
+        for req, completed in pairs:
+            self._served.append(
+                ServedRequest(
+                    req_id=req.req_id,
+                    name=req.name,
+                    tape_id=req.tape_id,
+                    arrival=req.time,
+                    dispatched=drive.dispatched,
+                    completed=completed,
+                    faulted=req.req_id in self._faulted,
+                )
+            )
+
+    def _fail_requests(self, reqs: list[Request], reason: str, now: int) -> None:
+        for req in reqs:
+            self._failed.append(
+                FailedRequest(
+                    req_id=req.req_id,
+                    name=req.name,
+                    tape_id=req.tape_id,
+                    arrival=req.time,
+                    failed_at=now,
+                    reason=reason,
+                )
+            )
+
+    def _requeue(self, pending: list[Request], reason: str, now: int) -> list[int]:
+        """Re-enqueue aborted in-flight requests (failover) or drop them.
+
+        Requeued requests keep their original arrival times, so they sort
+        back to the head of their queue deterministically — same rule as an
+        admission preemption.
+        """
+        if not pending:
+            return []
+        if self.retry.failover:
+            for req in pending:
+                self.lib.enqueue(req.name, req)
+                self._faulted.add(req.req_id)
+            self._n_requeued += len(pending)
+        else:
+            self._fail_requests(pending, reason, now)
+        return [r.req_id for r in pending]
+
+    def _fail_drive(self, drive: PoolDrive, now: int) -> None:
+        """Hard drive failure: abort in-flight work, remove from the pool.
+
+        Completions at or before the failure stand (those bytes were read);
+        the survivors requeue (failover) or drop (fail-stop).  The head
+        state dies with the drive — no rewind to charge — and the pool
+        extracts the cartridge so it can remount elsewhere at full remount
+        cost.  If fault-injection ever targets an already-failed drive the
+        event is a no-op.
+        """
+        if drive.failed:
+            return
+        if self._injector is not None:
+            self._injector.drive_failed()
+        requeued: list[int] = []
+        if drive.busy and drive.inflight:
+            done = [(r, c) for r, c in drive.inflight if c <= now]
+            pending = [r for r, c in drive.inflight if c > now]
+            self._record_served(drive, done)
+            aborted = self._batches[drive.batch_idx]
+            self._batches[drive.batch_idx] = dataclasses.replace(
+                aborted, aborted_by="drive-failure", n_completed=len(done)
+            )
+            requeued = self._requeue(pending, "drive-failure", now)
+        drive.epoch += 1  # invalidate any scheduled free/media-abort event
+        drive.inflight = []
+        drive.legs = ()
+        self.pool.fail_drive(drive)
+        self._log(ev="drive-fail", t=now, drive=drive.drive_id, requeued=requeued)
+
+    def _media_abort(self, drive: PoolDrive, now: int, span: tuple) -> None:
+        """A read pass hit a bad media span: abort at the touch instant.
+
+        Works like a preemption — completions before the fault stand, the
+        head rewinds from its exact trajectory position — plus the retry
+        policy's backoff charged before the drive frees.  Survivors requeue
+        for a retry read until the span's attempt budget is exhausted, then
+        the typed error/drop path applies.
+        """
+        self._n_media_aborts += 1
+        done = [(r, c) for r, c in drive.inflight if c <= now]
+        pending = [r for r, c in drive.inflight if c > now]
+        self._record_served(drive, done)
+        attempts = self._media_attempts.get(span, 0)
+        requeued: list[int] = []
+        if attempts >= self.retry.attempts("media"):
+            if self.retry.on_exhausted == "error":
+                raise MediaReadError(span, attempts)
+            self._fail_requests(pending, "media-error", now)
+        else:
+            requeued = self._requeue(pending, "media-error", now)
+        aborted = self._batches[drive.batch_idx]
+        self._batches[drive.batch_idx] = dataclasses.replace(
+            aborted, aborted_by="media-error", n_completed=len(done)
+        )
+        backoff = self.retry.backoff(max(1, attempts))
+        self._retry_delay += backoff
+        pos = head_position(drive.legs, now - drive.service_start)
+        free_at = now + rewind_time(drive.load_point, drive.u_turn, pos) + backoff
+        drive.epoch += 1
+        drive.inflight = []
+        drive.legs = ()
+        drive.service_end = now
+        drive.busy_until = free_at
+        drive.busy = True
+        self._log(
+            ev="abort", t=now, drive=drive.drive_id, reason="media-error",
+            requeued=requeued,
+        )
+        self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
+
+    def _acquire(
+        self, tid: str, now: int, view: MountView | None
+    ) -> tuple[PoolDrive, int, int] | None:
+        """:meth:`DrivePool.acquire` plus transient-mount retry handling.
+
+        Returns ``(drive, delay, retries)`` with the retry backoff folded
+        into the mount delay (exact virtual time), or ``None`` when the
+        mount budget is exhausted under the drop policy (the cartridge's
+        queued requests have been recorded as failed).
+        """
+        retries = 0
+        extra = 0
+        if self._injector is not None and self.pool.drive_of(tid) is None:
+            while self._injector.mount_fails(tid):
+                retries += 1
+                self._n_mount_retries += 1
+                if retries >= self.retry.attempts("mount"):
+                    if self.retry.on_exhausted == "error":
+                        raise MountFailedError(tid, retries)
+                    reqs = self.lib.pending(tid).drain()
+                    self._fail_requests(reqs, "mount-failed", now)
+                    self._log(
+                        ev="mount-failed", t=now, tape=tid,
+                        dropped=[r.req_id for r in reqs],
+                    )
+                    return None
+                extra += self.retry.backoff(retries)
+                self._retry_delay += self.retry.backoff(retries)
+        drive, delay = self.pool.acquire(tid, now=now, view=view)
+        return drive, delay + extra, retries
+
     def run(self, trace: list[Request]) -> ServiceReport:
         """Serve a full arrival trace; returns the per-request report."""
         self._events: list = []
         self._seq = 0
         n = self.n_drives if self.n_drives is not None else max(1, len(self.lib.tapes))
-        self.pool = DrivePool(n, self.drive_costs, scheduler=self.mount_scheduler)
+        self.pool = DrivePool(
+            n, self.drive_costs, scheduler=self.mount_scheduler, retry=self.retry
+        )
         self._served: list[ServedRequest] = []
         self._batches: list[BatchRecord] = []
         self._next_wake: dict[str, int] = {}  # tape_id -> pending window timer
         self._n_preempt = 0
+        self._injector = FaultInjector(self.faults) if self.faults else None
+        self._failed: list[FailedRequest] = []
+        self._faulted: set[int] = set()  # req_ids touched by a fault
+        self._media_attempts: dict[tuple, int] = {}  # span -> read attempts
+        self._n_mount_retries = 0
+        self._n_media_aborts = 0
+        self._n_solver_faults = 0
+        self._n_fallbacks = 0
+        self._n_requeued = 0
+        self._retry_delay = 0  # total backoff charged, exact virtual time
         horizon = 0
 
         for req in sorted(trace):
             self._push(req.time, "arrival", req)
+        if self._injector is not None:
+            for f in self._injector.drive_failures():
+                if f.drive >= n:
+                    raise ValueError(
+                        f"fault plan fails drive {f.drive} but the pool has "
+                        f"only {n} drive(s)"
+                    )
+                self._push(f.at, "drive-fail", f.drive)
+        self._log(
+            ev="start", admission=self.admission, policy=self.policy,
+            window=self.window, n_trace=len(trace),
+        )
 
         while self._events:
             now, _, kind, data = heapq.heappop(self._events)
@@ -280,6 +536,7 @@ class OnlineTapeServer:
             if kind == "arrival":
                 req: Request = data
                 tape_id = self.lib.enqueue(req.name, req)
+                self._log(ev="enqueue", t=now, req=req.req_id, tape=tape_id)
                 if self.admission == "preempt":
                     drive = self.pool.drive_of(tape_id)
                     if drive is not None and drive.busy and now < drive.service_end:
@@ -298,9 +555,31 @@ class OnlineTapeServer:
                     continue  # superseded timer
                 del self._next_wake[tape_id]
                 self._schedule(now)
+            elif kind == "drive-fail":
+                self._fail_drive(self.pool.drives[data], now)
+                self._schedule(now)
+            elif kind == "media-abort":
+                drive_id, epoch, span = data
+                drive = self.pool.drives[drive_id]
+                if epoch != drive.epoch or not drive.busy or drive.failed:
+                    continue  # batch already gone (preempted / drive died)
+                self._media_abort(drive, now, span)
+                self._schedule(now)
 
-        horizon = max([horizon] + [d.busy_until for d in self.pool.drives])
-        return ServiceReport(
+        self._drain_unservable(horizon)
+        horizon = max([horizon] + [d.busy_until for d in self.pool.alive])
+        fault_stats = None
+        if self._injector is not None or self._retry_given:
+            fault_stats = {
+                "drive_failures": self.pool.n_drive_failures,
+                "mount_retries": self._n_mount_retries,
+                "media_aborts": self._n_media_aborts,
+                "solver_faults": self._n_solver_faults,
+                "fallbacks": self._n_fallbacks,
+                "requeued": self._n_requeued,
+                "retry_delay": self._retry_delay,
+            }
+        report = ServiceReport(
             admission=self.admission,
             policy=self.policy,
             backend=self.context.backend,
@@ -316,7 +595,35 @@ class OnlineTapeServer:
             scheduler=self.pool.scheduler.name,
             qos=self.qos or None,
             warm_start=self.warm_start,
+            failed=self._failed,
+            fault_stats=fault_stats,
         )
+        self._log(
+            ev="end", horizon=horizon, n_served=report.n_served,
+            n_failed=report.n_failed, total_sojourn=report.total_sojourn,
+        )
+        return report
+
+    def _drain_unservable(self, now: int) -> None:
+        """End-of-loop backstop: requests still queued with no drive left.
+
+        The event loop only ends with non-empty queues when every drive has
+        hard-failed (nothing can ever free or dispatch again).  Typed raise
+        with the requests left queued under ``on_exhausted="error"``;
+        typed :class:`~repro.serving.sim.FailedRequest` drops otherwise.
+        """
+        leftover = sorted(
+            (r for q in self.lib.queues.values() for r in q),
+            key=lambda r: (r.time, r.req_id),
+        )
+        if not leftover:
+            return
+        assert not self.pool.alive, "queued requests with live drives at exit"
+        if self.retry.on_exhausted == "error":
+            raise NoDriveAvailableError(len(leftover))
+        for tid in sorted(self.lib.queues):
+            self.lib.queues[tid].drain()
+        self._fail_requests(leftover, "no-drive", now)
 
     # -- admission -----------------------------------------------------------
     def _deadline_of(self, req: Request) -> int | None:
@@ -452,38 +759,61 @@ class OnlineTapeServer:
         view = self._mount_view(now)
         if self.admission == "batched":
             # one event tick -> one solve_batch over every admitted cartridge
-            picks: list[tuple[PoolDrive, int, list[Request]]] = []
+            picks: list[tuple[PoolDrive, int, int, list[Request]]] = []
             for tid in cands:
                 if not self.pool.can_serve(tid):
                     continue
-                drive, delay = self.pool.acquire(tid, now=now, view=view)
+                acq = self._acquire(tid, now, view)
+                if acq is None:
+                    continue  # mount budget exhausted: requests dropped
+                drive, delay, retries = acq
                 drive.busy = True  # reserve; _dispatch fills in the timeline
-                picks.append((drive, delay, self.lib.pending(tid).drain()))
+                picks.append((drive, delay, retries, self.lib.pending(tid).drain()))
             if not picks:
                 return
             prepared = []
-            for _, _, batch in picks:
+            for _, _, _, batch in picks:
                 tape = self.lib.tape_of(batch[0].name)
                 inst, names = tape.instance(_multiset(batch))
                 prepared.append((tape, inst, names))
-            results, new_warms, stats = solve_batch_warm(
-                [inst for _, inst, _ in prepared],
-                policy=self.policy,
-                context=self.context,
-                warms=[self._get_warm(t.tape_id) for t, _, _ in prepared],
-            )
-            for (drive, delay, batch), (tape, inst, names), res, warm, st in zip(
+            try:
+                results, new_warms, stats, rec = self._solve_batch_tick(
+                    [inst for _, inst, _ in prepared],
+                    [self._get_warm(t.tape_id) for t, _, _ in prepared],
+                )
+            except SolverUnavailableError:
+                if self.retry.on_exhausted == "error":
+                    raise
+                # one tick = one launch = one fault domain: the whole tick's
+                # work drops as typed failures, the reserved drives free up
+                for drive, _, _, batch in picks:
+                    drive.busy = False
+                    self._fail_requests(batch, "solver-failed", now)
+                    self._log(
+                        ev="solve-failed", t=now, drive=drive.drive_id,
+                        dropped=[r.req_id for r in batch],
+                    )
+                return
+            degraded_to = rec.used if rec is not None and rec.fell_back else None
+            for (drive, delay, retries, batch), (tape, inst, names), res, warm, st in zip(
                 picks, prepared, results, new_warms, stats
             ):
-                self._put_warm(tape.tape_id, warm)
+                if rec is not None and rec.n_faults:
+                    self._drop_warm(tape.tape_id)  # invalidated on fallback
+                else:
+                    self._put_warm(tape.tape_id, warm)
                 self._dispatch(
-                    drive, batch, now, delay, (tape, inst, names, res, st)
+                    drive, batch, now, delay, (tape, inst, names, res, st),
+                    mount_retries=retries, degraded_to=degraded_to,
                 )
             return
         for tid in cands:
             if not self.pool.can_serve(tid):
                 continue
-            drive, delay = self.pool.acquire(tid, now=now, view=view)
+            acq = self._acquire(tid, now, view)
+            if acq is None:
+                continue  # mount budget exhausted: requests dropped
+            drive, delay, retries = acq
             queue = self.lib.pending(tid)
             if self.admission == "edf-global":
                 batch = [self._pop_urgent(queue, now)]
@@ -491,7 +821,53 @@ class OnlineTapeServer:
                 batch = [queue.pop()]
             else:
                 batch = queue.drain()
-            self._dispatch(drive, batch, now, delay)
+            self._dispatch(drive, batch, now, delay, mount_retries=retries)
+
+    # -- solving (direct, or through the degradation chain under faults) -----
+    def _solve_one(self, tape_id: str, inst):
+        """One cartridge's solve; returns ``(result, stats, degraded_to)``."""
+        warm = self._get_warm(tape_id)
+        if self._injector is None:
+            res, new_warm, stats = solve_warm(
+                inst, policy=self.policy, context=self.context, warm=warm
+            )
+            self._put_warm(tape_id, new_warm)
+            return res, stats, None
+        res, new_warm, stats, rec = solve_warm_degraded(
+            inst,
+            policy=self.policy,
+            context=self.context,
+            warm=warm,
+            fault_hook=self._injector.solver_hook,
+            attempts_per_backend=self.retry.attempts("solver"),
+        )
+        if rec.n_faults:
+            self._n_solver_faults += rec.n_faults
+            self._n_fallbacks += rec.fell_back
+            self._drop_warm(tape_id)  # invalidated on fallback (new_warm None)
+        else:
+            self._put_warm(tape_id, new_warm)
+        return res, stats, rec.used if rec.fell_back else None
+
+    def _solve_batch_tick(self, insts, warms):
+        """The ``batched`` admission's one-launch-per-tick solve."""
+        if self._injector is None:
+            results, new_warms, stats = solve_batch_warm(
+                insts, policy=self.policy, context=self.context, warms=warms
+            )
+            return results, new_warms, stats, None
+        results, new_warms, stats, rec = solve_batch_warm_degraded(
+            insts,
+            policy=self.policy,
+            context=self.context,
+            warms=warms,
+            fault_hook=self._injector.solver_hook,
+            attempts_per_backend=self.retry.attempts("solver"),
+        )
+        if rec.n_faults:
+            self._n_solver_faults += rec.n_faults
+            self._n_fallbacks += rec.fell_back
+        return results, new_warms, stats, rec
 
     # -- drive actions -------------------------------------------------------
     def _dispatch(
@@ -501,17 +877,23 @@ class OnlineTapeServer:
         now: int,
         delay: int,
         prepared=None,
+        mount_retries: int = 0,
+        degraded_to: str | None = None,
     ) -> None:
         if prepared is None:
             tape = self.lib.tape_of(batch[0].name)
             inst, names = tape.instance(_multiset(batch))
-            res, new_warm, stats = solve_warm(
-                inst,
-                policy=self.policy,
-                context=self.context,
-                warm=self._get_warm(tape.tape_id),
-            )
-            self._put_warm(tape.tape_id, new_warm)
+            try:
+                res, stats, degraded_to = self._solve_one(tape.tape_id, inst)
+            except SolverUnavailableError:
+                if self.retry.on_exhausted == "error":
+                    raise
+                self._fail_requests(batch, "solver-failed", now)
+                self._log(
+                    ev="solve-failed", t=now, drive=drive.drive_id,
+                    dropped=[r.req_id for r in batch],
+                )
+                return
         else:
             tape, inst, names, res, stats = prepared
         assert drive.mounted == tape.tape_id
@@ -538,6 +920,9 @@ class OnlineTapeServer:
             (req, start + replay.service_time[idx[req.name]]) for req in batch
         ]
         drive.batch_idx = len(self._batches)
+        if mount_retries:
+            for req in batch:  # retried mounts delayed every request aboard
+                self._faulted.add(req.req_id)
         self._batches.append(
             BatchRecord(
                 tape_id=tape.tape_id,
@@ -554,22 +939,32 @@ class OnlineTapeServer:
                 cells_evaluated=stats.cells_evaluated,
                 cells_reused=stats.cells_reused,
                 warm_mode=stats.mode,
+                mount_retries=mount_retries,
+                degraded_to=degraded_to,
             )
         )
+        self._log(
+            ev="batch", t=now, tape=tape.tape_id, drive=drive.drive_id,
+            reqs=[r.req_id for r in batch], delay=delay, cost=res.cost,
+            makespan=replay.makespan,
+        )
+        if self._injector is not None:
+            hit = self._injector.media_fault(tape.tape_id, replay.legs)
+            if hit is not None:
+                t_rel, span = hit
+                self._media_attempts[span] = self._media_attempts.get(span, 0) + 1
+                self._push(
+                    start + t_rel, "media-abort",
+                    (drive.drive_id, drive.epoch, span),
+                )
         self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
 
     def _complete(self, drive: PoolDrive) -> None:
-        for req, completed in drive.inflight:
-            self._served.append(
-                ServedRequest(
-                    req_id=req.req_id,
-                    name=req.name,
-                    tape_id=req.tape_id,
-                    arrival=req.time,
-                    dispatched=drive.dispatched,
-                    completed=completed,
-                )
-            )
+        self._record_served(drive, drive.inflight)
+        self._log(
+            ev="serve", t=drive.busy_until, drive=drive.drive_id,
+            reqs=[[r.req_id, c] for r, c in drive.inflight],
+        )
         drive.inflight = []
         drive.busy = False
 
@@ -587,17 +982,7 @@ class OnlineTapeServer:
         """
         done = [(r, c) for r, c in drive.inflight if c <= now]
         pending = [r for r, c in drive.inflight if c > now]
-        for req, completed in done:
-            self._served.append(
-                ServedRequest(
-                    req_id=req.req_id,
-                    name=req.name,
-                    tape_id=req.tape_id,
-                    arrival=req.time,
-                    dispatched=drive.dispatched,
-                    completed=completed,
-                )
-            )
+        self._record_served(drive, done)
         for req in pending:
             self.lib.enqueue(req.name, req)
         if now < drive.service_start:
@@ -619,6 +1004,10 @@ class OnlineTapeServer:
         drive.busy_until = free_at
         drive.busy = True
         self._n_preempt += 1
+        self._log(
+            ev="abort", t=now, drive=drive.drive_id, reason="preempt",
+            requeued=[r.req_id for r in pending],
+        )
         self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
 
 
@@ -645,6 +1034,9 @@ def serve_trace(
     cache: SolveCache | None = None,
     verify: bool = True,
     warm_start: bool = True,
+    faults: FaultPlan | None = None,
+    retry: RetryPolicy | None = None,
+    journal: EventJournal | str | os.PathLike | None = None,
 ) -> ServiceReport:
     """One-shot convenience: build an :class:`OnlineTapeServer` and run it."""
     server = OnlineTapeServer(
@@ -661,5 +1053,8 @@ def serve_trace(
         cache=cache,
         verify=verify,
         warm_start=warm_start,
+        faults=faults,
+        retry=retry,
+        journal=journal,
     )
     return server.run(trace)

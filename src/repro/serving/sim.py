@@ -49,6 +49,7 @@ __all__ = [
     "poisson_trace",
     "demo_library",
     "ServedRequest",
+    "FailedRequest",
     "BatchRecord",
     "ServiceReport",
 ]
@@ -295,11 +296,34 @@ class ServedRequest:
     arrival: int
     dispatched: int  # when its batch was handed to the drive
     completed: int  # absolute service completion
+    #: the request was touched by a fault before completing (requeued by a
+    #: drive failure / media abort, or delayed by transient mount retries)
+    faulted: bool = False
 
     @property
     def sojourn(self) -> int:
         """Service time experienced by the user: completion - arrival."""
         return self.completed - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class FailedRequest:
+    """A request the fault layer gave up on (typed; only under
+    ``RetryPolicy(on_exhausted="drop")`` / ``failover=False``).
+
+    ``reason`` is one of ``"mount-failed"`` (transient mount retries
+    exhausted), ``"media-error"`` (bad-span read retries exhausted),
+    ``"drive-failure"`` (in-flight on a failed drive, failover disabled),
+    ``"solver-failed"`` (every degradation-chain tier exhausted) or
+    ``"no-drive"`` (still queued when the last drive died).
+    """
+
+    req_id: int
+    name: str
+    tape_id: str
+    arrival: int
+    failed_at: int
+    reason: str
 
 
 @dataclasses.dataclass(frozen=True)
@@ -331,6 +355,14 @@ class BatchRecord:
     cells_evaluated: int = 0
     cells_reused: int = 0
     warm_mode: str = "cold"
+    #: fault that aborted this batch mid-flight ("drive-failure" /
+    #: "media-error"); None for clean batches and admission preemptions
+    aborted_by: str | None = None
+    #: transient mount failures retried (with backoff) before this dispatch
+    mount_retries: int = 0
+    #: backend that actually solved after a degradation-chain fallback
+    #: (None: the requested backend, possibly after same-tier retries)
+    degraded_to: str | None = None
 
 
 @dataclasses.dataclass
@@ -356,6 +388,13 @@ class ServiceReport:
     qos: dict | None = None
     #: whether the server carried WarmStates across this run's solves
     warm_start: bool = False
+    #: typed FailedRequest rows (only the drop/fail-stop retry policies)
+    failed: list = dataclasses.field(default_factory=list)
+    #: exact fault/retry accounting (drive_failures, mount_retries,
+    #: media_aborts, solver_faults, fallbacks, requeued, retry_delay);
+    #: None when the run had no fault plan and no explicit retry policy —
+    #: fault-free reports stay key-for-key identical to the PR-6 format
+    fault_stats: dict | None = None
 
     # -- exact aggregates (ints, safe to assert on) --------------------------
     @property
@@ -369,6 +408,22 @@ class ServiceReport:
     @property
     def makespan(self) -> int:
         return max((r.completed for r in self.served), default=0)
+
+    @property
+    def n_failed(self) -> int:
+        """Requests the fault layer dropped (typed rows in ``failed``)."""
+        return len(self.failed)
+
+    @property
+    def n_faulted(self) -> int:
+        """Served requests that were touched by a fault on the way."""
+        return sum(1 for r in self.served if r.faulted)
+
+    @property
+    def completion_rate(self) -> float:
+        """Served / (served + dropped); 1.0 on a fault-free run."""
+        total = self.n_served + self.n_failed
+        return self.n_served / total if total else 0.0
 
     @property
     def cells_evaluated(self) -> int:
@@ -453,4 +508,9 @@ class ServiceReport:
             out["n_deadlines"] = self.n_deadlines
             out["n_missed"] = self.n_missed
             out["miss_rate"] = self.miss_rate
+        if self.fault_stats is not None:
+            out["faults"] = dict(self.fault_stats)
+            out["n_failed"] = self.n_failed
+            out["n_faulted"] = self.n_faulted
+            out["completion_rate"] = self.completion_rate
         return out

@@ -226,6 +226,54 @@ def test_rescale_is_exact_not_approximate(rng):
 
 
 # ---------------------------------------------------------------------------
+# partial batches: typed per-instance failures, cache never polluted
+# ---------------------------------------------------------------------------
+def test_partial_batch_solves_good_and_types_bad(rng):
+    """``partial=True`` must solve the good instances bit-identically, park
+    a typed :class:`FailedSolve` at each failing position, and never let a
+    failure touch the cache (regression: an aborted whole-batch launch used
+    to throw away the good instances' work)."""
+    from repro.core.solver import FailedSolve
+
+    good = [_hetero_instance(rng) for _ in range(3)]
+    bad = _coprime_instance()
+    batch = [good[0], bad, good[1], good[2]]
+
+    # strict device policy: the bad instance trips the int32 guard
+    with pytest.raises(ValueError, match="int32"):
+        solve_batch(batch, policy="dp", context=DEV)
+
+    cache = SolveCache()
+    ctx = DEV.replace(cache=cache)
+    res = solve_batch(batch, policy="dp", context=ctx, partial=True)
+    assert isinstance(res[1], FailedSolve)
+    assert res[1].policy == "dp" and res[1].index == 1
+    assert isinstance(res[1].error, ValueError)
+    direct = [solve(i, policy="dp", context=DEV) for i in good]
+    assert [(r.cost, r.detours) for r in (res[0], res[2], res[3])] == [
+        (r.cost, r.detours) for r in direct
+    ]
+    # only the three good results were cached; the failure left no entry
+    assert cache.stats()["entries"] == 3
+    assert cache.get(bad, "dp", "pallas-interpret") is None
+    # re-running serves the good ones from the memo, re-fails the bad one
+    again = solve_batch(batch, policy="dp", context=ctx, partial=True)
+    assert cache.stats()["hits"] == 3
+    assert isinstance(again[1], FailedSolve)
+
+
+def test_partial_without_cache_and_all_good(rng):
+    """``partial=True`` on an all-good batch is bit-identical to the strict
+    path, with or without a memo on the context."""
+    insts = [_hetero_instance(rng) for _ in range(4)]
+    strict = solve_batch(insts, policy="dp", context=DEV)
+    relaxed = solve_batch(insts, policy="dp", context=DEV, partial=True)
+    assert [(r.cost, r.detours) for r in strict] == [
+        (r.cost, r.detours) for r in relaxed
+    ]
+
+
+# ---------------------------------------------------------------------------
 # solve memo cache
 # ---------------------------------------------------------------------------
 def test_cache_hit_is_equal_and_counted(rng):

@@ -177,6 +177,47 @@ def test_jsonl_backend_compact_and_clear(tmp_path, rng):
     backend.close()
 
 
+def test_jsonl_backend_compact_survives_crash_midway(tmp_path, rng, monkeypatch):
+    """A process killed mid-compaction must leave either the old journal or
+    the new one — never a torn mix — and the backend must stay usable when
+    the staging write itself fails."""
+    import os as _os
+
+    path = tmp_path / "memo.jsonl"
+    backend = JsonlCacheBackend(path)
+    ctx = ExecutionContext(cache=backend)
+    insts = [random_instance(rng, lo=2, hi=6) for _ in range(4)]
+    results = [solve(i, policy="dp", context=ctx) for i in insts]
+    before = path.read_bytes()
+
+    # kill the process at the atomic-rename instant: the staged temp file is
+    # complete but never replaces the journal -> old journal intact
+    def boom(*args, **kwargs):
+        raise KeyboardInterrupt("killed mid-compact")
+
+    monkeypatch.setattr(_os, "replace", boom)
+    try:
+        backend.compact()
+    except KeyboardInterrupt:
+        pass
+    monkeypatch.undo()
+    assert path.read_bytes() == before  # journal untouched by the crash
+    # the backend reopened its append handle: still usable after the crash
+    extra = random_instance(rng, lo=2, hi=6)
+    solve(extra, policy="dp", context=ctx)
+    backend.close()
+
+    reopened = JsonlCacheBackend(path)
+    assert reopened.loaded == len(insts) + 1
+    for inst, res in zip(insts, results):
+        hit = reopened.get(inst, "dp", "python")
+        assert hit is not None and hit.cost == res.cost
+    # a clean compaction after the crash converges the journal
+    reopened.compact()
+    assert sum(1 for _ in open(path)) == len(insts) + 1
+    reopened.close()
+
+
 def test_jsonl_backend_serves_trace_identically(tmp_path):
     """The persistent backend behind a serving run changes nothing but the
     journal on disk; a restarted run replays to pure memo hits."""

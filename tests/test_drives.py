@@ -95,6 +95,41 @@ def test_pool_cartridge_exclusivity():
     assert pool.can_serve("A")
 
 
+def test_failed_drive_leaves_every_allocation_path():
+    pool = DrivePool(2, COSTS)
+    d0, _ = pool.acquire("A")
+    d0.busy = True
+    pool.fail_drive(d0)
+    # failure extracts the cartridge and clears the busy flag
+    assert d0.failed and d0.mounted is None and not d0.busy
+    assert pool.alive == [pool.drives[1]]
+    assert pool.drive_of("A") is None
+    # the cartridge remounts on the survivor at full remount cost
+    d1, delay = pool.acquire("A")
+    assert d1.drive_id == 1 and delay == COSTS.switch
+    # failing again is a no-op on the counter
+    pool.fail_drive(d0)
+    assert pool.n_drive_failures == 1
+    assert pool.stats()["drive_failures"] == 1
+
+
+def test_all_drives_failed_pool_cannot_serve():
+    pool = DrivePool(2)
+    for d in list(pool.drives):
+        pool.fail_drive(d)
+    assert pool.alive == []
+    assert not pool.can_serve("A")
+    assert pool.n_drive_failures == 2
+
+
+def test_fault_free_pool_stats_hide_failure_key():
+    """The failure counter must not appear in fault-free stats — the PR-4
+    stats dict is pinned key-for-key elsewhere in this module."""
+    pool = DrivePool(2, COSTS)
+    pool.acquire("A")
+    assert "drive_failures" not in pool.stats()
+
+
 # ---------------------------------------------------------------------------
 # acceptance: constrained pool + mount costs on the seeded 240-request trace
 # ---------------------------------------------------------------------------

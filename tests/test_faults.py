@@ -1,0 +1,664 @@
+"""Fault injection + recovery layer: failover, retries, degradation, WAL.
+
+The acceptance bars (all on exact integer virtual time):
+
+* with no fault plan and no journal, every admission's timeline is pinned
+  **bit-identically** against the PR-4/PR-6 constants (the same sha +
+  total-sojourn pins :mod:`test_qos` uses) — even when a ``RetryPolicy``
+  is supplied, since retries only act when faults fire;
+* under seeded fault profiles every request is either served or recorded
+  as a typed :class:`~repro.serving.FailedRequest` — nothing vanishes —
+  and two runs of the same plan are bit-identical;
+* transient mount failures charge the retry backoff in exact virtual
+  time; media faults abort at the exact head-touch instant and retry;
+  drive hard-failures requeue survivors deterministically and remount the
+  cartridge on surviving capacity;
+* the solver degradation chain lands bit-identical results to a direct
+  solve on the fallback tier;
+* a truncated write-ahead journal recovers to the bit-identical report
+  and rebuilds the byte-identical journal, at every cut point.
+"""
+
+import hashlib
+
+import pytest
+
+from repro.core.solver import (
+    DEGRADATION_CHAIN,
+    ExecutionContext,
+    SolveCache,
+    SolverUnavailableError,
+    TransientSolverError,
+    degraded_backends,
+    solve,
+    solve_warm_degraded,
+)
+from repro.serving import (
+    FAIL_STOP,
+    DriveCosts,
+    DriveFailure,
+    EventJournal,
+    FaultInjector,
+    FaultPlan,
+    JournalReplayError,
+    MediaFault,
+    MediaReadError,
+    MountFailedError,
+    MountFault,
+    NoDriveAvailableError,
+    QoSSpec,
+    RetryPolicy,
+    SolverFault,
+    demo_library,
+    poisson_trace,
+    recover_server,
+    seeded_fault_plan,
+    serve_trace,
+    slo_report,
+)
+
+from conftest import random_instance
+
+pytestmark = pytest.mark.faults
+
+SEED = 20260731
+COSTS = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+
+#: same differential pins as test_qos.PR4_BASELINE: the fault layer must
+#: keep the no-fault timelines bit-identical on the seeded 240-request
+#: constrained-pool trace (n_drives=2, COSTS, window=400_000, policy="dp").
+NO_FAULT_BASELINE = {
+    "fifo": ("1a79c55063c3f802", 56_368_550_889),
+    "accumulate": ("df9ed258ac816c37", 3_809_190_213),
+    "preempt": ("668366586042762a", 7_347_259_813),
+    "fifo-global": ("1a79c55063c3f802", 56_368_550_889),
+    "per-drive-accumulate": ("df9ed258ac816c37", 3_809_190_213),
+    "batched": ("df9ed258ac816c37", 3_809_190_213),
+}
+
+
+def build_library():
+    return demo_library(SEED)
+
+
+def build_trace(n_requests=240, rate=250_000):
+    return poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=rate, seed=SEED
+    )
+
+
+def small_library():
+    return demo_library(7)
+
+
+def small_trace(n_requests=24):
+    return poisson_trace(small_library(), n_requests=n_requests,
+                         mean_interarrival=40_000, seed=7)
+
+
+def _served_sha(report):
+    served = tuple(
+        (r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served
+    )
+    return hashlib.sha256(repr(served).encode()).hexdigest()[:16]
+
+
+def _timeline(report):
+    return [
+        (r.req_id, r.arrival, r.dispatched, r.completed, r.faulted)
+        for r in report.served
+    ]
+
+
+def serve_small(admission="accumulate", trace=None, **kwargs):
+    return serve_trace(
+        small_library(),
+        small_trace() if trace is None else trace,
+        admission,
+        window=200_000,
+        n_drives=2,
+        **kwargs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: no fault plan + no journal stays bit-identical (differential)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", sorted(NO_FAULT_BASELINE))
+def test_no_fault_path_matches_pin(admission):
+    sha, total = NO_FAULT_BASELINE[admission]
+    report = serve_trace(
+        build_library(), build_trace(), admission, window=400_000, policy="dp",
+        n_drives=2, drive_costs=COSTS,
+    )
+    assert (_served_sha(report), report.total_sojourn) == (sha, total)
+    assert report.fault_stats is None
+    assert report.n_failed == 0
+    for key in ("faults", "n_failed", "n_faulted", "completion_rate"):
+        assert key not in report.summary()
+
+
+@pytest.mark.parametrize("admission", ["accumulate", "batched", "preempt"])
+def test_retry_policy_alone_is_invisible(admission):
+    """A RetryPolicy without faults must not perturb a single integer."""
+    sha, total = NO_FAULT_BASELINE[admission]
+    report = serve_trace(
+        build_library(), build_trace(), admission, window=400_000, policy="dp",
+        n_drives=2, drive_costs=COSTS,
+        retry=RetryPolicy(max_attempts=5, backoff_base=123),
+    )
+    assert (_served_sha(report), report.total_sojourn) == (sha, total)
+    # the policy was given, so the stats block appears -- and is all zero
+    assert report.fault_stats == {
+        "drive_failures": 0, "mount_retries": 0, "media_aborts": 0,
+        "solver_faults": 0, "fallbacks": 0, "requeued": 0, "retry_delay": 0,
+    }
+    assert report.summary()["completion_rate"] == 1.0
+
+
+def test_empty_plan_is_fault_free():
+    a = serve_small()
+    b = serve_small(faults=FaultPlan())
+    assert _timeline(a) == _timeline(b)
+    assert b.fault_stats is None
+
+
+# ---------------------------------------------------------------------------
+# seeded profiles: nothing vanishes, runs are deterministic
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", [
+    "fifo", "accumulate", "preempt", "fifo-global", "per-drive-accumulate",
+    "batched",
+])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_seeded_profile_conserves_requests(admission, seed):
+    trace = small_trace()
+    plan = seeded_fault_plan(small_library(), trace, seed=seed, n_drives=2)
+    assert plan  # non-empty by construction on this library
+    report = serve_small(admission, trace=trace, faults=plan,
+                         retry=RetryPolicy(on_exhausted="drop"))
+    assert report.n_served + report.n_failed == len(trace)
+    assert {f.reason for f in report.failed} <= {
+        "mount-failed", "media-error", "drive-failure", "solver-failed",
+        "no-drive",
+    }
+    stats = report.fault_stats
+    assert stats is not None and stats["drive_failures"] >= 1
+    # determinism: the same plan replays bit-identically
+    again = serve_small(admission, trace=small_trace(),
+                        faults=seeded_fault_plan(
+                            small_library(), small_trace(), seed=seed, n_drives=2),
+                        retry=RetryPolicy(on_exhausted="drop"))
+    assert _timeline(again) == _timeline(report)
+    assert again.fault_stats == stats
+
+
+def test_seeded_profile_with_failover_serves_everything():
+    trace = small_trace()
+    plan = seeded_fault_plan(small_library(), trace, seed=3, n_drives=2)
+    report = serve_small(trace=trace, faults=plan, retry=RetryPolicy())
+    assert report.n_served == len(trace) and report.n_failed == 0
+    assert report.completion_rate == 1.0
+    assert report.n_faulted >= 1  # retried/requeued requests are flagged
+    s = report.summary()
+    assert s["completion_rate"] == 1.0 and s["faults"] == report.fault_stats
+
+
+# ---------------------------------------------------------------------------
+# drive hard-failure: failover, requeue order, all-drives-dead
+# ---------------------------------------------------------------------------
+def _first_service_start(report):
+    b = report.batches[0]
+    return b.dispatched + b.mount_delay
+
+
+def test_drive_failover_requeues_and_remounts():
+    trace = small_trace()
+    base = serve_small(trace=trace)
+    # fail drive 0 mid-flight through its first batch
+    at = _first_service_start(base) + 1
+    plan = FaultPlan(drive_failures=(DriveFailure(at=at, drive=0),))
+    report = serve_small(trace=small_trace(), faults=plan, retry=RetryPolicy())
+    assert report.n_served == len(trace) and report.n_failed == 0
+    aborted = [b for b in report.batches if b.aborted_by == "drive-failure"]
+    assert len(aborted) == 1 and aborted[0].drive == 0
+    assert report.fault_stats["drive_failures"] == 1
+    assert report.fault_stats["requeued"] >= 1
+    # the aborted cartridge was re-served on the surviving drive
+    retried = [b for b in report.batches
+               if b.tape_id == aborted[0].tape_id and b.dispatched >= at]
+    assert retried and all(b.drive == 1 for b in retried)
+    assert all(b.drive == 1 for b in report.batches if b.dispatched >= at)
+    # requeued survivors are flagged
+    requeued_ids = {r.req_id for r in report.served if r.faulted}
+    assert requeued_ids
+
+
+def test_drive_failover_requeue_order_deterministic():
+    trace = small_trace()
+    at = _first_service_start(serve_small(trace=trace)) + 1
+    plan = FaultPlan(drive_failures=(DriveFailure(at=at, drive=0),))
+    runs = [serve_small(trace=small_trace(), faults=plan, retry=RetryPolicy())
+            for _ in range(2)]
+    assert _timeline(runs[0]) == _timeline(runs[1])
+    # requeued requests keep original arrivals: batches stay arrival-sorted
+    # within each cartridge after the failure
+    for rep in runs:
+        for r in rep.served:
+            assert r.dispatched >= r.arrival
+
+
+def test_all_drives_failed_raises_typed_with_queues_intact():
+    trace = small_trace()
+    plan = FaultPlan(drive_failures=(
+        DriveFailure(at=1, drive=0), DriveFailure(at=1, drive=1),
+    ))
+    with pytest.raises(NoDriveAvailableError) as err:
+        serve_small(trace=trace, faults=plan, retry=RetryPolicy())
+    assert err.value.n_queued > 0
+
+
+def test_all_drives_failed_drop_records_typed_failures():
+    trace = small_trace()
+    plan = FaultPlan(drive_failures=(
+        DriveFailure(at=1, drive=0), DriveFailure(at=1, drive=1),
+    ))
+    report = serve_small(trace=trace, faults=plan,
+                         retry=RetryPolicy(on_exhausted="drop"))
+    assert report.n_served == 0
+    assert report.n_failed == len(trace)
+    assert all(f.reason in ("drive-failure", "no-drive") for f in report.failed)
+    assert report.completion_rate == 0.0
+    # failures are deterministic and ordered by (arrival, req_id)
+    ids = [f.req_id for f in report.failed]
+    assert ids == sorted(ids)
+
+
+def test_fail_stop_drops_inflight_survivors():
+    trace = small_trace()
+    at = _first_service_start(serve_small(trace=trace)) + 1
+    plan = FaultPlan(drive_failures=(DriveFailure(at=at, drive=0),))
+    report = serve_small(trace=small_trace(), faults=plan, retry=FAIL_STOP)
+    assert report.n_failed >= 1
+    assert all(f.reason == "drive-failure" for f in report.failed)
+    assert report.n_served + report.n_failed == len(trace)
+    assert report.fault_stats["requeued"] == 0
+
+
+def test_plan_failing_unknown_drive_rejected():
+    plan = FaultPlan(drive_failures=(DriveFailure(at=1, drive=7),))
+    with pytest.raises(ValueError, match="fails drive 7"):
+        serve_small(faults=plan)
+
+
+# ---------------------------------------------------------------------------
+# transient mount failures: exact backoff, exhaustion
+# ---------------------------------------------------------------------------
+def test_mount_retry_charges_exact_backoff():
+    trace = small_trace()
+    base = serve_small(trace=trace)
+    tid = base.batches[0].tape_id
+    retry = RetryPolicy(backoff_base=10_000, backoff_factor=2)
+    plan = FaultPlan(mount_faults=(MountFault(tid, count=2),))
+    report = serve_small(trace=small_trace(), faults=plan, retry=retry)
+    assert report.n_served == len(trace)
+    first = report.batches[0]
+    assert first.tape_id == tid and first.mount_retries == 2
+    # two failed attempts charge backoff(1) + backoff(2) = 30_000 exactly
+    assert first.mount_delay == base.batches[0].mount_delay + 30_000
+    assert report.fault_stats["mount_retries"] == 2
+    assert report.fault_stats["retry_delay"] == 30_000
+    # every request of the delayed batch is attributed as faulted
+    flagged = {r.req_id for r in report.served if r.faulted}
+    assert flagged
+
+
+def test_mount_exhaustion_raises_typed():
+    trace = small_trace()
+    tid = serve_small(trace=trace).batches[0].tape_id
+    plan = FaultPlan(mount_faults=(MountFault(tid, count=99),))
+    with pytest.raises(MountFailedError) as err:
+        serve_small(trace=small_trace(), faults=plan,
+                    retry=RetryPolicy(mount_attempts=2))
+    assert err.value.tape_id == tid and err.value.attempts == 2
+
+
+def test_mount_exhaustion_drop_records_failures():
+    trace = small_trace()
+    tid = serve_small(trace=trace).batches[0].tape_id
+    plan = FaultPlan(mount_faults=(MountFault(tid, count=99),))
+    report = serve_small(trace=small_trace(), faults=plan,
+                         retry=RetryPolicy(mount_attempts=2,
+                                           on_exhausted="drop"))
+    dropped = [f for f in report.failed if f.reason == "mount-failed"]
+    assert dropped and all(f.tape_id == tid for f in dropped)
+    assert report.n_served + report.n_failed == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# media faults: abort at the touch instant, retry, exhaustion
+# ---------------------------------------------------------------------------
+def _whole_tape_fault(library, tape_id, count=1):
+    tape = next(t for t in library.tapes if t.tape_id == tape_id)
+    return MediaFault(tape_id, 0, tape.used, count=count)
+
+
+def test_media_fault_aborts_and_retries():
+    trace = small_trace()
+    base = serve_small(trace=trace)
+    tid = base.batches[0].tape_id
+    plan = FaultPlan(media_faults=(_whole_tape_fault(small_library(), tid),))
+    report = serve_small(trace=small_trace(), faults=plan, retry=RetryPolicy())
+    assert report.n_served == len(trace) and report.n_failed == 0
+    aborted = [b for b in report.batches if b.aborted_by == "media-error"]
+    assert len(aborted) == 1 and aborted[0].tape_id == tid
+    assert report.fault_stats["media_aborts"] == 1
+    assert report.fault_stats["retry_delay"] >= 10_000  # backoff charged
+    # the retry read happened on the same cartridge, later
+    assert any(b.tape_id == tid and b.dispatched > aborted[0].dispatched
+               for b in report.batches)
+
+
+def test_media_exhaustion_raises_typed():
+    trace = small_trace()
+    tid = serve_small(trace=trace).batches[0].tape_id
+    plan = FaultPlan(
+        media_faults=(_whole_tape_fault(small_library(), tid, count=99),)
+    )
+    with pytest.raises(MediaReadError) as err:
+        serve_small(trace=small_trace(), faults=plan,
+                    retry=RetryPolicy(media_attempts=2))
+    assert err.value.span[0] == tid
+
+
+def test_media_exhaustion_drop_records_failures():
+    trace = small_trace()
+    tid = serve_small(trace=trace).batches[0].tape_id
+    plan = FaultPlan(
+        media_faults=(_whole_tape_fault(small_library(), tid, count=99),)
+    )
+    report = serve_small(trace=small_trace(), faults=plan,
+                         retry=RetryPolicy(media_attempts=2,
+                                           on_exhausted="drop"))
+    assert any(f.reason == "media-error" for f in report.failed)
+    assert report.n_served + report.n_failed == len(trace)
+
+
+def test_media_abort_lands_inside_service_window():
+    trace = small_trace()
+    base = serve_small(trace=trace)
+    tid = base.batches[0].tape_id
+    plan = FaultPlan(media_faults=(_whole_tape_fault(small_library(), tid),))
+    report = serve_small(trace=small_trace(), faults=plan, retry=RetryPolicy())
+    aborted = next(b for b in report.batches if b.aborted_by == "media-error")
+    # completions standing on the aborted batch all precede the retry batch
+    assert aborted.n_completed < aborted.n_requests or aborted.n_requests == 0
+
+
+# ---------------------------------------------------------------------------
+# solver degradation chain (engine level)
+# ---------------------------------------------------------------------------
+def test_degradation_chain_suffixes():
+    assert DEGRADATION_CHAIN == ("pallas", "pallas-interpret", "python")
+    assert degraded_backends("pallas") == DEGRADATION_CHAIN
+    assert degraded_backends("python") == ("python",)
+    with pytest.raises(ValueError):
+        degraded_backends("cuda")
+
+
+class _FailTiers:
+    """fault_hook failing given backends a fixed number of times."""
+
+    def __init__(self, budget):
+        self.budget = dict(budget)
+        self.calls = []
+
+    def __call__(self, backend):
+        self.calls.append(backend)
+        if self.budget.get(backend, 0) > 0:
+            self.budget[backend] -= 1
+            raise TransientSolverError(backend)
+
+
+def test_degraded_solve_is_bit_identical_to_fallback_tier(rng):
+    for _ in range(5):
+        inst = random_instance(rng, lo=3, hi=12)
+        direct = solve(inst, "dp", context=ExecutionContext(backend="python"))
+        hook = _FailTiers({"pallas-interpret": 1})
+        res, warm, stats, rec = solve_warm_degraded(
+            inst, "dp", context=ExecutionContext(backend="pallas-interpret"),
+            warm=None, fault_hook=hook,
+        )
+        assert rec.requested == "pallas-interpret" and rec.used == "python"
+        assert rec.fell_back and rec.n_faults == 1
+        assert warm is None  # warm state never survives a fault
+        assert (res.cost, tuple(map(tuple, res.detours))) == (
+            direct.cost, tuple(map(tuple, direct.detours))
+        )
+
+
+def test_degraded_retry_same_tier_without_fallback(rng):
+    inst = random_instance(rng, lo=3, hi=10)
+    hook = _FailTiers({"python": 1})
+    res, warm, stats, rec = solve_warm_degraded(
+        inst, "dp", context=ExecutionContext(backend="python"),
+        warm=None, fault_hook=hook, attempts_per_backend=2,
+    )
+    assert not rec.fell_back and rec.used == "python"
+    assert rec.failed == ("python",) and rec.n_faults == 1
+    direct = solve(inst, "dp", context=ExecutionContext(backend="python"))
+    assert res.cost == direct.cost
+
+
+def test_degraded_exhaustion_raises_typed(rng):
+    inst = random_instance(rng, lo=3, hi=8)
+    hook = _FailTiers({"python": 99})
+    with pytest.raises(SolverUnavailableError) as err:
+        solve_warm_degraded(
+            inst, "dp", context=ExecutionContext(backend="python"),
+            warm=None, fault_hook=hook, attempts_per_backend=3,
+        )
+    assert err.value.failed == ("python", "python", "python")
+
+
+@pytest.mark.parametrize("admission", ["accumulate", "batched"])
+def test_server_solver_exhaustion_drops_or_raises(admission):
+    trace = small_trace()
+    plan = FaultPlan(solver_faults=(SolverFault("python", count=99),))
+    # drop policy: the faulted tick's requests become typed failures
+    report = serve_small(admission, trace=trace, faults=plan, retry=FAIL_STOP)
+    dropped = [f for f in report.failed if f.reason == "solver-failed"]
+    assert dropped
+    assert report.n_served + report.n_failed == len(trace)
+    # error policy: the typed chain-exhaustion error surfaces
+    with pytest.raises(SolverUnavailableError):
+        serve_small(admission, trace=small_trace(), faults=plan,
+                    retry=RetryPolicy(solver_attempts=1))
+
+
+def test_server_solver_fault_degrades_bit_identically():
+    """A serving run whose solves fault lands the no-fault timeline."""
+    trace = small_trace()
+    base = serve_small(trace=trace)
+    plan = FaultPlan(solver_faults=(SolverFault("python", count=2),))
+    report = serve_small(trace=small_trace(), faults=plan, retry=RetryPolicy())
+    # solver retries are virtual-time-free: the timeline is bit-identical
+    assert [(r.req_id, r.arrival, r.dispatched, r.completed)
+            for r in report.served] == [
+        (r.req_id, r.arrival, r.dispatched, r.completed) for r in base.served
+    ]
+    assert report.fault_stats["solver_faults"] == 2
+
+
+# ---------------------------------------------------------------------------
+# QoS: failover keeps deadline accounting consistent, misses attributed
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", ["edf-global", "slack-accumulate"])
+def test_qos_failover_deadline_accounting(admission):
+    trace = small_trace()
+    qos = {r.req_id: QoSSpec(deadline=r.time + 2_000_000, qos_class="batch")
+           for r in trace}
+    base = serve_small(admission, trace=trace, qos=qos)
+    at = _first_service_start(base) + 1
+    plan = FaultPlan(drive_failures=(DriveFailure(at=at, drive=0),))
+    report = serve_small(admission, trace=small_trace(), qos=qos,
+                         faults=plan, retry=RetryPolicy())
+    assert report.n_served == len(trace)
+    slo = slo_report(report, qos)
+    base_slo = slo_report(base, qos)
+    # exact-int invariants hold under failover
+    assert slo.overall.n == len(trace)
+    assert slo.n_deadlines == len(trace)
+    assert 0 <= slo.n_missed_faulted <= slo.n_missed
+    assert slo.overall.total_lateness >= 0
+    # fault-caused misses are exactly the missed requests a fault touched
+    faulted = {r.req_id for r in report.served if r.faulted}
+    missed_faulted = sum(
+        1 for r in report.served
+        if r.completed > qos[r.req_id].deadline and r.req_id in faulted
+    )
+    assert slo.n_missed_faulted == missed_faulted
+    assert slo.summary()["n_missed_faulted"] == missed_faulted
+    # the no-fault run attributes nothing to faults
+    assert base_slo.n_missed_faulted == 0
+
+
+# ---------------------------------------------------------------------------
+# write-ahead journal: torn-tail recovery, bit-identical resume
+# ---------------------------------------------------------------------------
+def _run_with_journal(tmp_path, name, **kwargs):
+    path = tmp_path / name
+    report = serve_small(trace=small_trace(), journal=str(path), **kwargs)
+    return report, path
+
+
+def test_journal_recovery_bit_identical_at_every_cut(tmp_path):
+    full, path = _run_with_journal(tmp_path, "journal.jsonl")
+    data = path.read_bytes()
+    assert data.endswith(b"\n") and data.count(b"\n") >= 10
+    cuts = [0, 10, len(data) // 3, len(data) // 2, len(data) - 5, len(data)]
+    for cut in cuts:
+        p = tmp_path / f"cut{cut}.jsonl"
+        p.write_bytes(data[:cut])
+        report = recover_server(
+            small_library(), small_trace(), str(p),
+            admission="accumulate", window=200_000, n_drives=2,
+        )
+        assert _served_sha(report) == _served_sha(full), cut
+        assert report.total_sojourn == full.total_sojourn
+        assert p.read_bytes() == data, cut  # journal rebuilt byte-identically
+
+
+def test_journal_recovery_under_faults(tmp_path):
+    plan = seeded_fault_plan(small_library(), small_trace(), seed=3, n_drives=2)
+    full, path = _run_with_journal(tmp_path, "jf.jsonl",
+                                   faults=plan, retry=RetryPolicy())
+    data = path.read_bytes()
+    p = tmp_path / "jf_cut.jsonl"
+    p.write_bytes(data[: len(data) // 2])
+    report = recover_server(
+        small_library(), small_trace(), str(p),
+        admission="accumulate", window=200_000, n_drives=2,
+        faults=plan, retry=RetryPolicy(),
+    )
+    assert _timeline(report) == _timeline(full)
+    assert report.fault_stats == full.fault_stats
+    assert p.read_bytes() == data
+
+
+def test_journal_tolerates_torn_tail(tmp_path):
+    _, path = _run_with_journal(tmp_path, "torn.jsonl")
+    with open(path, "ab") as fh:
+        fh.write(b'{"ev": "torn-mid-wri')  # no newline: torn write
+    events = EventJournal.load(path)
+    assert events and events[-1]["ev"] == "end"
+
+
+def test_journal_stops_at_corrupt_interior_line(tmp_path):
+    _, path = _run_with_journal(tmp_path, "corrupt.jsonl")
+    lines = path.read_bytes().splitlines(keepends=True)
+    lines[3] = b"}}}not json{{{\n"
+    path.write_bytes(b"".join(lines))
+    events = EventJournal.load(path)
+    assert len(events) == 3  # the suffix past a tear is untrustworthy
+
+
+def test_journal_foreign_run_raises(tmp_path):
+    _, path = _run_with_journal(tmp_path, "foreign.jsonl")
+    other = poisson_trace(small_library(), n_requests=24,
+                          mean_interarrival=40_000, seed=99)
+    with pytest.raises(JournalReplayError):
+        recover_server(small_library(), other, str(path),
+                       admission="accumulate", window=200_000, n_drives=2)
+
+
+def test_journal_records_the_event_stream(tmp_path):
+    report, path = _run_with_journal(tmp_path, "stream.jsonl")
+    events = EventJournal.load(path)
+    kinds = [e["ev"] for e in events]
+    assert kinds[0] == "start" and kinds[-1] == "end"
+    assert kinds.count("enqueue") == 24
+    served = [r for e in events if e["ev"] == "serve" for r in e["reqs"]]
+    assert len(served) == report.n_served
+    end = events[-1]
+    assert end["n_served"] == report.n_served
+    assert end["total_sojourn"] == report.total_sojourn
+
+
+# ---------------------------------------------------------------------------
+# plan / injector unit behaviour
+# ---------------------------------------------------------------------------
+def test_fault_records_validate():
+    with pytest.raises(ValueError):
+        DriveFailure(at=-1, drive=0)
+    with pytest.raises(ValueError):
+        MountFault("T", count=0)
+    with pytest.raises(ValueError):
+        MediaFault("T", lo=5, hi=2)
+    with pytest.raises(ValueError):
+        SolverFault("python", count=0)
+    assert not FaultPlan()
+    assert FaultPlan(mount_faults=(MountFault("T"),))
+
+
+def test_injector_consumes_budgets():
+    plan = FaultPlan(
+        mount_faults=(MountFault("A", count=2),),
+        solver_faults=(SolverFault("python", count=1),),
+    )
+    inj = FaultInjector(plan)
+    assert inj.mount_fails("A") and inj.mount_fails("A")
+    assert not inj.mount_fails("A") and not inj.mount_fails("B")
+    assert inj.solver_fails("python") and not inj.solver_fails("python")
+    with pytest.raises(TransientSolverError):
+        FaultInjector(plan).solver_hook("python")
+    assert inj.remaining() == {"drive": 0, "mount": 0, "media": 0, "solver": 0}
+    assert inj.fired == {"drive": 0, "mount": 2, "media": 0, "solver": 1}
+
+
+def test_seeded_plan_is_deterministic_and_in_range():
+    trace = small_trace()
+    a = seeded_fault_plan(small_library(), trace, seed=5, n_drives=2)
+    b = seeded_fault_plan(small_library(), trace, seed=5, n_drives=2)
+    assert a == b
+    horizon = max(r.time for r in trace)
+    for f in a.drive_failures:
+        assert 0 <= f.drive < 2
+        assert horizon // 4 <= f.at <= (3 * horizon) // 4
+    assert seeded_fault_plan(
+        small_library(), trace, seed=5, n_drives=2, drive_failures=5
+    ).drive_failures.__len__() <= 2  # clamped to the pool
+
+
+def test_retry_policy_validates_and_computes():
+    p = RetryPolicy(backoff_base=100, backoff_factor=3)
+    assert p.backoff(1) == 100 and p.backoff(3) == 900
+    assert p.attempts("mount") == 3
+    assert RetryPolicy(media_attempts=7).attempts("media") == 7
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(on_exhausted="panic")
+    with pytest.raises(ValueError):
+        p.backoff(0)
+    assert FAIL_STOP.max_attempts == 1 and not FAIL_STOP.failover
