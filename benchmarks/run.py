@@ -33,6 +33,12 @@ Paper artefacts reproduced (on the synthetic IN2P3-calibrated dataset):
     fewer deadline misses than ``fifo-global`` at every swept tightness
     (exact virtual-time ints) — and the mount-scheduler sweep
     (greedy / lru / lookahead) on the constrained pool.
+  * ``bench_overload_serving``     — load-adaptive solver selection: arrival-
+    rate sweep (light -> overloaded) under a priced ``ComputeBudget``, fixed
+    dp/logdp1/nfgs arms vs the ``cost-model`` selector; asserts adaptation
+    never misses more deadlines than the best fixed policy at any swept
+    rate (exact virtual-time ints) and that the adaptive arm actually
+    switches policy across the sweep.
 
 All scheduling goes through the solver registry (``repro.core.solver``) under
 an ``ExecutionContext``; every reported cost is re-validated against the
@@ -986,6 +992,136 @@ def bench_online_serving(full: bool = False):
     return rows + pool_rows + qos_rows + sched_rows + avail_rows
 
 
+def bench_overload_serving(full: bool = False):
+    """Overload sweep: load-adaptive solver selection vs every fixed policy.
+
+    One seeded deadline-annotated trace per swept mean inter-arrival time
+    (light -> overloaded) is served on a constrained 2-drive pool with a
+    nonzero :class:`~repro.serving.drives.DriveCosts` model and a *priced*
+    :class:`~repro.core.ComputeBudget`: every DP cell evaluated by a solve
+    costs ``solve_time_num`` virtual-time units, so the exact DP's optimality
+    is no longer free — under load its solve latency eats the very slack it
+    optimises.  Four arms run on identical traces: three fixed policies
+    (``dp`` / ``logdp1`` / ``nfgs``, pinned via the ``fixed`` selector so
+    per-batch policy attribution lands in the record) and the ``cost-model``
+    adaptive selector, which predicts per-policy solve cost from queue depth
+    and the recorded per-tick timings and picks the strongest tier that fits
+    ``per_tick``.
+
+    Recorded assertion (exact integer virtual time, machine-independent):
+    at *every* swept rate the adaptive arm misses no more deadlines than the
+    best fixed policy at that rate — adaptation never costs you vs the best
+    static choice, even though which fixed policy is best flips across the
+    sweep (``dp`` wins light, ``nfgs`` wins loaded).  The adaptive arm must
+    also actually adapt: its per-batch policy mix spans >= 2 policies across
+    the sweep.  Solves run cold (``warm_start=False``): overload pressure
+    comes from full re-solves, and pricing identical cold solves keeps the
+    fixed arms like-for-like.  The workload is pinned (``--full`` does not
+    widen it): the never-worse bound is a *recorded* property of this seeded
+    trace + budget — the cost model carries no optimality guarantee, so the
+    assertion documents a calibrated operating point, not a theorem over
+    arbitrary workloads.
+    """
+    from repro.data.traces import qos_poisson_trace, to_requests
+    from repro.core import ComputeBudget
+    from repro.serving.drives import DriveCosts
+    from repro.serving.queue import serve_trace
+    from repro.serving.sim import demo_library
+
+    del full  # recorded assertion — workload pinned to the calibrated trace
+    seed = 20260731
+    n_requests = 240
+    n_files = 48
+
+    def build_library():
+        return demo_library(seed, n_files=n_files)
+
+    window = 400_000
+    tightness = 8_000_000
+    costs = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+    rates = (400_000, 200_000, 60_000, 25_000)  # mean inter-arrival: light -> overloaded
+    fixed_arms = ("dp", "logdp1", "nfgs")
+    # calibrated on the seeded trace: at 10_000 units/cell the exact DP's
+    # solve delay dominates under load; per_tick=120 cells is the knee where
+    # the cost model starts demoting it.  hysteresis=1 because each tick
+    # re-solves tiny instances from scratch — switching latency, not
+    # flapping, is what hurts in the overloaded regime.
+    budget = ComputeBudget(solve_time_num=10_000, per_tick=120, hysteresis=1)
+
+    overload_rows = []
+    headline = []
+    policies_used: set[str] = set()
+    for rate in rates:
+        recs = qos_poisson_trace(
+            build_library(), n_requests=n_requests,
+            mean_interarrival=rate, seed=seed, tightness=tightness,
+        )
+        qtrace, qos = to_requests(recs, build_library())
+        missed: dict[str, int] = {}
+        for arm, policy, selector in (
+            [(p, p, "fixed") for p in fixed_arms]
+            + [("adaptive", "dp", "cost-model")]
+        ):
+            lib = build_library()
+            ctx = lib.context.replace(budget=budget)
+            t0 = time.perf_counter()
+            report = serve_trace(
+                lib, qtrace, "slack-accumulate", window=window, qos=qos,
+                policy=policy, selector=selector, n_drives=2,
+                drive_costs=costs, context=ctx, warm_start=False,
+            )
+            dt = time.perf_counter() - t0
+            s = report.summary()
+            assert s["n_served"] == n_requests
+            missed[arm] = report.n_missed
+            if arm == "adaptive":
+                policies_used.update(report.policy_mix)
+            overload_rows.append({"rate": rate, "arm": arm, "wall_s": dt, **s})
+            _emit(
+                f"overload/{arm}/rate_{rate}",
+                dt * 1e6,
+                f"missed={report.n_missed}/{s['n_deadlines']};"
+                f"p99={s['p99_sojourn']:.4g};"
+                f"solve_delay={s['total_solve_delay']};"
+                f"mix={'+'.join(f'{k}:{v}' for k, v in sorted(s['policy_mix'].items()))}",
+            )
+        best_fixed = min(missed[p] for p in fixed_arms)
+        headline.append({
+            "rate": rate,
+            "adaptive_missed": missed["adaptive"],
+            "best_fixed_missed": best_fixed,
+            "fixed_missed": {p: missed[p] for p in fixed_arms},
+        })
+        assert missed["adaptive"] <= best_fixed, (
+            f"adaptive selection must never miss more deadlines than the "
+            f"best fixed policy: {missed['adaptive']} vs {best_fixed} "
+            f"(fixed arms { {p: missed[p] for p in fixed_arms} }) at rate {rate}"
+        )
+    assert len(policies_used) >= 2, (
+        f"the adaptive arm never switched policy across the sweep "
+        f"(used {sorted(policies_used)}); the budget no longer exercises it"
+    )
+
+    (RESULTS / "overload_serving.json").write_text(
+        json.dumps(overload_rows, indent=1)
+    )
+    RECORD["overload_serving"] = {
+        "seed": seed,
+        "n_requests": n_requests,
+        "window": window,
+        "tightness": tightness,
+        "rates": list(rates),
+        "budget": dataclasses.asdict(budget),
+        "costs": dataclasses.asdict(costs),
+        "selector": "cost-model",
+        "fixed_arms": list(fixed_arms),
+        "adaptive_policies_used": sorted(policies_used),
+        "headline": headline,
+        "rows": overload_rows,
+    }
+    return overload_rows
+
+
 def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
     """Compare a fresh record against a checked-in baseline snapshot.
 
@@ -1063,7 +1199,38 @@ def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
         f"{new_head['reduction']:.1%} (floor 30%, baseline "
         f"{base_head['reduction']:.1%})"
     )
-    return 0 if (new_speedup >= floor and warm_ok) else 1
+
+    # -- adaptation-never-worse gate (exact virtual-time deadline misses) ----
+    # Self-contained on the fresh record: the overload sweep's headline is
+    # deterministic given the seeded trace, so the gate re-checks the
+    # recorded assertion without needing the (possibly older) baseline to
+    # carry the section.  A baseline that *does* carry it while the fresh
+    # run doesn't means the bench silently stopped running — fail loudly.
+    overload_ok = True
+    new_over = record.get("overload_serving")
+    base_over = baseline.get("overload_serving")
+    if new_over is None and base_over is not None:
+        print("baseline check: missing overload_serving record (bench not run?)")
+        return 2
+    if new_over is not None:
+        worse = [
+            h for h in new_over["headline"]
+            if h["adaptive_missed"] > h["best_fixed_missed"]
+        ]
+        overload_ok = not worse and len(new_over["adaptive_policies_used"]) >= 2
+        print(
+            f"baseline check [{'OK' if overload_ok else 'REGRESSED'}]: "
+            f"adaptive selection vs best fixed policy at rates "
+            f"{new_over['rates']}: "
+            + "; ".join(
+                f"{h['adaptive_missed']}<={h['best_fixed_missed']}"
+                for h in new_over["headline"]
+            )
+            + f" missed deadlines; policies used "
+            f"{new_over['adaptive_policies_used']}"
+        )
+
+    return 0 if (new_speedup >= floor and warm_ok and overload_ok) else 1
 
 
 def main() -> None:
@@ -1072,7 +1239,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None, metavar="BENCH[,BENCH...]",
         help="run a subset of {profiles,time,kernel,batch,hetero,policies,"
-             "restore,online} (comma-separated)",
+             "restore,online,overload} (comma-separated)",
     )
     ap.add_argument(
         "--record", nargs="?", const="BENCH_pr2.json", default=None,
@@ -1095,6 +1262,7 @@ def main() -> None:
         "policies": bench_policy_backends,
         "restore": bench_tape_restore,
         "online": bench_online_serving,
+        "overload": bench_overload_serving,
     }
     selected = list(benches) if args.only is None else args.only.split(",")
     unknown = [s for s in selected if s not in benches]

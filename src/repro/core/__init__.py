@@ -10,8 +10,10 @@ is a thin read-only view over the registry; pre-context ``backend=``/
 """
 
 from .context import (
+    DEFAULT_BUDGET,
     DEFAULT_CONTEXT,
     NUMERIC_POLICIES,
+    ComputeBudget,
     ExecutionContext,
     resolve_context,
 )
@@ -35,12 +37,22 @@ from .heuristics import no_detour, gs, fgs, nfgs, lognfgs
 from .solver import (
     ALGORITHMS,
     BACKENDS,
+    DEFAULT_LADDER,
+    CostModelSelector,
+    DepthThresholdSelector,
+    FixedSelector,
+    LoadView,
     SolveCache,
     SolveResult,
     Solver,
+    SolverSelector,
     UnsupportedBackendError,
+    get_selector,
     get_solver,
+    list_selectors,
     list_solvers,
+    predict_cells,
+    register_selector,
     register_solver,
     solve,
     solve_batch,
@@ -54,6 +66,8 @@ __all__ = [
     "ExecutionContext",
     "DEFAULT_CONTEXT",
     "NUMERIC_POLICIES",
+    "ComputeBudget",
+    "DEFAULT_BUDGET",
     "resolve_context",
     "Instance",
     "make_instance",
@@ -91,4 +105,14 @@ __all__ = [
     "WarmState",
     "WarmStats",
     "ALGORITHMS",
+    "DEFAULT_LADDER",
+    "LoadView",
+    "SolverSelector",
+    "predict_cells",
+    "FixedSelector",
+    "DepthThresholdSelector",
+    "CostModelSelector",
+    "register_selector",
+    "get_selector",
+    "list_selectors",
 ]

@@ -22,7 +22,16 @@ a dozen signatures.  :class:`ExecutionContext` bundles all of it:
 * ``numeric_policy`` — what to do when an instance fails the int32 device
   magnitude guard *after* gcd/shift rescaling: ``"strict"`` raises (default),
   ``"f64"`` falls back to an exact float64 interpret-mode table for just the
-  failing instances (exact while every table value stays below 2**53).
+  failing instances (exact while every table value stays below 2**53);
+* ``budget`` — an optional :class:`ComputeBudget` making solver compute a
+  *priced* resource for the serving loop: how much virtual time one DP cell
+  costs (so dispatches charge their solve work into the timeline), the
+  per-tick cell budget a load-adaptive
+  :class:`~repro.core.solver.SolverSelector` plans against, the queue-depth
+  thresholds of the ``depth-threshold`` selector, and the hysteresis tick
+  count that keeps per-tick policy choices from flapping.  ``None``
+  (default) prices nothing and charges nothing — every pre-budget timeline
+  is reproduced bit for bit.
 
 Contexts are frozen: derive variants with :meth:`ExecutionContext.replace`::
 
@@ -51,6 +60,8 @@ __all__ = [
     "BACKENDS",
     "DEFAULT_BACKEND",
     "NUMERIC_POLICIES",
+    "ComputeBudget",
+    "DEFAULT_BUDGET",
     "ExecutionContext",
     "DEFAULT_CONTEXT",
     "resolve_context",
@@ -64,6 +75,72 @@ NUMERIC_POLICIES = ("strict", "f64")
 
 
 @dataclasses.dataclass(frozen=True)
+class ComputeBudget:
+    """Solver-compute accounting for the serving loop (exact virtual time).
+
+    The paper's exact DP costs minutes at realistic strata, so under load
+    the solver's own runtime is a service-time component.  A budget makes
+    that cost explicit in the one unit the rest of the repo asserts on —
+    exact integers of virtual time — via the DP *cell* counts every solve
+    already reports (:class:`~repro.core.warm.WarmStats`):
+
+    * ``solve_time_num`` / ``solve_time_den`` — virtual time charged per
+      evaluated DP cell, as an exact rational: a dispatch that evaluated
+      ``c`` cells delays its service start by ``c * num // den``.  The
+      default ``0/1`` charges nothing (timelines bit-identical to a
+      budget-less run).
+    * ``per_tick`` — DP-cell budget one dispatch tick may spend; the
+      ``cost-model`` :class:`~repro.core.solver.SolverSelector` picks the
+      most exact policy whose predicted cell count fits.  ``None`` leaves
+      the cost model unconstrained (it then always picks its most exact
+      tier).
+    * ``shallow_depth`` / ``deep_depth`` — queue-depth thresholds for the
+      ``depth-threshold`` selector: exact DP at or below ``shallow_depth``,
+      the cheapest tier at or above ``deep_depth``, the middle tier between.
+    * ``hysteresis`` — how many *consecutive* dispatch ticks a selector
+      must indicate a different policy before the serving loop switches to
+      it (1 = switch immediately); keeps the per-tick choice from flapping
+      when the queue depth oscillates around a threshold.
+    """
+
+    solve_time_num: int = 0
+    solve_time_den: int = 1
+    per_tick: int | None = None
+    shallow_depth: int = 4
+    deep_depth: int = 16
+    hysteresis: int = 2
+
+    def __post_init__(self) -> None:
+        if self.solve_time_num < 0:
+            raise ValueError("solve_time_num must be >= 0")
+        if self.solve_time_den < 1:
+            raise ValueError("solve_time_den must be >= 1")
+        if self.per_tick is not None and self.per_tick < 1:
+            raise ValueError("per_tick must be >= 1 (or None for unlimited)")
+        if not (1 <= self.shallow_depth <= self.deep_depth):
+            raise ValueError(
+                "need 1 <= shallow_depth <= deep_depth "
+                f"(got {self.shallow_depth} / {self.deep_depth})"
+            )
+        if self.hysteresis < 1:
+            raise ValueError("hysteresis must be >= 1 tick")
+
+    def charge(self, cells: int) -> int:
+        """Virtual time charged for ``cells`` evaluated DP cells (exact)."""
+        return cells * self.solve_time_num // self.solve_time_den
+
+    def replace(self, **changes) -> "ComputeBudget":
+        """A copy with the given fields changed (budgets are immutable)."""
+        return dataclasses.replace(self, **changes)
+
+
+#: The default budget selectors fall back on when the context carries none:
+#: free compute (no solve-time charge), unlimited per-tick cells, and the
+#: stock depth thresholds / 2-tick hysteresis.
+DEFAULT_BUDGET = ComputeBudget()
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionContext:
     """Immutable bundle of execution options for the scheduling API."""
 
@@ -72,6 +149,7 @@ class ExecutionContext:
     bucketed: bool = True
     cand_tile: int | None = None
     numeric_policy: str = "strict"
+    budget: ComputeBudget | None = None
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -85,6 +163,8 @@ class ExecutionContext:
             )
         if self.cand_tile is not None and self.cand_tile < 1:
             raise ValueError("cand_tile must be >= 1 (or None for the default)")
+        if self.budget is not None and not isinstance(self.budget, ComputeBudget):
+            raise TypeError(f"budget must be a ComputeBudget, got {self.budget!r}")
 
     def replace(self, **changes) -> "ExecutionContext":
         """A copy with the given fields changed (contexts are immutable)."""

@@ -120,6 +120,33 @@ added/completed/aborted) and the DP re-evaluates only the invalidated cells
 returned :class:`~repro.core.warm.WarmStats`.  Policies advertise support
 via ``Solver.supports_warm`` (the DP family: ``dp``/``logdp*``); unsupported
 policies fall back to a plain full solve with ``mode="unsupported"``.
+
+Load-adaptive solver selection (``SolverSelector``)
+---------------------------------------------------
+Under heavy traffic the exact DP's own runtime becomes a service-time
+component (the paper's DP costs minutes at the median CC-IN2P3 stratum), and
+the approximate-sequencing quality bounds justify degrading to restricted DP
+or heuristics while queues are deep.  A :class:`SolverSelector` is consulted
+by :class:`~repro.serving.queue.OnlineTapeServer` at every dispatch tick with
+a :class:`LoadView` (queue depth, batch size, recorded per-policy solve
+timings) and the context's :class:`~repro.core.context.ComputeBudget`, and
+answers with the policy to solve that tick with — or ``None`` to keep the
+server's configured policy.  Three selectors are registered:
+
+* ``"fixed"`` — always the server's configured policy (the adaptive plumbing
+  with adaptation turned off; bit-identical to no selector at all);
+* ``"depth-threshold"`` — walks :data:`DEFAULT_LADDER` (``dp`` → ``logdp1``
+  → ``nfgs``) by queue depth against ``budget.shallow_depth`` /
+  ``budget.deep_depth``;
+* ``"cost-model"`` — predicts each ladder tier's DP-cell cost for the tick's
+  batch size via :func:`predict_cells` (observed cells-per-``n³`` from the
+  run's own solve timings, with analytic priors before any observation) and
+  picks the most exact tier that fits ``budget.per_tick``.
+
+The *server* applies ``budget.hysteresis`` (a tier must win that many
+consecutive ticks before the active policy switches), so selectors stay
+stateless and replayable.  Register custom selectors with
+:func:`register_selector`; ``list_selectors()`` enumerates.
 """
 
 from __future__ import annotations
@@ -133,7 +160,9 @@ from typing import Callable, Protocol, runtime_checkable
 from .context import (
     BACKENDS,
     DEFAULT_BACKEND,
+    DEFAULT_BUDGET,
     DEFAULT_CONTEXT,
+    ComputeBudget,
     ExecutionContext,
     resolve_context,
 )
@@ -171,6 +200,16 @@ __all__ = [
     "solve_warm_degraded",
     "solve_batch_warm_degraded",
     "ALGORITHMS",
+    "DEFAULT_LADDER",
+    "LoadView",
+    "SolverSelector",
+    "predict_cells",
+    "FixedSelector",
+    "DepthThresholdSelector",
+    "CostModelSelector",
+    "register_selector",
+    "get_selector",
+    "list_selectors",
 ]
 
 
@@ -1068,3 +1107,208 @@ class _AlgorithmsView(Mapping):
 
 
 ALGORITHMS = _AlgorithmsView()
+
+
+# ---------------------------------------------------------------------------
+# Load-adaptive solver selection
+# ---------------------------------------------------------------------------
+
+#: Exactness ladder the built-in adaptive selectors walk, most exact first:
+#: the paper's optimal DP, the log-span restricted DP, then the corrected
+#: non-atomic filtered-greedy heuristic (cells-free).  Bachmat's
+#: expected-tour-length asymptotics order these by cost as ~n^3 / ~n^2 log n
+#: / ~n log n, which is exactly the shape :func:`predict_cells` assumes
+#: before a run has recorded its own timings.
+DEFAULT_LADDER = ("dp", "logdp1", "nfgs")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadView:
+    """What a :class:`SolverSelector` sees at one dispatch tick.
+
+    Built by the serving loop just before it solves a batch; selectors must
+    treat it as read-only.  ``timings`` maps policy name to the run's
+    accumulated ``(cells_evaluated, n_cubed)`` totals over real (non-cache)
+    solves, the empirical basis for :func:`predict_cells`.
+    """
+
+    depth: int  #: queued requests behind this dispatch, incl. the batch
+    n_requests: int  #: requests in the batch about to be solved
+    now: int = 0  #: virtual time of the tick
+    timings: Mapping[str, tuple[int, int]] = dataclasses.field(
+        default_factory=dict
+    )  #: policy -> (total cells evaluated, total n^3) observed this run
+
+
+@runtime_checkable
+class SolverSelector(Protocol):
+    """Per-tick policy chooser for the serving loop.
+
+    ``select`` answers with a registered policy name — or ``None`` to keep
+    the server's configured policy.  Selectors are stateless: hysteresis
+    (``budget.hysteresis`` consecutive ticks before a switch takes effect)
+    is applied by the server so recovery replays re-derive identical
+    choices from the journal alone.
+    """
+
+    name: str
+    description: str
+    ladder: tuple[str, ...]
+
+    def select(
+        self, view: LoadView, budget: ComputeBudget
+    ) -> str | None: ...
+
+
+def predict_cells(
+    policy: str,
+    n_requests: int,
+    timings: Mapping[str, tuple[int, int]] | None = None,
+) -> int:
+    """Predicted DP cells a ``policy`` solve of ``n_requests`` will evaluate.
+
+    With an observation for the policy in ``timings`` (accumulated
+    ``(cells, n^3)`` totals from this run's real solves), scales the
+    observed cells-per-``n^3`` ratio to the new size — exact integer
+    arithmetic, ``cells * n^3 // observed_cubes``.  Without one, falls back
+    to analytic priors by solver kind: heuristics evaluate no DP cells,
+    restricted DP is ~``n^2 log n``, exact DP is ``n^3``.
+    """
+    solver = get_solver(policy)
+    n = max(0, n_requests)
+    if timings:
+        observed = timings.get(solver.name)
+        if observed is not None:
+            cells, cubes = observed
+            if cubes > 0:
+                return cells * n**3 // cubes
+    if solver.kind == "heuristic":
+        return 0
+    if solver.kind == "restricted-dp":
+        return n * n * max(1, n.bit_length())
+    return n**3
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSelector:
+    """Always the same policy (``None`` = the server's configured one).
+
+    The adaptive plumbing with adaptation turned off: with ``policy=None``
+    every tick keeps the server's policy, so timelines are bit-identical to
+    running with no selector at all — the control arm of the overload sweep.
+    """
+
+    policy: str | None = None
+    name: str = "fixed"
+    description: str = "always the server's configured policy"
+
+    def __post_init__(self) -> None:
+        if self.policy is not None:
+            get_solver(self.policy)  # raises KeyError on unknown policies
+
+    @property
+    def ladder(self) -> tuple[str, ...]:
+        return (self.policy,) if self.policy is not None else ()
+
+    def select(self, view: LoadView, budget: ComputeBudget) -> str | None:
+        return self.policy
+
+
+def _check_ladder(ladder: tuple[str, ...]) -> tuple[str, ...]:
+    ladder = tuple(ladder)
+    if not ladder:
+        raise ValueError("selector ladder must name at least one policy")
+    for p in ladder:
+        get_solver(p)  # raises KeyError on unknown policies
+    return ladder
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthThresholdSelector:
+    """Walk the ladder by queue depth against the budget's thresholds.
+
+    Depth at or below ``budget.shallow_depth`` plays the most exact tier,
+    at or above ``budget.deep_depth`` the cheapest, in between the middle
+    tier.  Crude but dependency-free: no timing observations needed.
+    """
+
+    ladder: tuple[str, ...] = DEFAULT_LADDER
+    name: str = "depth-threshold"
+    description: str = "exact DP when shallow, cheaper tiers as depth grows"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "ladder", _check_ladder(self.ladder))
+
+    def select(self, view: LoadView, budget: ComputeBudget) -> str | None:
+        if view.depth <= budget.shallow_depth:
+            return self.ladder[0]
+        if view.depth >= budget.deep_depth:
+            return self.ladder[-1]
+        return self.ladder[len(self.ladder) // 2]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelSelector:
+    """Most exact ladder tier whose predicted cell cost fits the budget.
+
+    Estimates each tier's solve cost for the tick's batch size with
+    :func:`predict_cells` — the run's own recorded solve timings once any
+    exist, analytic priors before that — and returns the first (most exact)
+    tier at or under ``budget.per_tick`` cells.  An unlimited budget
+    (``per_tick=None``) always picks the most exact tier; if no tier fits,
+    the cheapest is returned rather than refusing to serve.
+    """
+
+    ladder: tuple[str, ...] = DEFAULT_LADDER
+    name: str = "cost-model"
+    description: str = "most exact policy whose predicted cells fit per_tick"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "ladder", _check_ladder(self.ladder))
+
+    def select(self, view: LoadView, budget: ComputeBudget) -> str | None:
+        if budget.per_tick is None:
+            return self.ladder[0]
+        for policy in self.ladder:
+            if predict_cells(policy, view.n_requests, view.timings) <= budget.per_tick:
+                return policy
+        return self.ladder[-1]
+
+
+_SELECTORS: "OrderedDict[str, SolverSelector]" = OrderedDict()
+
+
+def register_selector(selector: SolverSelector, *, replace: bool = False) -> None:
+    """Add a selector to the registry (``replace=True`` to overwrite)."""
+    name = getattr(selector, "name", "")
+    if not name or not isinstance(name, str):
+        raise ValueError(f"selector must carry a non-empty string name: {selector!r}")
+    if not replace and name in _SELECTORS:
+        raise ValueError(
+            f"selector {name!r} is already registered (pass replace=True)"
+        )
+    _SELECTORS[name] = selector
+
+
+def get_selector(name: "str | SolverSelector") -> SolverSelector:
+    """Look up a registered selector by name (instances pass through)."""
+    if not isinstance(name, str):
+        if isinstance(name, SolverSelector):
+            return name
+        raise TypeError(f"not a selector name or SolverSelector: {name!r}")
+    try:
+        return _SELECTORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown selector {name!r}; choose from {list_selectors()}"
+        ) from None
+
+
+def list_selectors() -> tuple[str, ...]:
+    """Registered selector names, in registration order."""
+    return tuple(_SELECTORS)
+
+
+register_selector(FixedSelector())
+register_selector(DepthThresholdSelector())
+register_selector(CostModelSelector())

@@ -52,6 +52,16 @@ table gains deadline-miss columns, and ``--slo-target RATE`` turns the run
 into a check: exit status 1 unless some swept admission meets the target
 miss rate.
 
+**Load-adaptive solver selection** — ``--tape-selector`` (any of
+``repro.core.list_selectors()``: ``fixed`` / ``depth-threshold`` /
+``cost-model``) lets the server re-pick the solve policy *each tick* from
+queue depth and recorded per-tick solve timings instead of pinning
+``--tape-policy`` for the whole run: exact DP when queues are shallow,
+restricted DP / heuristics as depth grows.  ``--tape-budget CELLS`` sets
+the per-tick DP cell budget the ``cost-model`` selector fits under
+(:class:`~repro.core.ComputeBudget`).  The table gains a ``policy_mix``
+column showing how many batches each policy actually planned.
+
 **Warm starts & persistent caching** — re-solving admissions warm-start
 each cartridge's DP from the previous tick's table by default
 (bit-identical schedules, fewer DP cells evaluated; disable with
@@ -92,7 +102,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, reduced
-from ..core.solver import BACKENDS, DEFAULT_BACKEND, ExecutionContext, list_solvers
+from ..core.context import ComputeBudget
+from ..core.solver import (
+    BACKENDS,
+    DEFAULT_BACKEND,
+    ExecutionContext,
+    list_selectors,
+    list_solvers,
+)
 from ..distributed.context import set_active_mesh
 from ..distributed.sharding import cache_pspecs, param_pspecs, to_shardings
 from ..models.model import init_cache, init_model
@@ -262,20 +279,28 @@ def _serve_tape_queue(args) -> int:
         f"scheduler {args.tape_scheduler}, policy {args.tape_policy}/"
         f"{args.tape_backend}, warm start "
         f"{'off' if args.no_tape_warm else 'on'}"
+        + (f", selector {args.tape_selector}"
+           f"{f' (budget {args.tape_budget} cells/tick)' if args.tape_budget else ''}"
+           if args.tape_selector else "")
     )
     deadline_cols = ",missed,miss_rate" if qos else ""
     fault_cols = ",completed,failed,requeued" if faults is not None else ""
+    selector_cols = ",policy_mix" if args.tape_selector else ""
     print("admission,window,mean_sojourn,p50_sojourn,p95_sojourn,batches,"
-          f"preempts,mounts,cache_hits,cells,reused{deadline_cols}{fault_cols}")
+          f"preempts,mounts,cache_hits,cells,reused"
+          f"{deadline_cols}{fault_cols}{selector_cols}")
     best_miss_rate = None
     for admission in admissions:
         lib = build_library()
         ctx = lib.context.replace(backend=args.tape_backend)
         if journal is not None:
             ctx = ctx.replace(cache=journal)
+        if args.tape_budget is not None:
+            ctx = ctx.replace(budget=ComputeBudget(per_tick=args.tape_budget))
         common = dict(
             window=args.tape_window if admission in WINDOWED_ADMISSIONS else 0,
             policy=args.tape_policy,
+            selector=args.tape_selector,
             n_drives=n_drives,
             drive_costs=costs,
             qos=qos or None,
@@ -310,6 +335,10 @@ def _serve_tape_queue(args) -> int:
             extra += (
                 f",{report.n_served}/{len(trace)},{report.n_failed},"
                 f"{s['faults']['requeued']}"
+            )
+        if args.tape_selector:
+            extra += "," + "+".join(
+                f"{p}:{n}" for p, n in sorted(s["policy_mix"].items())
             )
         print(
             f"{admission},{s['window']},{s['mean_sojourn']:.4g},"
@@ -354,6 +383,15 @@ def main() -> None:
                          "(admission-policy comparison) instead of model serving")
     ap.add_argument("--tape-admission", default="all",
                     choices=[*ADMISSIONS, "all"])
+    ap.add_argument("--tape-selector", default=None,
+                    choices=list_selectors(),
+                    help="load-adaptive solver selection: re-pick the solve "
+                         "policy each tick from queue depth / recorded solve "
+                         "timings (unset = pin --tape-policy, bit-identical "
+                         "to previous behaviour)")
+    ap.add_argument("--tape-budget", type=int, default=None, metavar="CELLS",
+                    help="per-tick DP cell budget the 'cost-model' selector "
+                         "fits under (repro.core.ComputeBudget.per_tick)")
     ap.add_argument("--tape-scheduler", default="greedy",
                     choices=sorted(MOUNT_SCHEDULERS),
                     help="drive-pool mount/eviction scheduler")

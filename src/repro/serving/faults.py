@@ -395,8 +395,14 @@ class EventJournal:
                 ev = json.loads(line)
                 if not isinstance(ev, dict) or "ev" not in ev:
                     raise ValueError("not an event object")
-            except (ValueError, UnicodeDecodeError):
-                break  # corrupt interior line: the suffix is untrustworthy
+            except (ValueError, UnicodeDecodeError, RecursionError):
+                # corrupt interior line: the suffix is untrustworthy.  A
+                # *newline-terminated* garbage line (half-flushed, then
+                # padded by the crash) must truncate like a torn tail, not
+                # raise — json.loads escalates pathological bytes (e.g. a
+                # deeply nested "[[[[…" run) to RecursionError, not just
+                # ValueError
+                break
             events.append(ev)
             valid = pos
         return events, valid

@@ -97,21 +97,30 @@ def int_quantile(values: Iterable[int], num: int, den: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ClassSLO:
-    """SLO aggregates for one QoS class (all virtual-time ints exact)."""
+    """SLO aggregates for one QoS class (all virtual-time ints exact).
+
+    ``n_deadlines``/``n_missed`` count *dropped* deadline-carrying requests
+    too: a request the fault layer dropped never completes, which is the
+    definitive way to miss a deadline — before this accounting a class whose
+    deadline work was entirely dropped vanished from the report with a
+    vacuous 0.0 miss rate.  Dropped requests have no completion instant, so
+    they contribute to no sojourn quantile or lateness aggregate.
+    """
 
     qos_class: str
     n: int  # served requests in this class
-    p50_sojourn: int  # nearest-rank, exact
-    p99_sojourn: int  # nearest-rank, exact
-    n_deadlines: int  # requests that carried a deadline
-    n_missed: int  # completed strictly after their deadline
-    total_lateness: int  # sum of max(0, completed - deadline)
+    p50_sojourn: int  # nearest-rank, exact (over served requests)
+    p99_sojourn: int  # nearest-rank, exact (over served requests)
+    n_deadlines: int  # requests that carried a deadline (served + dropped)
+    n_missed: int  # completed strictly after their deadline, or dropped
+    total_lateness: int  # sum of max(0, completed - deadline); served only
     max_lateness: int
     n_missed_faulted: int = 0  # misses on requests a fault touched (retry/requeue)
+    n_failed: int = 0  # requests the fault layer dropped (never completed)
 
     @property
     def miss_rate(self) -> float:
-        """Fraction of deadline-carrying requests served late (0.0 if none)."""
+        """Fraction of deadline-carrying requests late or dropped (0.0 if none)."""
         return self.n_missed / self.n_deadlines if self.n_deadlines else 0.0
 
 
@@ -147,6 +156,11 @@ class SLOReport:
         """Deadline misses on requests that a fault touched (retry/requeue)."""
         return self.overall.n_missed_faulted
 
+    @property
+    def n_failed(self) -> int:
+        """Requests the fault layer dropped (deadline-carrying ones count missed)."""
+        return self.overall.n_failed
+
     def for_class(self, qos_class: str) -> ClassSLO:
         for c in self.classes:
             if c.qos_class == qos_class:
@@ -162,6 +176,7 @@ class SLOReport:
             "n_deadlines": self.n_deadlines,
             "n_missed": self.n_missed,
             "n_missed_faulted": self.n_missed_faulted,
+            "n_failed": self.n_failed,
             "miss_rate": self.miss_rate,
             "p50_sojourn": self.overall.p50_sojourn,
             "p99_sojourn": self.overall.p99_sojourn,
@@ -173,6 +188,7 @@ class SLOReport:
                     "p50_sojourn": c.p50_sojourn,
                     "p99_sojourn": c.p99_sojourn,
                     "n_missed": c.n_missed,
+                    "n_failed": c.n_failed,
                     "miss_rate": c.miss_rate,
                     "max_lateness": c.max_lateness,
                 }
@@ -182,9 +198,17 @@ class SLOReport:
 
 
 def _class_slo(
-    label: str, rows: Sequence[tuple[int, int | None, bool]]
+    label: str,
+    rows: Sequence[tuple[int, int | None, bool]],
+    n_failed: int = 0,
+    n_failed_deadlines: int = 0,
 ) -> ClassSLO:
-    """Aggregate ``(sojourn, lateness-or-None, faulted)`` rows into one ClassSLO."""
+    """Aggregate ``(sojourn, lateness-or-None, faulted)`` rows into one ClassSLO.
+
+    ``n_failed``/``n_failed_deadlines`` fold in the class's dropped
+    requests: every dropped deadline-carrying request is a miss (it will
+    never complete), but contributes no sojourn or lateness.
+    """
     sojourns = [s for s, _, _ in rows]
     late = [(l, f) for _, l, f in rows if l is not None]
     return ClassSLO(
@@ -192,11 +216,12 @@ def _class_slo(
         n=len(rows),
         p50_sojourn=int_quantile(sojourns, 1, 2),
         p99_sojourn=int_quantile(sojourns, 99, 100),
-        n_deadlines=len(late),
-        n_missed=sum(1 for l, _ in late if l > 0),
+        n_deadlines=len(late) + n_failed_deadlines,
+        n_missed=sum(1 for l, _ in late if l > 0) + n_failed_deadlines,
         total_lateness=sum(l for l, _ in late if l > 0),
         max_lateness=max((l for l, _ in late if l > 0), default=0),
         n_missed_faulted=sum(1 for l, f in late if l > 0 and f),
+        n_failed=n_failed,
     )
 
 
@@ -208,6 +233,12 @@ def slo_report(
     ``qos`` defaults to the map the server recorded on the report (a run
     without QoS yields an all-best-effort report: 0 deadlines, 0 misses).
     Requests absent from the map count as best-effort ``default``-class.
+
+    Requests the fault layer *dropped* (``report.failed``) are joined too:
+    a dropped deadline-carrying request counts as a deadline and a miss in
+    its class (it will never complete), so a class whose deadline work was
+    entirely dropped still appears — with a 1.0 miss rate instead of
+    silently vanishing from the report.
     """
     specs: Mapping[int, QoSSpec] = (
         qos if qos is not None else (report.qos or {})
@@ -221,11 +252,22 @@ def slo_report(
         row = (r.sojourn, lateness, r.faulted)
         per_class.setdefault(spec.qos_class, []).append(row)
         everything.append(row)
+    failed_by_class: dict[str, tuple[int, int]] = {}  # cls -> (n, n_deadlines)
+    n_failed = n_failed_deadlines = 0
+    for f in getattr(report, "failed", ()) or ():
+        spec = specs.get(f.req_id, default)
+        has_deadline = int(spec.deadline is not None)
+        n, nd = failed_by_class.get(spec.qos_class, (0, 0))
+        failed_by_class[spec.qos_class] = (n + 1, nd + has_deadline)
+        per_class.setdefault(spec.qos_class, [])  # class appears even if 0 served
+        n_failed += 1
+        n_failed_deadlines += has_deadline
     return SLOReport(
         admission=report.admission,
         scheduler=report.scheduler,
-        overall=_class_slo("*", everything),
+        overall=_class_slo("*", everything, n_failed, n_failed_deadlines),
         classes=tuple(
-            _class_slo(name, rows) for name, rows in sorted(per_class.items())
+            _class_slo(name, rows, *failed_by_class.get(name, (0, 0)))
+            for name, rows in sorted(per_class.items())
         ),
     )

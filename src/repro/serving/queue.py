@@ -108,6 +108,34 @@ are charged ahead of each batch's trajectory: completions shift by the
 drive's mount delay and the pool's mount/unmount accounting lands in the
 :class:`~repro.serving.sim.ServiceReport`.
 
+Load-adaptive dispatch and overload control (opt-in)
+----------------------------------------------------
+Under heavy traffic the exact DP's own runtime is a service-time component:
+``selector=`` names a registered :class:`~repro.core.solver.SolverSelector`
+(``"fixed"`` / ``"depth-threshold"`` / ``"cost-model"``, see
+:mod:`repro.core.solver`) that the server consults at every dispatch tick
+with the tick's load (total queued requests, batch size, the run's recorded
+per-policy solve timings) and the context's
+:class:`~repro.core.context.ComputeBudget` — picking the exact DP while
+queues are shallow and restricted DP / heuristics as depth grows.  The
+server applies ``budget.hysteresis`` per cartridge (a differing choice must
+repeat that many consecutive ticks before it takes effect) so the policy
+doesn't flap, and keys warm states per ``(cartridge, policy)`` so switching
+never seeds one policy's DP table from another's.  When the budget prices
+compute (``solve_time_num/solve_time_den``), every dispatch charges its
+solve's evaluated DP cells into the timeline as extra pre-trajectory delay
+— the per-batch ``policy_used``/``solve_delay`` land in
+:class:`~repro.serving.sim.BatchRecord` and the mix in
+:meth:`~repro.serving.sim.ServiceReport.summary`.  Two further overload
+controls ride the QoS layer: ``preempt_urgent=True`` lets an urgent arrival
+abort a *different* cartridge's all-lax in-flight batch (plain ``preempt``
+only ever aborts the arriving cartridge's own batch), and
+``class_weights=`` adds per-class virtual time to deadlines as the
+scheduler sees them — spending ``batch``-class slack to protect
+``interactive`` — while SLO reporting keeps judging the true deadlines.
+With ``selector``/``preempt_urgent``/``class_weights`` unset, every
+timeline is bit-identical to the pre-adaptive server.
+
 Fault tolerance and crash recovery (opt-in)
 -------------------------------------------
 ``faults=`` takes a deterministic :class:`~repro.serving.faults.FaultPlan`
@@ -139,10 +167,13 @@ import os
 from collections import deque
 from typing import Mapping
 
-from ..core.context import ExecutionContext, resolve_context
+from ..core.context import DEFAULT_BUDGET, ExecutionContext, resolve_context
 from ..core.solver import (
+    LoadView,
     SolveCache,
+    SolverSelector,
     SolverUnavailableError,
+    get_selector,
     solve_batch_warm,
     solve_batch_warm_degraded,
     solve_warm,
@@ -254,6 +285,9 @@ class OnlineTapeServer:
         faults: FaultPlan | None = None,
         retry: RetryPolicy | None = None,
         journal: EventJournal | str | os.PathLike | None = None,
+        selector: str | SolverSelector | None = None,
+        preempt_urgent: bool = False,
+        class_weights: Mapping[str, int] | None = None,
     ):
         if admission not in ADMISSIONS:
             raise ValueError(
@@ -263,6 +297,18 @@ class OnlineTapeServer:
             raise ValueError("window must be >= 0")
         if n_drives is not None and n_drives < 1:
             raise ValueError("n_drives must be >= 1")
+        if preempt_urgent and admission not in _DEADLINE:
+            raise ValueError(
+                "preempt_urgent needs a deadline-aware admission "
+                f"(one of {QOS_ADMISSIONS}); got {admission!r}"
+            )
+        if class_weights:
+            for cls, w in class_weights.items():
+                if not isinstance(w, int) or w < 0:
+                    raise ValueError(
+                        f"class weight for {cls!r} must be a non-negative "
+                        f"int of virtual time, got {w!r}"
+                    )
         self.lib = library
         self.admission = admission
         self.window = int(window)
@@ -281,6 +327,18 @@ class OnlineTapeServer:
             self._journal = journal
         else:
             self._journal = EventJournal(journal)
+        # adaptive dispatch (all opt-in; None/False reproduces PR 7 bit-exact)
+        self.selector: SolverSelector | None = (
+            get_selector(selector) if selector is not None else None
+        )
+        self.selector_name = self.selector.name if self.selector else None
+        self.budget = (
+            self.context.budget if self.context.budget is not None else DEFAULT_BUDGET
+        )
+        self.preempt_urgent = bool(preempt_urgent)
+        self.class_weights: dict[str, int] | None = (
+            dict(class_weights) if class_weights else None
+        )
         # journal-replay cross-check prefix; recover_server fills it
         self._expect: deque = deque()
         # per-(cartridge, policy) WarmState store for runs without a cache
@@ -293,33 +351,83 @@ class OnlineTapeServer:
         heapq.heappush(self._events, (when, self._seq, kind, data))
 
     # -- warm-state plumbing (see the module docstring) ----------------------
-    def _warm_key(self, tape_id: str) -> tuple:
-        return ("warm", tape_id, self.policy)
+    def _warm_key(self, tape_id: str, policy: str | None = None) -> tuple:
+        # keys carry the *solving* policy: with a selector switching policies
+        # per tick, each (cartridge, policy) pair keeps its own warm lineage —
+        # a warm state from one policy's DP table must never seed another's
+        return ("warm", tape_id, policy if policy is not None else self.policy)
 
-    def _get_warm(self, tape_id: str):
+    def _get_warm(self, tape_id: str, policy: str | None = None):
         if not self.warm_start:
             return None
         cache = self.context.cache
         if cache is not None and hasattr(cache, "get_warm"):
-            return cache.get_warm(self._warm_key(tape_id))
-        return self._warm_local.get(self._warm_key(tape_id))
+            return cache.get_warm(self._warm_key(tape_id, policy))
+        return self._warm_local.get(self._warm_key(tape_id, policy))
 
-    def _put_warm(self, tape_id: str, state) -> None:
+    def _put_warm(self, tape_id: str, state, policy: str | None = None) -> None:
         if not self.warm_start or state is None:
             return
         cache = self.context.cache
         if cache is not None and hasattr(cache, "put_warm"):
-            cache.put_warm(self._warm_key(tape_id), state)
+            cache.put_warm(self._warm_key(tape_id, policy), state)
         else:
-            self._warm_local[self._warm_key(tape_id)] = state
+            self._warm_local[self._warm_key(tape_id, policy)] = state
 
-    def _drop_warm(self, tape_id: str) -> None:
+    def _drop_warm(self, tape_id: str, policy: str | None = None) -> None:
         """Invalidate a cartridge's warm state (degradation-chain fallback)."""
         cache = self.context.cache
         if cache is not None and hasattr(cache, "put_warm"):
-            cache.put_warm(self._warm_key(tape_id), None)
+            cache.put_warm(self._warm_key(tape_id, policy), None)
         else:
-            self._warm_local.pop(self._warm_key(tape_id), None)
+            self._warm_local.pop(self._warm_key(tape_id, policy), None)
+
+    # -- adaptive dispatch (see repro.core.solver.SolverSelector) ------------
+    def _select_policy(self, key: str, depth: int, n_requests: int, now: int) -> str:
+        """The tick's solving policy for ``key`` (a cartridge, or ``"*"``).
+
+        Consults the selector with a :class:`LoadView` and applies
+        ``budget.hysteresis``: a differing choice must repeat for that many
+        consecutive ticks before it replaces the active policy, so a queue
+        depth oscillating around a threshold cannot flap the policy (and
+        thrash warm states) every tick.
+        """
+        want = self.selector.select(
+            LoadView(
+                depth=depth, n_requests=n_requests, now=now,
+                timings=self._sel_timings,
+            ),
+            self.budget,
+        )
+        if want is None:
+            want = self.policy
+        active = self._sel_active.get(key, self.policy)
+        if want == active:
+            self._sel_pending.pop(key, None)
+            return active
+        pol, streak = self._sel_pending.get(key, (want, 0))
+        streak = streak + 1 if pol == want else 1
+        if streak >= self.budget.hysteresis:
+            self._sel_pending.pop(key, None)
+            self._sel_active[key] = want
+            return want
+        self._sel_pending[key] = (want, streak)
+        return active
+
+    def _note_timing(self, policy: str, n_requests: int, stats) -> None:
+        """Feed one real solve's cell count into the cost model's history.
+
+        Cache hits are skipped: they report ``cells_evaluated == 0`` for
+        work the cache did earlier, which would teach the cost model that
+        solves are free.
+        """
+        if stats.mode == "cache":
+            return
+        cells, cubes = self._sel_timings.get(policy, (0, 0))
+        self._sel_timings[policy] = (
+            cells + stats.cells_evaluated,
+            cubes + max(1, n_requests) ** 3,
+        )
 
     # -- write-ahead journal (see repro.serving.faults) ----------------------
     def _log(self, **ev) -> None:
@@ -513,6 +621,11 @@ class OnlineTapeServer:
         self._n_fallbacks = 0
         self._n_requeued = 0
         self._retry_delay = 0  # total backoff charged, exact virtual time
+        # adaptive-dispatch state: per-policy (cells, n^3) solve history for
+        # the cost model, and per-cartridge active/pending-switch hysteresis
+        self._sel_timings: dict[str, tuple[int, int]] = {}
+        self._sel_active: dict[str, str] = {}
+        self._sel_pending: dict[str, tuple[str, int]] = {}
         horizon = 0
 
         for req in sorted(trace):
@@ -541,6 +654,8 @@ class OnlineTapeServer:
                     drive = self.pool.drive_of(tape_id)
                     if drive is not None and drive.busy and now < drive.service_end:
                         self._preempt(drive, now)
+                if self.preempt_urgent:
+                    self._maybe_preempt_urgent(req, tape_id, now)
                 self._schedule(now)
             elif kind == "free":
                 drive_id, epoch = data
@@ -597,6 +712,7 @@ class OnlineTapeServer:
             warm_start=self.warm_start,
             failed=self._failed,
             fault_stats=fault_stats,
+            selector=self.selector_name,
         )
         self._log(
             ev="end", horizon=horizon, n_served=report.n_served,
@@ -627,8 +743,22 @@ class OnlineTapeServer:
 
     # -- admission -----------------------------------------------------------
     def _deadline_of(self, req: Request) -> int | None:
+        """The request's deadline *as the scheduler sees it*.
+
+        With ``class_weights`` set, a class's weight (virtual time) is added
+        to its members' deadlines for every scheduling decision — a
+        ``batch``-class request with weight ``w`` yields as if its deadline
+        were ``w`` later, spending its slack to protect lighter classes
+        (``interactive`` at weight 0 keeps its true urgency).  SLO reporting
+        (:func:`repro.serving.qos.slo_report`) reads the unweighted specs, so
+        misses are always judged against the real deadlines.
+        """
         spec = self.qos.get(req.req_id)
-        return spec.deadline if spec is not None else None
+        if spec is None or spec.deadline is None:
+            return None
+        if self.class_weights:
+            return spec.deadline + self.class_weights.get(spec.qos_class, 0)
+        return spec.deadline
 
     def _queue_deadline(
         self, queue: PendingQueue, now: int | None = None
@@ -723,6 +853,18 @@ class OnlineTapeServer:
         return pick
 
     def _edf_key(self, req: Request, now: int) -> tuple[int, int, int, int]:
+        """Total EDF order — ties are deterministic by construction.
+
+        Live deadlines sort first by deadline; two requests sharing a
+        deadline order by ``(arrival, req_id)``.  Best-effort requests and
+        expired-demoted ones share a single trailing bucket ``(1, 0, ...)``
+        — demotion deliberately erases the stale deadline so an
+        expired-deadline request ties a live best-effort one and the same
+        ``(arrival, req_id)`` rule breaks it (an expired deadline is missed
+        no matter what; letting it keep outranking meetable work would
+        cascade misses).  ``req_id`` is unique per trace, so the key is a
+        total order and `min` is seed-stable.
+        """
         d = self._deadline_of(req)
         if d is None or d <= now:  # best-effort, or already missed
             return (1, 0, req.time, req.req_id)
@@ -757,6 +899,13 @@ class OnlineTapeServer:
         if not cands:
             return
         view = self._mount_view(now)
+        # the tick's load (total queued requests) is snapshotted before any
+        # queue drains, so every selection this tick sees the same depth
+        depth = (
+            sum(len(q) for q in self.lib.queues.values())
+            if self.selector is not None
+            else 0
+        )
         if self.admission == "batched":
             # one event tick -> one solve_batch over every admitted cartridge
             picks: list[tuple[PoolDrive, int, int, list[Request]]] = []
@@ -771,6 +920,15 @@ class OnlineTapeServer:
                 picks.append((drive, delay, retries, self.lib.pending(tid).drain()))
             if not picks:
                 return
+            # one launch serves the whole tick, so one policy choice covers
+            # it (hysteresis keyed on the reserved cross-cartridge key "*")
+            pol = (
+                self._select_policy(
+                    "*", depth, sum(len(b) for *_, b in picks), now
+                )
+                if self.selector is not None
+                else None
+            )
             prepared = []
             for _, _, _, batch in picks:
                 tape = self.lib.tape_of(batch[0].name)
@@ -779,7 +937,8 @@ class OnlineTapeServer:
             try:
                 results, new_warms, stats, rec = self._solve_batch_tick(
                     [inst for _, inst, _ in prepared],
-                    [self._get_warm(t.tape_id) for t, _, _ in prepared],
+                    [self._get_warm(t.tape_id, pol) for t, _, _ in prepared],
+                    policy=pol,
                 )
             except SolverUnavailableError:
                 if self.retry.on_exhausted == "error":
@@ -799,12 +958,12 @@ class OnlineTapeServer:
                 picks, prepared, results, new_warms, stats
             ):
                 if rec is not None and rec.n_faults:
-                    self._drop_warm(tape.tape_id)  # invalidated on fallback
+                    self._drop_warm(tape.tape_id, pol)  # invalidated on fallback
                 else:
-                    self._put_warm(tape.tape_id, warm)
+                    self._put_warm(tape.tape_id, warm, pol)
                 self._dispatch(
                     drive, batch, now, delay, (tape, inst, names, res, st),
-                    mount_retries=retries, degraded_to=degraded_to,
+                    mount_retries=retries, degraded_to=degraded_to, policy=pol,
                 )
             return
         for tid in cands:
@@ -821,21 +980,32 @@ class OnlineTapeServer:
                 batch = [queue.pop()]
             else:
                 batch = queue.drain()
-            self._dispatch(drive, batch, now, delay, mount_retries=retries)
+            pol = (
+                self._select_policy(tid, depth, len(batch), now)
+                if self.selector is not None
+                else None
+            )
+            self._dispatch(drive, batch, now, delay, mount_retries=retries, policy=pol)
 
     # -- solving (direct, or through the degradation chain under faults) -----
-    def _solve_one(self, tape_id: str, inst):
-        """One cartridge's solve; returns ``(result, stats, degraded_to)``."""
-        warm = self._get_warm(tape_id)
+    def _solve_one(self, tape_id: str, inst, policy: str | None = None):
+        """One cartridge's solve; returns ``(result, stats, degraded_to)``.
+
+        ``policy`` overrides the server's configured policy for this tick
+        (a selector's choice); warm states are read and written under the
+        policy that actually solved.
+        """
+        pol = policy if policy is not None else self.policy
+        warm = self._get_warm(tape_id, pol)
         if self._injector is None:
             res, new_warm, stats = solve_warm(
-                inst, policy=self.policy, context=self.context, warm=warm
+                inst, policy=pol, context=self.context, warm=warm
             )
-            self._put_warm(tape_id, new_warm)
+            self._put_warm(tape_id, new_warm, pol)
             return res, stats, None
         res, new_warm, stats, rec = solve_warm_degraded(
             inst,
-            policy=self.policy,
+            policy=pol,
             context=self.context,
             warm=warm,
             fault_hook=self._injector.solver_hook,
@@ -844,21 +1014,22 @@ class OnlineTapeServer:
         if rec.n_faults:
             self._n_solver_faults += rec.n_faults
             self._n_fallbacks += rec.fell_back
-            self._drop_warm(tape_id)  # invalidated on fallback (new_warm None)
+            self._drop_warm(tape_id, pol)  # invalidated on fallback (new_warm None)
         else:
-            self._put_warm(tape_id, new_warm)
+            self._put_warm(tape_id, new_warm, pol)
         return res, stats, rec.used if rec.fell_back else None
 
-    def _solve_batch_tick(self, insts, warms):
+    def _solve_batch_tick(self, insts, warms, policy: str | None = None):
         """The ``batched`` admission's one-launch-per-tick solve."""
+        pol = policy if policy is not None else self.policy
         if self._injector is None:
             results, new_warms, stats = solve_batch_warm(
-                insts, policy=self.policy, context=self.context, warms=warms
+                insts, policy=pol, context=self.context, warms=warms
             )
             return results, new_warms, stats, None
         results, new_warms, stats, rec = solve_batch_warm_degraded(
             insts,
-            policy=self.policy,
+            policy=pol,
             context=self.context,
             warms=warms,
             fault_hook=self._injector.solver_hook,
@@ -879,12 +1050,14 @@ class OnlineTapeServer:
         prepared=None,
         mount_retries: int = 0,
         degraded_to: str | None = None,
+        policy: str | None = None,
     ) -> None:
+        pol = policy if policy is not None else self.policy
         if prepared is None:
             tape = self.lib.tape_of(batch[0].name)
             inst, names = tape.instance(_multiset(batch))
             try:
-                res, stats, degraded_to = self._solve_one(tape.tape_id, inst)
+                res, stats, degraded_to = self._solve_one(tape.tape_id, inst, pol)
             except SolverUnavailableError:
                 if self.retry.on_exhausted == "error":
                     raise
@@ -896,6 +1069,8 @@ class OnlineTapeServer:
                 return
         else:
             tape, inst, names, res, stats = prepared
+        if self.selector is not None:
+            self._note_timing(pol, len(batch), stats)
         assert drive.mounted == tape.tape_id
         replay: Replay = replay_schedule(inst, res.detours)
         # the independent recomputation always lands in the BatchRecord; with
@@ -905,7 +1080,10 @@ class OnlineTapeServer:
             verify_schedule(inst, res.detours, cost=res.cost, replay=replay)
         idx = {name: i for i, name in enumerate(names)}
         rewind = rewind_time(inst.m, inst.u_turn, replay.head_at_makespan)
-        start = now + delay  # mount legs charged before the trajectory begins
+        # mount legs and the budget-priced solve work are both charged before
+        # the trajectory begins (with no ComputeBudget the charge is 0)
+        solve_delay = self.budget.charge(stats.cells_evaluated)
+        start = now + delay + solve_delay
 
         drive.busy = True
         drive.epoch += 1
@@ -941,6 +1119,8 @@ class OnlineTapeServer:
                 warm_mode=stats.mode,
                 mount_retries=mount_retries,
                 degraded_to=degraded_to,
+                policy_used=pol if self.selector is not None else None,
+                solve_delay=solve_delay,
             )
         )
         self._log(
@@ -968,7 +1148,47 @@ class OnlineTapeServer:
         drive.inflight = []
         drive.busy = False
 
-    def _preempt(self, drive: PoolDrive, now: int) -> None:
+    def _maybe_preempt_urgent(self, req: Request, tape_id: str, now: int) -> None:
+        """Cross-cartridge preemption: abort a lax batch for an urgent arrival.
+
+        The plain ``preempt`` admission only ever aborts the arriving
+        cartridge's *own* in-flight batch; under drive contention an urgent
+        arrival can instead be starved by a long lax batch on a *different*
+        cartridge.  With ``preempt_urgent=True``, an arrival carrying a live
+        (class-weighted) deadline that no drive can currently serve may
+        abort one busy drive — but only a drive whose every unserved
+        in-flight request is *lax* relative to the arrival (best-effort, or
+        deadline strictly later), so urgent work never preempts equally
+        urgent work.  Among eligible victims the fewest-survivors drive
+        (ties by drive id) is aborted through the standard preemption
+        machinery: completions stand, survivors requeue, the head rewinds,
+        and the freed drive remounts under the admission's urgency order.
+        """
+        d = self._deadline_of(req)
+        if d is None or d <= now:
+            return  # best-effort or already missed: nothing to protect
+        if self.pool.can_serve(tape_id):
+            return  # a drive can take it without aborting anyone
+        victim: PoolDrive | None = None
+        victim_key: tuple[int, int] | None = None
+        for drive in self.pool.alive:
+            if not drive.busy or not drive.inflight:
+                continue
+            pending = [r for r, c in drive.inflight if c > now]
+            if not pending:
+                continue  # everything aboard already completed
+            lax = all(
+                (dl := self._deadline_of(r)) is None or dl > d for r in pending
+            )
+            if not lax:
+                continue
+            key = (len(pending), drive.drive_id)
+            if victim_key is None or key < victim_key:
+                victim, victim_key = drive, key
+        if victim is not None:
+            self._preempt(victim, now, reason="preempt-urgent")
+
+    def _preempt(self, drive: PoolDrive, now: int, reason: str = "preempt") -> None:
         """Abort the in-flight batch at ``now``; requeue unserved requests.
 
         Completions at or before ``now`` stand; the head rewinds from its
@@ -1005,7 +1225,7 @@ class OnlineTapeServer:
         drive.busy = True
         self._n_preempt += 1
         self._log(
-            ev="abort", t=now, drive=drive.drive_id, reason="preempt",
+            ev="abort", t=now, drive=drive.drive_id, reason=reason,
             requeued=[r.req_id for r in pending],
         )
         self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
@@ -1037,6 +1257,9 @@ def serve_trace(
     faults: FaultPlan | None = None,
     retry: RetryPolicy | None = None,
     journal: EventJournal | str | os.PathLike | None = None,
+    selector: str | SolverSelector | None = None,
+    preempt_urgent: bool = False,
+    class_weights: Mapping[str, int] | None = None,
 ) -> ServiceReport:
     """One-shot convenience: build an :class:`OnlineTapeServer` and run it."""
     server = OnlineTapeServer(
@@ -1056,5 +1279,8 @@ def serve_trace(
         faults=faults,
         retry=retry,
         journal=journal,
+        selector=selector,
+        preempt_urgent=preempt_urgent,
+        class_weights=class_weights,
     )
     return server.run(trace)

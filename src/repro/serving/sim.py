@@ -363,6 +363,13 @@ class BatchRecord:
     #: backend that actually solved after a degradation-chain fallback
     #: (None: the requested backend, possibly after same-tier retries)
     degraded_to: str | None = None
+    #: policy a SolverSelector picked for this tick (None: no selector ran —
+    #: the batch was solved with the server's configured policy)
+    policy_used: str | None = None
+    #: virtual time the batch's solve work cost under the context's
+    #: ComputeBudget (cells_evaluated priced at solve_time_num/den; the
+    #: dispatch's service start was delayed by exactly this much)
+    solve_delay: int = 0
 
 
 @dataclasses.dataclass
@@ -395,6 +402,9 @@ class ServiceReport:
     #: None when the run had no fault plan and no explicit retry policy —
     #: fault-free reports stay key-for-key identical to the PR-6 format
     fault_stats: dict | None = None
+    #: SolverSelector the server consulted per tick (None: adaptive
+    #: dispatch off — reports stay key-for-key identical to PR 7)
+    selector: str | None = None
 
     # -- exact aggregates (ints, safe to assert on) --------------------------
     @property
@@ -434,6 +444,20 @@ class ServiceReport:
     def cells_reused(self) -> int:
         """Total DP cells transferred from warm states instead of folded."""
         return sum(b.cells_reused for b in self.batches)
+
+    @property
+    def total_solve_delay(self) -> int:
+        """Virtual time charged for solver compute across all batches."""
+        return sum(b.solve_delay for b in self.batches)
+
+    @property
+    def policy_mix(self) -> dict[str, int]:
+        """Batches per policy the selector actually dispatched ({} = off)."""
+        mix: dict[str, int] = {}
+        for b in self.batches:
+            if b.policy_used is not None:
+                mix[b.policy_used] = mix.get(b.policy_used, 0) + 1
+        return mix
 
     # -- float conveniences for tables ---------------------------------------
     @property
@@ -513,4 +537,8 @@ class ServiceReport:
             out["n_failed"] = self.n_failed
             out["n_faulted"] = self.n_faulted
             out["completion_rate"] = self.completion_rate
+        if self.selector is not None:
+            out["selector"] = self.selector
+            out["policy_mix"] = self.policy_mix
+            out["total_solve_delay"] = self.total_solve_delay
         return out

@@ -1,0 +1,566 @@
+"""Load-adaptive solver selection + overload control.
+
+The acceptance bars (all on exact integer virtual time):
+
+* with ``selector``/``preempt_urgent``/``class_weights`` unset, every
+  timeline is **bit-identical** to the selector-less code path — pinned
+  differentially (plain run == ``selector=None`` == ``selector="fixed"``);
+* the selector registry (``fixed`` / ``depth-threshold`` / ``cost-model``)
+  resolves by name or instance, validates ladders against the solver
+  registry, and ``predict_cells`` scales recorded timings exactly;
+* per-tick policy switching is hysteresis-damped by the *server* (selectors
+  stay stateless), warm states never alias across policies, and a priced
+  :class:`~repro.core.ComputeBudget` delays dispatch by the exact charged
+  cells;
+* deadline-aware cross-cartridge preemption aborts a lax batch for an
+  urgent arrival, and class weights re-order service without touching the
+  reported (true-deadline) SLOs;
+* the adaptive tier composes with the PR-7 fault layer: under an identical
+  fault plan the ``fixed`` selector reproduces the selector-less run bit
+  for bit (same retries, same backoff charges, same warm invalidations),
+  and the ``cost-model`` selector still conserves every request.
+"""
+
+import hashlib
+
+import pytest
+
+from repro.core import (
+    DEFAULT_LADDER,
+    ComputeBudget,
+    CostModelSelector,
+    DepthThresholdSelector,
+    ExecutionContext,
+    FixedSelector,
+    LoadView,
+    SolverSelector,
+    get_selector,
+    list_selectors,
+    predict_cells,
+    register_selector,
+)
+from repro.core.solver import _SELECTORS
+from repro.serving import (
+    DriveCosts,
+    QoSSpec,
+    Request,
+    RetryPolicy,
+    demo_library,
+    poisson_trace,
+    serve_trace,
+    slo_report,
+)
+from repro.serving.faults import seeded_fault_plan
+from repro.storage.tape import TapeLibrary
+
+pytestmark = pytest.mark.adaptive
+
+SEED = 20260731
+COSTS = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+
+
+def build_library(n_files=40):
+    return demo_library(SEED, n_files=n_files)
+
+
+def build_trace(n_requests=120, rate=150_000):
+    return poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=rate, seed=SEED
+    )
+
+
+def _timeline(report):
+    return (
+        [(r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served],
+        sorted(
+            (b.tape_id, b.drive, b.dispatched, b.mount_delay, b.n_requests,
+             b.solver_cost, b.rewind, b.preempted)
+            for b in report.batches
+        ),
+    )
+
+
+def _served_sha(report):
+    served = tuple(
+        (r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served
+    )
+    return hashlib.sha256(repr(served).encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# ComputeBudget: validation, exact rational charging, context plumbing
+# ---------------------------------------------------------------------------
+def test_compute_budget_validates_and_charges_exactly():
+    b = ComputeBudget(solve_time_num=3, solve_time_den=2)
+    assert b.charge(7) == 10  # 21 // 2, exact integer floor
+    assert b.charge(0) == 0
+    assert ComputeBudget().charge(10**9) == 0  # default pricing is free
+    assert b.replace(per_tick=500).per_tick == 500
+    assert b.replace(per_tick=500).solve_time_num == 3  # others preserved
+    for bad in (
+        dict(solve_time_num=-1),
+        dict(solve_time_den=0),
+        dict(per_tick=0),
+        dict(shallow_depth=0),
+        dict(shallow_depth=9, deep_depth=8),
+        dict(hysteresis=0),
+    ):
+        with pytest.raises(ValueError):
+            ComputeBudget(**bad)
+
+
+def test_execution_context_carries_budget():
+    b = ComputeBudget(per_tick=64)
+    ctx = ExecutionContext(budget=b)
+    assert ctx.budget is b
+    assert ExecutionContext().budget is None  # opt-in: absent by default
+    assert ctx.replace(backend="python").budget is b
+    with pytest.raises(TypeError, match="budget"):
+        ExecutionContext(budget=42)
+
+
+# ---------------------------------------------------------------------------
+# selector registry + predict_cells
+# ---------------------------------------------------------------------------
+def test_selector_registry_resolves_names_and_instances():
+    assert list_selectors() == ("fixed", "depth-threshold", "cost-model")
+    assert get_selector("cost-model").name == "cost-model"
+    custom = FixedSelector(policy="nfgs")
+    assert get_selector(custom) is custom  # instances pass through
+    assert isinstance(get_selector("fixed"), SolverSelector)
+    with pytest.raises(KeyError, match="unknown selector"):
+        get_selector("oracle")
+    with pytest.raises(TypeError, match="selector"):
+        get_selector(object())
+    with pytest.raises(ValueError, match="already registered"):
+        register_selector(FixedSelector())
+    # replace=True swaps in place and keeps registration order
+    register_selector(FixedSelector(), replace=True)
+    assert list_selectors() == ("fixed", "depth-threshold", "cost-model")
+
+
+def test_selector_ladders_validate_against_solver_registry():
+    with pytest.raises(KeyError):
+        DepthThresholdSelector(ladder=("dp", "ghost"))
+    with pytest.raises(ValueError, match="ladder"):
+        CostModelSelector(ladder=())
+    with pytest.raises(KeyError):
+        FixedSelector(policy="ghost")
+    with pytest.raises(ValueError, match="name"):
+        register_selector(object())
+
+
+def test_predict_cells_priors_and_observed_scaling():
+    # analytic priors by solver kind: heuristic 0, restricted ~n^2 log n,
+    # exact DP n^3
+    assert predict_cells("nfgs", 10) == 0
+    assert predict_cells("logdp1", 10) == 10 * 10 * (10).bit_length()
+    assert predict_cells("dp", 10) == 1_000
+    assert predict_cells("dp", 0) == 0
+    # an observation replaces the prior: exact integer ratio scaling
+    timings = {"dp": (4_000, 8_000)}  # 0.5 cells per n^3 observed
+    assert predict_cells("dp", 10, timings) == 500
+    assert predict_cells("dp", 10, {"dp": (0, 8_000)}) == 0
+    # zero-cube observations fall back to the prior instead of dividing
+    assert predict_cells("dp", 10, {"dp": (5, 0)}) == 1_000
+    with pytest.raises(KeyError):
+        predict_cells("ghost", 4)
+
+
+def test_selector_unit_choices():
+    b = ComputeBudget(shallow_depth=4, deep_depth=16)
+    dt = DepthThresholdSelector()
+    assert dt.select(LoadView(depth=4, n_requests=4), b) == "dp"
+    assert dt.select(LoadView(depth=10, n_requests=4), b) == "logdp1"
+    assert dt.select(LoadView(depth=16, n_requests=4), b) == "nfgs"
+    cm = CostModelSelector()
+    free = ComputeBudget()  # per_tick None: always the most exact tier
+    assert cm.select(LoadView(depth=99, n_requests=50), free) == "dp"
+    tight = ComputeBudget(per_tick=100)
+    assert cm.select(LoadView(depth=1, n_requests=4), tight) == "dp"  # 64 <= 100
+    # n=5: dp prior 125 > 100, logdp1 prior 5*5*3 = 75 <= 100
+    assert cm.select(LoadView(depth=1, n_requests=5), tight) == "logdp1"
+    assert cm.select(LoadView(depth=1, n_requests=40), tight) == "nfgs"
+    # recorded timings steer the model: dp observed cheap -> picked again
+    cheap = LoadView(depth=1, n_requests=40, timings={"dp": (10, 64_000)})
+    assert cm.select(cheap, tight) == "dp"
+    assert FixedSelector().select(LoadView(depth=9, n_requests=9), b) is None
+    assert FixedSelector(policy="nfgs").select(
+        LoadView(depth=0, n_requests=1), b
+    ) == "nfgs"
+    assert DEFAULT_LADDER == ("dp", "logdp1", "nfgs")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: selector unset stays bit-identical (differential pin)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", ["per-drive-accumulate", "preempt"])
+def test_selector_unset_and_fixed_are_bit_identical(admission):
+    trace = build_trace()
+    kw = dict(window=400_000, policy="dp", n_drives=2, drive_costs=COSTS)
+    plain = serve_trace(build_library(), trace, admission, **kw)
+    explicit_none = serve_trace(
+        build_library(), trace, admission, selector=None, **kw
+    )
+    fixed = serve_trace(
+        build_library(), trace, admission, selector="fixed", **kw
+    )
+    assert _timeline(plain) == _timeline(explicit_none) == _timeline(fixed)
+    # report keys: the adaptive block appears only when a selector is set
+    assert "policy_mix" not in plain.summary()
+    assert plain.summary().get("selector") is None
+    s = fixed.summary()
+    assert s["selector"] == "fixed"
+    assert s["policy_mix"] == {"dp": len(fixed.batches)}
+    assert s["total_solve_delay"] == 0  # default budget charges nothing
+    assert all(b.policy_used == "dp" for b in fixed.batches)
+    assert all(b.policy_used is None for b in plain.batches)
+
+
+def test_default_budget_with_selector_changes_nothing_but_attribution():
+    """A selector without pricing (default ComputeBudget) may still switch
+    policies; with a single-policy ladder it must reproduce the pinned
+    timeline exactly while attributing every batch."""
+    trace = build_trace(n_requests=80)
+    kw = dict(window=400_000, policy="dp", n_drives=2, drive_costs=COSTS)
+    plain = serve_trace(build_library(), trace, "per-drive-accumulate", **kw)
+    attributed = serve_trace(
+        build_library(), trace, "per-drive-accumulate",
+        selector=FixedSelector(policy="dp"), **kw
+    )
+    assert _timeline(plain) == _timeline(attributed)
+    assert all(b.solve_delay == 0 for b in attributed.batches)
+
+
+# ---------------------------------------------------------------------------
+# adaptive serving: switching, hysteresis, pricing, warm-key isolation
+# ---------------------------------------------------------------------------
+def test_depth_threshold_selector_switches_policies_under_load():
+    trace = build_trace(n_requests=160)  # depth crosses both thresholds
+    budget = ComputeBudget(shallow_depth=2, deep_depth=6, hysteresis=1)
+    report = serve_trace(
+        build_library(), trace, "per-drive-accumulate", window=400_000,
+        policy="dp", selector="depth-threshold", n_drives=2,
+        drive_costs=COSTS, context=build_library().context.replace(budget=budget),
+    )
+    mix = report.policy_mix
+    assert sum(mix.values()) == len(report.batches)
+    assert len(mix) >= 2, mix  # actually adapted
+    assert report.summary()["all_verified"]
+    assert {b.policy_used for b in report.batches} == set(mix)
+
+
+def test_hysteresis_damps_switching():
+    """The same load served under hysteresis=1 vs a huge hysteresis: the
+    damped run can never confirm a switch, so every batch keeps the
+    configured policy; the eager run switches at least once."""
+    trace = build_trace(n_requests=160)
+
+    def run(hysteresis):
+        budget = ComputeBudget(
+            shallow_depth=2, deep_depth=6, hysteresis=hysteresis
+        )
+        return serve_trace(
+            build_library(), trace, "per-drive-accumulate", window=400_000,
+            policy="dp", selector="depth-threshold", n_drives=2,
+            drive_costs=COSTS,
+            context=build_library().context.replace(budget=budget),
+        )
+
+    eager = run(1)
+    damped = run(10**6)
+    assert len(eager.policy_mix) >= 2
+    assert set(damped.policy_mix) == {"dp"}  # switch never confirmed
+    # hysteresis only gates the switch instant, not correctness
+    assert damped.summary()["all_verified"]
+    assert damped.n_served == eager.n_served == 160
+
+
+def test_priced_budget_delays_dispatch_exactly():
+    """solve_delay = charge(cells_evaluated), batch by batch, and the total
+    lands in the summary.  The free-budget run is the control."""
+    trace = build_trace(n_requests=80)
+    kw = dict(window=400_000, policy="dp", selector="fixed", n_drives=2,
+              drive_costs=COSTS, warm_start=False)
+    budget = ComputeBudget(solve_time_num=7, solve_time_den=3)
+    priced = serve_trace(
+        build_library(), trace, "per-drive-accumulate",
+        context=build_library().context.replace(budget=budget), **kw
+    )
+    free = serve_trace(build_library(), trace, "per-drive-accumulate", **kw)
+    assert priced.total_solve_delay > 0
+    assert priced.summary()["total_solve_delay"] == priced.total_solve_delay
+    for b in priced.batches:
+        assert b.solve_delay == budget.charge(b.cells_evaluated)
+    assert all(b.solve_delay == 0 for b in free.batches)
+    # priced solves start later: total sojourn strictly grows
+    assert priced.total_sojourn > free.total_sojourn
+
+
+def test_cost_model_selector_serves_and_records_timings():
+    trace = build_trace(n_requests=160, rate=30_000)
+    budget = ComputeBudget(solve_time_num=10_000, per_tick=120, hysteresis=1)
+    report = serve_trace(
+        build_library(), trace, "per-drive-accumulate", window=400_000,
+        policy="dp", selector="cost-model", n_drives=2, drive_costs=COSTS,
+        context=build_library().context.replace(budget=budget),
+        warm_start=False,
+    )
+    assert report.n_served == 160
+    assert report.summary()["all_verified"]
+    mix = report.policy_mix
+    assert sum(mix.values()) == len(report.batches)
+    assert len(mix) >= 2, mix  # the budget prices dp out under load
+    # determinism: the adaptive run replays bit-identically
+    again = serve_trace(
+        build_library(), trace, "per-drive-accumulate", window=400_000,
+        policy="dp", selector="cost-model", n_drives=2, drive_costs=COSTS,
+        context=build_library().context.replace(budget=budget),
+        warm_start=False,
+    )
+    assert _timeline(report) == _timeline(again)
+    assert again.policy_mix == mix
+
+
+def test_warm_states_do_not_alias_across_policies():
+    """Per-tick switching with warm starts on: warm tables are keyed by
+    (tape, policy), so a warm dp table is never fed to nfgs or vice versa.
+    The observable contract: the adaptive warm run emits exactly the same
+    timeline as the adaptive cold run (warm start is a work optimisation,
+    never a scheduling change), which fails loudly if states alias."""
+    trace = build_trace(n_requests=160)
+    budget = ComputeBudget(shallow_depth=2, deep_depth=6, hysteresis=1)
+
+    def run(warm):
+        return serve_trace(
+            build_library(), trace, "per-drive-accumulate", window=400_000,
+            policy="dp", selector="depth-threshold", n_drives=2,
+            drive_costs=COSTS, warm_start=warm,
+            context=build_library().context.replace(budget=budget),
+        )
+
+    warm, cold = run(True), run(False)
+    assert len(warm.policy_mix) >= 2  # the run really interleaves policies
+    assert _timeline(warm) == _timeline(cold)
+    assert warm.policy_mix == cold.policy_mix
+    assert warm.cells_evaluated <= cold.cells_evaluated
+
+
+def test_selector_validation_errors():
+    trace = build_trace(n_requests=20)
+    with pytest.raises(KeyError, match="unknown selector"):
+        serve_trace(build_library(), trace, "accumulate", window=400_000,
+                    selector="ghost")
+
+
+# ---------------------------------------------------------------------------
+# cross-cartridge urgent preemption + class-weighted service
+# ---------------------------------------------------------------------------
+def _two_tape_library():
+    lib = TapeLibrary(capacity_per_tape=100_000, u_turn=100)
+    for name in ("a0", "a1", "a2"):
+        lib.store(name, 30_000)  # tape A fills up
+    lib.store("b0", 2_000)  # tape B
+    return lib
+
+
+def test_urgent_arrival_preempts_lax_cross_cartridge_batch():
+    """One drive, a long lax batch in flight on tape A; an urgent tape-B
+    deadline arrives and cannot mount.  With preempt_urgent the A batch is
+    aborted (kept completions, rewind accounted), B is served in time;
+    without it the arrival waits out the batch and misses."""
+    lib = _two_tape_library()
+    tape_a, tape_b = lib.location["a0"], lib.location["b0"]
+    trace = [
+        Request(time=0, req_id=0, tape_id=tape_a, name="a0"),
+        Request(time=0, req_id=1, tape_id=tape_a, name="a1"),
+        Request(time=0, req_id=2, tape_id=tape_a, name="a2"),
+        Request(time=5_000, req_id=3, tape_id=tape_b, name="b0"),
+    ]
+    qos = {3: QoSSpec(deadline=30_000, qos_class="interactive")}
+    kw = dict(window=0, policy="dp", n_drives=1, qos=qos)
+
+    def run(**extra):
+        return serve_trace(_two_tape_library(), list(trace), "edf-global",
+                           **kw, **extra)
+
+    waited = run()
+    preempted = run(preempt_urgent=True)
+    assert waited.n_preemptions == 0
+    assert preempted.n_preemptions >= 1
+    assert any(b.preempted for b in preempted.batches)
+    done_w = {r.req_id: r.completed for r in waited.served}
+    done_p = {r.req_id: r.completed for r in preempted.served}
+    assert done_p[3] < done_w[3]  # the urgent request jumps the batch
+    assert done_p[3] <= 30_000 < done_w[3]  # ...and only preemption meets it
+    assert preempted.n_served == 4  # aborted work is re-queued, not lost
+    assert preempted.summary()["all_verified"]
+
+
+def test_preempt_urgent_requires_deadline_admission():
+    trace = build_trace(n_requests=10)
+    with pytest.raises(ValueError, match="preempt_urgent"):
+        serve_trace(build_library(), trace, "per-drive-accumulate",
+                    window=400_000, preempt_urgent=True)
+
+
+def test_preempt_urgent_ignores_best_effort_and_lax_arrivals():
+    """Best-effort arrivals (and arrivals no tighter than every pending
+    deadline) never abort a batch: the run is bit-identical to the
+    non-preempting one."""
+    lib = _two_tape_library()
+    tape_a, tape_b = lib.location["a0"], lib.location["b0"]
+    trace = [
+        Request(time=0, req_id=0, tape_id=tape_a, name="a0"),
+        Request(time=0, req_id=1, tape_id=tape_a, name="a1"),
+        Request(time=5_000, req_id=2, tape_id=tape_b, name="b0"),
+    ]
+    # in-flight work carries the *tighter* deadline; the arrival is laxer
+    qos = {0: QoSSpec(deadline=20_000), 1: QoSSpec(deadline=20_000),
+           2: QoSSpec(deadline=10**9)}
+    kw = dict(window=0, policy="dp", n_drives=1, qos=qos)
+    a = serve_trace(_two_tape_library(), list(trace), "edf-global", **kw)
+    b = serve_trace(_two_tape_library(), list(trace), "edf-global",
+                    preempt_urgent=True, **kw)
+    assert b.n_preemptions == 0
+    assert _timeline(a) == _timeline(b)
+
+
+def test_class_weights_spend_batch_slack_to_protect_interactive():
+    """Weighting the batch class (+slack on its *scheduling* deadline)
+    re-orders service in favour of interactive requests without touching
+    the reported SLO denominators (slo_report reads true deadlines)."""
+    trace, qos = _weighted_qos_trace()
+    kw = dict(window=400_000, policy="dp", n_drives=2, drive_costs=COSTS,
+              qos=qos)
+    plain = serve_trace(build_library(), trace, "edf-global", **kw)
+    weighted = serve_trace(build_library(), trace, "edf-global",
+                           class_weights={"batch": 8_000_000}, **kw)
+    slo_p, slo_w = slo_report(plain), slo_report(weighted)
+    inter_p = slo_p.for_class("interactive")
+    inter_w = slo_w.for_class("interactive")
+    assert inter_w.n_missed <= inter_p.n_missed  # protected class
+    assert _timeline(plain) != _timeline(weighted)  # weights really re-order
+    # denominators judge true deadlines, not the weighted scheduling ones
+    assert slo_w.n_deadlines == slo_p.n_deadlines
+    assert slo_w.overall.n == slo_p.overall.n
+    # weights are scheduling-only: a zero weight map is the identity
+    zero = serve_trace(build_library(), trace, "edf-global",
+                       class_weights={}, **kw)
+    assert _timeline(zero) == _timeline(plain)
+
+
+def _weighted_qos_trace(n_requests=160):
+    from repro.data.traces import qos_poisson_trace, to_requests
+
+    records = qos_poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=100_000,
+        seed=SEED, tightness=8_000_000,
+    )
+    return to_requests(records, build_library())
+
+
+def test_class_weights_validate():
+    trace = build_trace(n_requests=10)
+    with pytest.raises(ValueError, match="class weight"):
+        serve_trace(build_library(), trace, "edf-global",
+                    class_weights={"batch": -5})
+    with pytest.raises(ValueError, match="class weight"):
+        serve_trace(build_library(), trace, "edf-global",
+                    class_weights={"batch": 1.5})
+
+
+# ---------------------------------------------------------------------------
+# composition with the PR-7 fault layer (satellite: no double-charging)
+# ---------------------------------------------------------------------------
+def _fault_kw():
+    lib = build_library()
+    trace = build_trace(n_requests=96, rate=100_000)
+    plan = seeded_fault_plan(lib, trace, seed=3, n_drives=2,
+                             drive_failures=1, mount_faults=1,
+                             media_faults=1, solver_faults=2)
+    return trace, plan
+
+
+def test_fixed_selector_is_bit_identical_under_faults():
+    """Same fault plan, selector-less vs ``fixed`` selector: identical
+    timelines, identical fault counters — proving the adaptive plumbing
+    neither double-charges retry/backoff nor double-invalidates warm state
+    on the default path."""
+    trace, plan = _fault_kw()
+    kw = dict(window=400_000, policy="dp", n_drives=2, drive_costs=COSTS,
+              faults=plan, retry=RetryPolicy())
+    plain = serve_trace(build_library(), trace, "per-drive-accumulate", **kw)
+    fixed = serve_trace(build_library(), trace, "per-drive-accumulate",
+                        selector="fixed", **kw)
+    assert _timeline(plain) == _timeline(fixed)
+    assert plain.fault_stats == fixed.fault_stats
+    assert plain.n_failed == fixed.n_failed
+    assert [b.degraded_to for b in plain.batches] == [
+        b.degraded_to for b in fixed.batches
+    ]
+
+
+def test_cost_model_selector_composes_with_fault_layer():
+    """Adaptive selection under drive failures, mount faults, media errors
+    and solver faults: every request is conserved (served or typed-failed),
+    the oracle verifies every batch, degradation composes with selection
+    (a degraded batch still carries its selector attribution), and the run
+    replays deterministically."""
+    trace, plan = _fault_kw()
+    budget = ComputeBudget(solve_time_num=10_000, per_tick=120, hysteresis=1)
+
+    def run():
+        return serve_trace(
+            build_library(), trace, "per-drive-accumulate", window=400_000,
+            policy="dp", selector="cost-model", n_drives=2, drive_costs=COSTS,
+            context=build_library().context.replace(budget=budget),
+            warm_start=False, faults=plan, retry=RetryPolicy(),
+        )
+
+    report = run()
+    assert report.n_served + report.n_failed == len(trace)
+    assert report.summary()["all_verified"]
+    assert sum(report.policy_mix.values()) == len(report.batches)
+    assert all(b.policy_used is not None for b in report.batches)
+    again = run()
+    assert _timeline(report) == _timeline(again)
+    assert report.fault_stats == again.fault_stats
+    assert report.policy_mix == again.policy_mix
+
+
+def test_preempt_urgent_composes_with_faults_and_selector():
+    """The full stack at once: QoS admission + urgent preemption + class
+    weights + adaptive selection + fault injection.  Requests stay
+    conserved and the run replays bit-identically."""
+    from repro.data.traces import qos_poisson_trace, to_requests
+
+    records = qos_poisson_trace(
+        build_library(), n_requests=96, mean_interarrival=100_000,
+        seed=SEED, tightness=8_000_000,
+    )
+    trace, qos = to_requests(records, build_library())
+    plan = seeded_fault_plan(build_library(), trace, seed=3, n_drives=2,
+                             drive_failures=1, mount_faults=1)
+    budget = ComputeBudget(solve_time_num=10_000, per_tick=120, hysteresis=1)
+
+    def run():
+        return serve_trace(
+            build_library(), trace, "slack-accumulate", window=400_000,
+            policy="dp", selector="cost-model", n_drives=2, drive_costs=COSTS,
+            qos=qos, preempt_urgent=True,
+            class_weights={"batch": 4_000_000},
+            context=build_library().context.replace(budget=budget),
+            warm_start=False, faults=plan, retry=RetryPolicy(),
+        )
+
+    a, b = run(), run()
+    assert a.n_served + a.n_failed == len(trace)
+    assert a.summary()["all_verified"]
+    assert _timeline(a) == _timeline(b)
+    assert a.fault_stats == b.fault_stats
+
+
+# keep the registry clean for other modules importing this one
+def teardown_module(module):
+    _SELECTORS["fixed"] = FixedSelector()

@@ -583,6 +583,28 @@ def test_journal_stops_at_corrupt_interior_line(tmp_path):
     assert len(events) == 3  # the suffix past a tear is untrustworthy
 
 
+def test_journal_tolerates_newline_terminated_invalid_json(tmp_path):
+    """A corrupt line that *is* newline-terminated but explodes json.loads
+    (a deeply nested ``[[[[...`` run raises RecursionError, not ValueError)
+    must truncate like any other tear — before the fix it escaped the
+    except clause and killed recovery."""
+    full, path = _run_with_journal(tmp_path, "deep.jsonl")
+    data = path.read_bytes()
+    lines = data.splitlines(keepends=True)
+    poison = b"[" * 200_000 + b"\n"  # valid JSON prefix, blows the C parser
+    path.write_bytes(b"".join(lines[:4]) + poison + b"".join(lines[4:]))
+    events = EventJournal.load(path)
+    assert len(events) == 4  # cut at the poison line; the suffix is dropped
+    # ... and recovery from the poisoned journal completes bit-identically,
+    # rebuilding the byte-identical journal past the cut point
+    report = recover_server(
+        small_library(), small_trace(), str(path),
+        admission="accumulate", window=200_000, n_drives=2,
+    )
+    assert _served_sha(report) == _served_sha(full)
+    assert path.read_bytes() == data
+
+
 def test_journal_foreign_run_raises(tmp_path):
     _, path = _run_with_journal(tmp_path, "foreign.jsonl")
     other = poisson_trace(small_library(), n_requests=24,

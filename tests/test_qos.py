@@ -263,6 +263,151 @@ def test_int_quantile_is_exact_nearest_rank():
         int_quantile(vals, 3, 2)
 
 
+def test_int_quantile_edge_cases_pinned():
+    """Regression pins on the exact nearest-rank boundaries: p99 of 100
+    ordered ints is the 99th element (not the max), the 0-quantile and the
+    1-quantile are the extremes, singletons and all-equal inputs are fixed
+    points, and an unsorted input sorts first."""
+    # rank = ceil(0.99*100) = 99 -> the 99th order statistic, NOT 100
+    assert int_quantile(list(range(1, 101)), 99, 100) == 99
+    assert int_quantile(list(range(1, 101)), 1, 1) == 100
+    assert int_quantile(list(range(1, 101)), 0, 100) == 1
+    assert int_quantile([5], 0, 1) == 5
+    assert int_quantile([5], 1, 1) == 5
+    assert int_quantile([3, 3, 3, 3], 99, 100) == 3
+    assert int_quantile([40, 10, 30, 20], 1, 2) == 20  # sorts, not positional
+    # generators are consumed exactly once, like any Iterable
+    assert int_quantile((v for v in (9, 1, 5)), 1, 2) == 5
+    with pytest.raises(ValueError, match="quantile"):
+        int_quantile([1], 1, 0)
+    with pytest.raises(ValueError, match="quantile"):
+        int_quantile([1], -1, 2)
+
+
+def test_class_with_deadlines_but_zero_completions_is_reported():
+    """A class whose deadline-carrying work was entirely dropped by the
+    fault layer must appear in the SLO report with miss_rate 1.0 — before
+    the fix it vanished (no served rows) and its misses were uncounted."""
+    from types import SimpleNamespace
+
+    served = [
+        SimpleNamespace(req_id=0, sojourn=1_000, completed=5_000, faulted=False),
+    ]
+    failed = [SimpleNamespace(req_id=1), SimpleNamespace(req_id=2),
+              SimpleNamespace(req_id=3)]
+    qos = {
+        0: QoSSpec(deadline=9_000, qos_class="batch"),
+        1: QoSSpec(deadline=2_000, qos_class="interactive"),
+        2: QoSSpec(deadline=3_000, qos_class="interactive"),
+        3: QoSSpec(qos_class="interactive"),  # best-effort drop: not a miss
+    }
+    report = SimpleNamespace(
+        admission="edf-global", scheduler="greedy", served=served, failed=failed
+    )
+    slo = slo_report(report, qos)
+    inter = slo.for_class("interactive")
+    assert inter.n == 0  # nothing completed...
+    assert inter.n_failed == 3
+    assert inter.n_deadlines == 2  # ...but the dropped deadlines still count
+    assert inter.n_missed == 2
+    assert inter.miss_rate == 1.0
+    assert inter.n_missed_faulted == 0  # faulted-miss attribution: served only
+    assert (inter.p50_sojourn, inter.total_lateness, inter.max_lateness) == (0, 0, 0)
+    batch = slo.for_class("batch")
+    assert (batch.n, batch.n_failed, batch.n_missed) == (1, 0, 0)
+    assert slo.overall.n_deadlines == 3 and slo.overall.n_missed == 2
+    assert slo.n_failed == 3
+    s = slo.summary()
+    assert s["n_failed"] == 3
+    assert s["classes"]["interactive"]["n_failed"] == 3
+    assert s["classes"]["interactive"]["miss_rate"] == 1.0
+
+
+def test_edf_global_tie_break_is_deterministic_and_pinned():
+    """Equal live deadlines break by (arrival, req_id): the documented total
+    order of ``_edf_key``.  Three same-deadline requests on one busy drive
+    must serve in arrival order, and re-running the serve is bit-identical."""
+    from repro.serving import Request
+
+    def build():
+        lib = TapeLibrary(capacity_per_tape=10_000, u_turn=100)
+        for name in ("first", "a", "b", "c"):
+            lib.store(name, 1_000)
+        return lib
+
+    tid = build().location["first"]
+    trace = [
+        Request(time=0, req_id=0, tape_id=tid, name="first"),
+        # identical deadlines, distinct arrivals: tie broken by arrival
+        Request(time=30, req_id=3, tape_id=tid, name="c"),
+        Request(time=10, req_id=1, tape_id=tid, name="a"),
+        Request(time=10, req_id=2, tape_id=tid, name="b"),
+    ]
+    qos = {i: QoSSpec(deadline=90_000) for i in (1, 2, 3)}
+    runs = [
+        serve_trace(build(), trace, "edf-global", policy="dp", qos=qos,
+                    n_drives=1)
+        for _ in range(2)
+    ]
+    assert _timeline(runs[0]) == _timeline(runs[1])
+    done = {r.req_id: r.completed for r in runs[0].served}
+    # arrival order among the tie; equal arrivals fall back to req_id order
+    assert done[1] < done[2] < done[3]
+
+
+def test_edf_seeded_duplicate_deadline_regression():
+    """Seeded trace with every deadline collapsed onto a handful of values:
+    the serve is deterministic across repeats and across request shuffles
+    restricted to equal-(deadline, arrival) groups (req_id still orders)."""
+    trace, qos = build_qos_trace(8_000_000, n_requests=120)
+    bucket = 4_000_000
+    squashed = {
+        rid: QoSSpec(
+            deadline=None if s.deadline is None
+            else -(-s.deadline // bucket) * bucket,  # ceil onto the grid
+            qos_class=s.qos_class,
+        )
+        for rid, s in qos.items()
+    }
+    runs = [
+        serve_trace(build_library(), trace, "edf-global", policy="dp",
+                    qos=squashed, n_drives=2, drive_costs=COSTS)
+        for _ in range(2)
+    ]
+    assert _timeline(runs[0]) == _timeline(runs[1])
+    assert runs[0].summary()["all_verified"]
+
+
+def test_slack_accumulate_wake_rearm_dedupes_equal_deadlines():
+    """A second request with the *same* deadline arriving mid-hold must not
+    clobber or double-arm the wake timer: the queue still dispatches once,
+    at the first collapse instant, with every queued request aboard."""
+    from repro.serving import Request
+
+    def build():
+        lib = TapeLibrary(capacity_per_tape=10_000, u_turn=100)
+        for name in ("a", "b", "c"):
+            lib.store(name, 2_000)
+        return lib
+
+    tid = build().location["a"]
+    trace = [
+        Request(time=0, req_id=0, tape_id=tid, name="a"),
+        Request(time=100, req_id=1, tape_id=tid, name="b"),
+        Request(time=200, req_id=2, tape_id=tid, name="c"),  # same deadline
+    ]
+    qos = {1: QoSSpec(deadline=25_000), 2: QoSSpec(deadline=25_000)}
+    report = serve_trace(
+        build(), trace, "slack-accumulate", window=20_000, policy="dp",
+        qos=qos,
+    )
+    # collapse instant = 25_000 - 20_000; req 2's arrival re-arms to the
+    # same instant (deduped), not a second, later batch
+    assert [b.dispatched for b in report.batches] == [5_000]
+    assert report.batches[0].n_requests == 3
+    assert report.n_missed == 0
+
+
 def test_qos_spec_validation_and_slack():
     spec = QoSSpec(deadline=1_000, qos_class="interactive")
     assert spec.slack(400) == 600
