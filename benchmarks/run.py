@@ -39,6 +39,12 @@ Paper artefacts reproduced (on the synthetic IN2P3-calibrated dataset):
     never misses more deadlines than the best fixed policy at any swept
     rate (exact virtual-time ints) and that the adaptive arm actually
     switches policy across the sweep.
+  * ``bench_fleet_serving``        — fleet federation: shard-count x
+    placement-strategy sweep on a replicated multi-library archive with one
+    injected whole-shard outage; asserts ``replica-affinity`` routing
+    strictly beats oblivious ``static-hash`` on deadline misses (served
+    misses + dropped requests, exact virtual-time ints) at every swept
+    cell.
 
 All scheduling goes through the solver registry (``repro.core.solver``) under
 an ``ExecutionContext``; every reported cost is re-validated against the
@@ -1122,6 +1128,119 @@ def bench_overload_serving(full: bool = False):
     return overload_rows
 
 
+def bench_fleet_serving(full: bool = False):
+    """Fleet federation sweep: placement strategies under a shard outage.
+
+    A seeded ``replicas``-way replicated archive (every logical file lives
+    on that many shards, :func:`~repro.fleet.demo_fleet`) serves one
+    deadline-annotated federation-wide trace per swept arrival rate, for
+    each swept shard count, while a
+    :class:`~repro.serving.ShardOutage` darkens one whole shard mid-run
+    (every drive on it fails at the same virtual instant).  Three routing
+    arms run on identical traces: ``static-hash`` (oblivious content-hash
+    placement — keeps routing into the dead shard), ``least-loaded``
+    (queue-depth routing over live shard state), and ``replica-affinity``
+    (queue depth x drive health x remount cost).  Retries are exhausted to
+    ``drop`` so a stranded request becomes a recorded failure, not a crash.
+
+    Recorded assertion (exact integer virtual time, machine-independent):
+    at *every* swept (shard count, rate) cell, ``replica-affinity``'s
+    deadline misses are strictly fewer than ``static-hash``'s, where a
+    dropped deadline-carrying request counts as a miss (``n_missed`` among
+    served + ``n_failed``).  The workload is pinned (``--full`` does not
+    widen it): the strict bound is a *recorded* property of this seeded
+    trace + outage, a calibrated operating point rather than a theorem
+    over arbitrary workloads.
+    """
+    from repro.data.traces import qos_poisson_trace, to_requests
+    from repro.fleet import demo_fleet, fleet_catalog, serve_fleet_trace
+    from repro.serving import DriveCosts, RetryPolicy, ShardOutage
+
+    del full  # recorded assertion — workload pinned to the calibrated sweep
+    seed = 20260731
+    n_requests = 180
+    replicas = 2
+    window = 400_000
+    tightness = 8_000_000
+    costs = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+    shard_counts = (2, 3)
+    rates = (60_000, 30_000, 20_000)  # mean inter-arrival: light -> loaded
+    outage_at, outage_shard = 1_500_000, 1
+    placements = ("static-hash", "least-loaded", "replica-affinity")
+
+    fleet_rows = []
+    headline = []
+    for n_shards in shard_counts:
+        outages = (ShardOutage(at=outage_at, shard=outage_shard),)
+
+        def build_fleet():
+            return demo_fleet(seed, n_shards=n_shards, replicas=replicas)
+
+        for rate in rates:
+            libs, rmap = build_fleet()
+            recs = qos_poisson_trace(
+                fleet_catalog(libs, rmap), n_requests=n_requests,
+                mean_interarrival=rate, seed=seed, tightness=tightness,
+            )
+            qtrace, qos = to_requests(recs, fleet_catalog(libs, rmap))
+            misses: dict[str, int] = {}
+            for pl in placements:
+                libs, rmap = build_fleet()  # fresh shards per arm
+                t0 = time.perf_counter()
+                fr = serve_fleet_trace(
+                    libs, qtrace, "slack-accumulate", placement=pl,
+                    replica_map=rmap, outages=outages, window=window,
+                    n_drives=2, drive_costs=costs, qos=qos,
+                    retry=RetryPolicy(on_exhausted="drop"),
+                )
+                dt = time.perf_counter() - t0
+                s = fr.summary()
+                # a dropped deadline-carrying request is a missed deadline
+                misses[pl] = fr.n_missed + fr.n_failed
+                fleet_rows.append({
+                    "n_shards": n_shards, "rate": rate, "placement": pl,
+                    "wall_s": dt, "deadline_misses": misses[pl], **s,
+                })
+                _emit(
+                    f"fleet/{pl}/shards_{n_shards}/rate_{rate}",
+                    dt * 1e6,
+                    f"served={fr.n_served}/{n_requests};"
+                    f"failed={fr.n_failed};missed={fr.n_missed};"
+                    f"rerouted={fr.n_rerouted};"
+                    f"routes={'/'.join(str(fr.routes[i]) for i in range(n_shards))}",
+                )
+            headline.append({
+                "n_shards": n_shards,
+                "rate": rate,
+                "affinity_misses": misses["replica-affinity"],
+                "static_misses": misses["static-hash"],
+                "misses": dict(misses),
+            })
+            assert misses["replica-affinity"] < misses["static-hash"], (
+                f"replica-affinity must strictly beat static-hash on "
+                f"deadline misses under a shard outage: "
+                f"{misses['replica-affinity']} vs {misses['static-hash']} "
+                f"(all arms {misses}) at {n_shards} shards, rate {rate}"
+            )
+
+    (RESULTS / "fleet_serving.json").write_text(json.dumps(fleet_rows, indent=1))
+    RECORD["fleet_serving"] = {
+        "seed": seed,
+        "n_requests": n_requests,
+        "replicas": replicas,
+        "window": window,
+        "tightness": tightness,
+        "shard_counts": list(shard_counts),
+        "rates": list(rates),
+        "costs": dataclasses.asdict(costs),
+        "outage": {"at": outage_at, "shard": outage_shard},
+        "placements": list(placements),
+        "headline": headline,
+        "rows": fleet_rows,
+    }
+    return fleet_rows
+
+
 def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
     """Compare a fresh record against a checked-in baseline snapshot.
 
@@ -1230,7 +1349,38 @@ def check_baseline(record: dict, baseline_path: pathlib.Path) -> int:
             f"{new_over['adaptive_policies_used']}"
         )
 
-    return 0 if (new_speedup >= floor and warm_ok and overload_ok) else 1
+    # -- fleet replica-routing gate (exact virtual-time deadline misses) -----
+    # Same self-contained shape as the overload gate: the fleet sweep's
+    # headline is deterministic given the seeded trace + outage, so re-check
+    # the recorded strict bound on the fresh record; a baseline carrying the
+    # section while the fresh run lacks it means the bench silently stopped
+    # running — fail loudly.
+    fleet_ok = True
+    new_fleet = record.get("fleet_serving")
+    base_fleet = baseline.get("fleet_serving")
+    if new_fleet is None and base_fleet is not None:
+        print("baseline check: missing fleet_serving record (bench not run?)")
+        return 2
+    if new_fleet is not None:
+        worse = [
+            h for h in new_fleet["headline"]
+            if h["affinity_misses"] >= h["static_misses"]
+        ]
+        fleet_ok = not worse
+        print(
+            f"baseline check [{'OK' if fleet_ok else 'REGRESSED'}]: "
+            f"replica-affinity vs static-hash deadline misses under a shard "
+            f"outage at (shards, rate) cells: "
+            + "; ".join(
+                f"({h['n_shards']},{h['rate']}):"
+                f"{h['affinity_misses']}<{h['static_misses']}"
+                for h in new_fleet["headline"]
+            )
+        )
+
+    return 0 if (
+        new_speedup >= floor and warm_ok and overload_ok and fleet_ok
+    ) else 1
 
 
 def main() -> None:
@@ -1239,7 +1389,7 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None, metavar="BENCH[,BENCH...]",
         help="run a subset of {profiles,time,kernel,batch,hetero,policies,"
-             "restore,online,overload} (comma-separated)",
+             "restore,online,overload,fleet} (comma-separated)",
     )
     ap.add_argument(
         "--record", nargs="?", const="BENCH_pr2.json", default=None,
@@ -1263,6 +1413,7 @@ def main() -> None:
         "restore": bench_tape_restore,
         "online": bench_online_serving,
         "overload": bench_overload_serving,
+        "fleet": bench_fleet_serving,
     }
     selected = list(benches) if args.only is None else args.only.split(",")
     unknown = [s for s in selected if s not in benches]

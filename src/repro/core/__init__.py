@@ -15,6 +15,7 @@ from .context import (
     NUMERIC_POLICIES,
     ComputeBudget,
     ExecutionContext,
+    FleetOptions,
     resolve_context,
 )
 from .instance import Instance, make_instance, virtual_lb
@@ -59,7 +60,7 @@ from .solver import (
     solve_batch_warm,
     solve_warm,
 )
-from .cache import CacheBackend, JsonlCacheBackend
+from .cache import CacheBackend, CacheLockedError, JsonlCacheBackend
 from .warm import WarmState, WarmStats
 
 __all__ = [
@@ -68,6 +69,7 @@ __all__ = [
     "NUMERIC_POLICIES",
     "ComputeBudget",
     "DEFAULT_BUDGET",
+    "FleetOptions",
     "resolve_context",
     "Instance",
     "make_instance",
@@ -101,6 +103,7 @@ __all__ = [
     "solve_warm",
     "solve_batch_warm",
     "CacheBackend",
+    "CacheLockedError",
     "JsonlCacheBackend",
     "WarmState",
     "WarmStats",

@@ -42,7 +42,43 @@ from typing import Protocol, runtime_checkable
 from .instance import Instance
 from .solver import SolveCache, SolveResult
 
-__all__ = ["CacheBackend", "JsonlCacheBackend"]
+__all__ = ["CacheBackend", "CacheLockedError", "JsonlCacheBackend"]
+
+
+class CacheLockedError(RuntimeError):
+    """Another live writer already owns this cache journal path.
+
+    Two concurrent appenders would interleave half-lines and tear the
+    journal, so :class:`JsonlCacheBackend` takes a sidecar lockfile on
+    construction and refuses a second writer — in this process (a backend
+    not yet :meth:`~JsonlCacheBackend.close`\\ d) or in another live one.  A
+    lockfile left behind by a dead process (stale pid) is taken over
+    silently.
+    """
+
+    def __init__(self, path: str, pid: int):
+        self.path = path
+        self.pid = pid
+        super().__init__(
+            f"cache journal {path!r} is already open for writing by live "
+            f"process {pid}; close() the other backend first"
+        )
+
+
+def _pid_alive(pid: int) -> bool:
+    """Best-effort liveness probe (signal 0; EPERM still means alive)."""
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (PermissionError, OSError):
+        return True
+    return True
+
+
+#: journal paths (absolute) held open for writing by this process; guards
+#: the same-process two-writer case the pid probe cannot distinguish.
+_OPEN_JOURNALS: set[str] = set()
 
 
 @runtime_checkable
@@ -107,6 +143,8 @@ class JsonlCacheBackend(SolveCache):
                  warm_maxsize: int = 512):
         super().__init__(maxsize=maxsize, warm_maxsize=warm_maxsize)
         self.path = os.fspath(path)
+        self._locked = False
+        self._acquire_lock()
         self.loaded = 0
         if os.path.exists(self.path):
             with open(self.path, encoding="utf-8") as fh:
@@ -195,6 +233,48 @@ class JsonlCacheBackend(SolveCache):
 
     def close(self) -> None:
         self._fh.close()
+        self._release_lock()
 
     def stats(self) -> dict[str, int]:
         return {**super().stats(), "loaded": self.loaded}
+
+    # -- single-writer lockfile ------------------------------------------------
+    # Shards of a serving fleet may share one persistent memo *object*, but
+    # two independent appenders on one journal file would interleave torn
+    # lines.  The lock is a sidecar ``<path>.lock`` holding the writer's pid:
+    # construction refuses when the pid is a live foreign process or the path
+    # is already open in this process; a dead pid (or corrupt lockfile) is
+    # stale and taken over.
+    @property
+    def _lock_path(self) -> str:
+        return self.path + ".lock"
+
+    def _acquire_lock(self) -> None:
+        key = os.path.abspath(self.path)
+        if key in _OPEN_JOURNALS:
+            raise CacheLockedError(self.path, os.getpid())
+        if os.path.exists(self._lock_path):
+            try:
+                with open(self._lock_path, encoding="utf-8") as fh:
+                    pid = int(fh.read().strip())
+            except (ValueError, OSError):
+                pid = None  # corrupt/unreadable lockfile: stale
+            if pid is not None and pid != os.getpid() and _pid_alive(pid):
+                raise CacheLockedError(self.path, pid)
+            # stale: dead owner, corrupt file, or a leaked same-process
+            # handle that was never close()d (not registered above)
+        with open(self._lock_path, "w", encoding="utf-8") as fh:
+            fh.write(f"{os.getpid()}\n")
+            fh.flush()
+        _OPEN_JOURNALS.add(key)
+        self._locked = True
+
+    def _release_lock(self) -> None:
+        if not self._locked:
+            return
+        self._locked = False
+        _OPEN_JOURNALS.discard(os.path.abspath(self.path))
+        try:
+            os.remove(self._lock_path)
+        except OSError:
+            pass

@@ -62,6 +62,7 @@ __all__ = [
     "NUMERIC_POLICIES",
     "ComputeBudget",
     "DEFAULT_BUDGET",
+    "FleetOptions",
     "ExecutionContext",
     "DEFAULT_CONTEXT",
     "resolve_context",
@@ -141,6 +142,43 @@ DEFAULT_BUDGET = ComputeBudget()
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetOptions:
+    """Federation shape for the fleet serving layer (:mod:`repro.fleet`).
+
+    Rides :class:`ExecutionContext` so launchers and helpers can thread the
+    federation configuration through the same object that already carries
+    backend/cache/budget choices: ``n_shards`` per-library shards, the
+    registered :class:`~repro.fleet.PlacementStrategy` name routing each
+    request, and the replication factor seeded fleet archives store each
+    logical file at.  The defaults describe the degenerate one-shard
+    federation whose timeline is pinned bit-identical to a standalone
+    :class:`~repro.serving.queue.OnlineTapeServer`; a context without fleet
+    options (``fleet=None``, the default) behaves identically everywhere.
+    """
+
+    n_shards: int = 1
+    placement: str = "single"
+    replicas: int = 1
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if not self.replicas or self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if self.replicas > self.n_shards:
+            raise ValueError(
+                f"replication factor {self.replicas} exceeds "
+                f"n_shards={self.n_shards}"
+            )
+        if not self.placement or not isinstance(self.placement, str):
+            raise ValueError("placement must be a registered strategy name")
+
+    def replace(self, **changes) -> "FleetOptions":
+        """A copy with the given fields changed (options are immutable)."""
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionContext:
     """Immutable bundle of execution options for the scheduling API."""
 
@@ -150,6 +188,7 @@ class ExecutionContext:
     cand_tile: int | None = None
     numeric_policy: str = "strict"
     budget: ComputeBudget | None = None
+    fleet: FleetOptions | None = None
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -165,6 +204,8 @@ class ExecutionContext:
             raise ValueError("cand_tile must be >= 1 (or None for the default)")
         if self.budget is not None and not isinstance(self.budget, ComputeBudget):
             raise TypeError(f"budget must be a ComputeBudget, got {self.budget!r}")
+        if self.fleet is not None and not isinstance(self.fleet, FleetOptions):
+            raise TypeError(f"fleet must be a FleetOptions, got {self.fleet!r}")
 
     def replace(self, **changes) -> "ExecutionContext":
         """A copy with the given fields changed (contexts are immutable)."""

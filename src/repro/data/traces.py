@@ -40,6 +40,7 @@ from ..serving.sim import Request, poisson_trace
 
 __all__ = [
     "TRACE_SCHEMA",
+    "TRACE_SCHEMA_V2",
     "DEFAULT_QOS_CLASSES",
     "TraceRecord",
     "write_trace",
@@ -50,7 +51,11 @@ __all__ = [
 ]
 
 #: schema tag written into (and required from) every trace file's header line.
+#: v1 traces carry no ``library`` field; the writer only emits the v2 tag
+#: when at least one record uses it, so a v1 file round-trips byte-identically.
 TRACE_SCHEMA = "ltsp-trace/v1"
+TRACE_SCHEMA_V2 = "ltsp-trace/v2"
+_TRACE_SCHEMAS = (TRACE_SCHEMA, TRACE_SCHEMA_V2)
 
 #: (class name, draw weight, slack multiplier): interactive users get tight
 #: deadlines, batch jobs sixteen times the slack.  Weights are relative.
@@ -77,6 +82,11 @@ class TraceRecord:
     multiplicity: int = 1
     deadline: int | None = None
     qos_class: str = DEFAULT_CLASS
+    #: origin-library label for federated (multi-library) traces; ``None``
+    #: (the default, and the only v1 value) expands and replays identically
+    #: to a pre-fleet record — the field is advisory routing metadata, never
+    #: part of the expansion.
+    library: str | None = None
 
     def __post_init__(self) -> None:
         if self.arrival < 0:
@@ -89,6 +99,8 @@ class TraceRecord:
             )
         if not self.qos_class:
             raise ValueError("qos_class must be a non-empty label")
+        if self.library is not None and not self.library:
+            raise ValueError("library must be a non-empty label (or None)")
 
 
 def write_trace(path, records: Iterable[TraceRecord]) -> pathlib.Path:
@@ -99,11 +111,18 @@ def write_trace(path, records: Iterable[TraceRecord]) -> pathlib.Path:
     ``write(r)``.
     """
     path = pathlib.Path(path)
-    lines = [json.dumps({"schema": TRACE_SCHEMA}, sort_keys=True, separators=(",", ":"))]
+    records = list(records)
+    # schema-versioned: the v2 tag (and the ``library`` key) only appear when
+    # a record actually carries a library, so pre-fleet traces keep writing
+    # the exact v1 bytes they always did
+    fleet = any(rec.library is not None for rec in records)
+    schema = TRACE_SCHEMA_V2 if fleet else TRACE_SCHEMA
+    lines = [json.dumps({"schema": schema}, sort_keys=True, separators=(",", ":"))]
     for rec in records:
-        lines.append(
-            json.dumps(dataclasses.asdict(rec), sort_keys=True, separators=(",", ":"))
-        )
+        row = dataclasses.asdict(rec)
+        if row["library"] is None:
+            del row["library"]
+        lines.append(json.dumps(row, sort_keys=True, separators=(",", ":")))
     path.write_text("\n".join(lines) + "\n")
     return path
 
@@ -113,7 +132,7 @@ def read_trace(path) -> list[TraceRecord]:
     path = pathlib.Path(path)
     fields = {f.name for f in dataclasses.fields(TraceRecord)}
     records: list[TraceRecord] = []
-    header_seen = False
+    schema: str | None = None
     for lineno, line in enumerate(path.read_text().splitlines(), start=1):
         if not line.strip():
             continue
@@ -124,21 +143,27 @@ def read_trace(path) -> list[TraceRecord]:
         if not isinstance(obj, dict):
             raise ValueError(f"{path}:{lineno}: expected a JSON object")
         if "schema" in obj:
-            if obj["schema"] != TRACE_SCHEMA:
+            if obj["schema"] not in _TRACE_SCHEMAS:
                 raise ValueError(
                     f"{path}:{lineno}: unsupported schema {obj['schema']!r} "
-                    f"(expected {TRACE_SCHEMA!r})"
+                    f"(expected one of {_TRACE_SCHEMAS})"
                 )
-            header_seen = True
+            schema = obj["schema"]
             continue
         unknown = set(obj) - fields
         if unknown:
             raise ValueError(f"{path}:{lineno}: unknown field(s) {sorted(unknown)}")
+        if "library" in obj and schema == TRACE_SCHEMA:
+            # strictness the schema tag buys: a v1 file smuggling the v2
+            # field is malformed, not silently accepted
+            raise ValueError(
+                f"{path}:{lineno}: 'library' needs a {TRACE_SCHEMA_V2!r} header"
+            )
         try:
             records.append(TraceRecord(**obj))
         except (TypeError, ValueError) as e:
             raise ValueError(f"{path}:{lineno}: bad record ({e})") from None
-    if not header_seen:
+    if schema is None:
         raise ValueError(f"{path}: missing {TRACE_SCHEMA!r} schema header line")
     return records
 
@@ -208,6 +233,7 @@ def qos_poisson_trace(
     skew: float = 1.1,
     tightness: int = 4_000_000,
     classes: tuple[tuple[str, float, int], ...] = DEFAULT_QOS_CLASSES,
+    libraries: Sequence[str] | None = None,
 ) -> list[TraceRecord]:
     """Deadline/class-annotated seeded trace (extends ``poisson_trace``).
 
@@ -218,18 +244,33 @@ def qos_poisson_trace(
     from ``classes`` and sets ``deadline = arrival + tightness *
     slack_multiplier`` (exact ints; ``tightness`` is the deadline-pressure
     knob the benchmarks sweep).
+
+    ``libraries`` names the shards of a federation: when given, a *third*
+    independent seeded stream draws each record's origin ``library`` label
+    uniformly from the sequence.  The draw never perturbs arrivals, files,
+    classes, or deadlines (separate :class:`numpy.random.SeedSequence`
+    branch), so a fleet trace and its single-library twin replay the same
+    workload — and the labels round-trip through :func:`write_trace` under
+    the v2 schema.
     """
     if tightness < 1:
         raise ValueError("tightness must be >= 1")
     if not classes:
         raise ValueError("classes must be non-empty")
+    if libraries is not None and not libraries:
+        raise ValueError("libraries must be non-empty when given")
     base = poisson_trace(library, n_requests, mean_interarrival, seed, skew)
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0x51A0]))
     weights = np.array([w for _, w, _ in classes], dtype=float)
     weights /= weights.sum()
     picks = rng.choice(len(classes), size=len(base), p=weights)
+    lib_labels: list[str | None] = [None] * len(base)
+    if libraries is not None:
+        lib_rng = np.random.default_rng(np.random.SeedSequence([seed, 0xF1EE]))
+        draws = lib_rng.integers(0, len(libraries), size=len(base))
+        lib_labels = [str(libraries[int(d)]) for d in draws]
     records = []
-    for req, pick in zip(base, picks):
+    for req, pick, lib_label in zip(base, picks, lib_labels):
         name, _, slack_mult = classes[int(pick)]
         records.append(
             TraceRecord(
@@ -239,6 +280,7 @@ def qos_poisson_trace(
                 multiplicity=1,
                 deadline=req.time + tightness * int(slack_mult),
                 qos_class=name,
+                library=lib_label,
             )
         )
     return records

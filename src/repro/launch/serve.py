@@ -80,6 +80,22 @@ fault site; the table gains completed/failed/requeued columns.
 (possibly torn) journal from a crashed run it recovers bit-identically and
 completes the log (single-admission runs only).
 
+Fleet federation (``--serve-tape-fleet``)
+-----------------------------------------
+``--serve-tape-fleet`` scales the queue simulation out to a *federation*
+(:mod:`repro.fleet`): ``--fleet-shards`` per-library shards serve one
+arrival stream in shared exact virtual time, each logical file stored on
+``--fleet-replicas`` shards, and ``--fleet-placement`` picks the routing
+strategy (``single`` / ``static-hash`` / ``least-loaded`` /
+``replica-affinity``; ``all`` sweeps every strategy valid for the shard
+count).  ``--fleet-outage-at T`` (with ``--fleet-outage-shard I``) injects
+a :class:`~repro.serving.faults.ShardOutage` — shard ``I`` goes dark at
+``T``, its orphaned requests re-route to surviving replicas — and the
+printed table compares placements on served/failed/rerouted counts,
+service times, and deadline misses.  The federation configuration rides
+the :class:`~repro.core.ExecutionContext` as
+:class:`~repro.core.FleetOptions`.
+
 Every emitted schedule is validated by the **simulator oracle**
 (:mod:`repro.serving.sim` via :func:`repro.core.verify.verify_schedule`): the
 discrete-event replay independently recomputes the schedule's cost from the
@@ -363,6 +379,148 @@ def _serve_tape_queue(args) -> int:
     return 0
 
 
+def _serve_tape_fleet(args) -> int:
+    """Drive the fleet federation on one federation-wide arrival trace.
+
+    Builds a seeded ``--fleet-shards``-shard archive with
+    ``--fleet-replicas``-way replication, generates one trace over the
+    unified catalogue, and serves it under each requested placement
+    strategy (fresh shard libraries per run, so runs never share state).
+    The federation configuration rides the
+    :class:`~repro.core.ExecutionContext` as
+    :class:`~repro.core.FleetOptions` — ``serve_fleet_trace`` reads the
+    placement from there.  Deterministic given ``--tape-seed``.
+    """
+    from ..core.context import FleetOptions
+    from ..core.solver import SolveCache
+    from ..data.traces import qos_poisson_trace, to_requests
+    from ..fleet import demo_fleet, fleet_catalog, serve_fleet_trace
+    from ..serving.drives import DriveCosts, RetryPolicy
+    from ..serving.faults import ShardOutage
+    from ..serving.queue import WINDOWED_ADMISSIONS
+    from ..serving.sim import poisson_trace
+
+    n_shards = args.fleet_shards
+    if n_shards < 1:
+        print("--fleet-shards must be >= 1")
+        return 2
+    if not (1 <= args.fleet_replicas <= n_shards):
+        print("--fleet-replicas must be between 1 and --fleet-shards")
+        return 2
+    if args.fleet_placement == "all":
+        placements = (
+            ["single"]
+            if n_shards == 1
+            else ["static-hash", "least-loaded", "replica-affinity"]
+        )
+    else:
+        placements = [args.fleet_placement]
+    if "single" in placements and n_shards != 1:
+        print("placement 'single' is the one-shard NoOp default; pick a "
+              "routing strategy (or --fleet-shards 1)")
+        return 2
+
+    def build_fleet():
+        return demo_fleet(
+            args.tape_seed,
+            n_shards=n_shards,
+            n_files=args.tape_files,
+            replicas=args.fleet_replicas,
+            with_cache=False,  # the run's shared memo lives on the context
+        )
+
+    libs, rmap = build_fleet()
+    catalog = fleet_catalog(libs, rmap)
+    qos = {}
+    if args.tape_tightness is not None:
+        records = qos_poisson_trace(
+            catalog,
+            n_requests=args.tape_requests,
+            mean_interarrival=args.tape_rate,
+            seed=args.tape_seed,
+            tightness=args.tape_tightness,
+        )
+        trace, qos = to_requests(records)
+    else:
+        trace = poisson_trace(
+            catalog,
+            n_requests=args.tape_requests,
+            mean_interarrival=args.tape_rate,
+            seed=args.tape_seed,
+        )
+    outages = ()
+    retry = None
+    if args.fleet_outage_at is not None:
+        if not (0 <= args.fleet_outage_shard < n_shards):
+            print("--fleet-outage-shard must name a shard in the fleet")
+            return 2
+        outages = (ShardOutage(at=args.fleet_outage_at,
+                               shard=args.fleet_outage_shard),)
+        # drop (typed FailedRequest rows) rather than raise when a dark
+        # shard strands replicas-of-one requests: the table compares
+        # placements on completion instead of dying on the first run
+        retry = RetryPolicy(on_exhausted="drop")
+    admission = (
+        "accumulate" if args.tape_admission == "all" else args.tape_admission
+    )
+    costs = DriveCosts(
+        mount=args.tape_mount_cost,
+        unmount=args.tape_unmount_cost,
+        load_seek=args.tape_load_seek,
+    )
+    print(
+        f"fleet serving: {n_shards} shard(s) x "
+        f"{args.tape_drives if args.tape_drives else 'dedicated'} drive(s), "
+        f"{args.fleet_replicas}-way replicas, {len(trace)} requests, "
+        f"admission {admission}, policy {args.tape_policy}/{args.tape_backend}"
+        + (f", outage: shard {args.fleet_outage_shard} at "
+           f"{args.fleet_outage_at}" if outages else "")
+    )
+    deadline_cols = ",missed,miss_rate" if qos else ""
+    print(f"placement,served,failed,rerouted,mean_sojourn,p95_sojourn,"
+          f"mounts{deadline_cols}")
+    for pl in placements:
+        libs, rmap = build_fleet()
+        ctx = ExecutionContext(
+            backend=args.tape_backend,
+            cache=SolveCache(),
+            fleet=FleetOptions(
+                n_shards=n_shards, placement=pl, replicas=args.fleet_replicas
+            ),
+        )
+        t0 = time.time()
+        fr = serve_fleet_trace(
+            libs,
+            trace,
+            admission,
+            replica_map=rmap,
+            outages=outages,
+            window=(
+                args.tape_window if admission in WINDOWED_ADMISSIONS else 0
+            ),
+            policy=args.tape_policy,
+            n_drives=args.tape_drives,
+            drive_costs=costs,
+            qos=qos or None,
+            context=ctx,
+            warm_start=not args.no_tape_warm,
+            retry=retry,
+        )
+        dt = time.time() - t0
+        s = fr.summary()
+        extra = ""
+        if qos:
+            extra = f",{s['n_missed']}/{s['n_deadlines']},{s['miss_rate']:.3f}"
+        print(
+            f"{pl},{fr.n_served}/{len(trace)},{fr.n_failed},{fr.n_rerouted},"
+            f"{s['mean_sojourn']:.4g},{s['p95_sojourn']:.4g},{s['mounts']}"
+            f"{extra} ({dt*1e3:.0f} ms wall; routes "
+            + "/".join(str(fr.routes[i]) for i in range(n_shards))
+            + ")"
+        )
+    return 0
+
+
 def main() -> None:
     from ..serving.drives import MOUNT_SCHEDULERS
     from ..serving.queue import ADMISSIONS
@@ -383,6 +541,24 @@ def main() -> None:
                          "(admission-policy comparison) instead of model serving")
     ap.add_argument("--tape-admission", default="all",
                     choices=[*ADMISSIONS, "all"])
+    ap.add_argument("--serve-tape-fleet", action="store_true",
+                    help="run the sharded fleet-federation simulation "
+                         "(placement-strategy comparison) instead of model "
+                         "serving")
+    ap.add_argument("--fleet-shards", type=int, default=3, metavar="N",
+                    help="per-library shards in the federation")
+    ap.add_argument("--fleet-placement", default="all",
+                    choices=["single", "static-hash", "least-loaded",
+                             "replica-affinity", "all"],
+                    help="replica routing strategy ('all' sweeps every "
+                         "strategy valid for the shard count)")
+    ap.add_argument("--fleet-replicas", type=int, default=2, metavar="K",
+                    help="shards each logical file is replicated on")
+    ap.add_argument("--fleet-outage-at", type=int, default=None, metavar="T",
+                    help="inject a ShardOutage (whole shard dark) at this "
+                         "virtual time")
+    ap.add_argument("--fleet-outage-shard", type=int, default=0, metavar="I",
+                    help="shard the injected outage darkens")
     ap.add_argument("--tape-selector", default=None,
                     choices=list_selectors(),
                     help="load-adaptive solver selection: re-pick the solve "
@@ -447,6 +623,8 @@ def main() -> None:
 
     if args.serve_tape_queue:
         raise SystemExit(_serve_tape_queue(args))
+    if args.serve_tape_fleet:
+        raise SystemExit(_serve_tape_fleet(args))
 
     cfg = ARCHS[args.arch]
     if args.reduced:

@@ -6,6 +6,12 @@ mount scheduling (:mod:`.drives`), the discrete-event simulator oracle and
 report types (:mod:`.sim`), the QoS layer (:mod:`.qos`), and the opt-in
 fault-injection / crash-recovery layer (:mod:`.faults`).
 
+Everything here simulates *one* robotic library; :mod:`repro.fleet`
+federates N of these servers (sharded multi-library serving with replica
+routing, shard-wide outages, and merged SLO accounting) by driving the
+event loop's stepping primitives in shared exact virtual time — each shard
+stays an unmodified :class:`~repro.serving.queue.OnlineTapeServer`.
+
 The model-serving step builder (:mod:`.serve`) is deliberately *not*
 re-exported: it pulls in the neural-network stack, which tape-serving
 callers don't need.
@@ -36,6 +42,7 @@ from .faults import (
     MediaReadError,
     MountFailedError,
     MountFault,
+    ShardOutage,
     SolverFault,
     recover_server,
     seeded_fault_plan,
@@ -108,6 +115,7 @@ __all__ = [
     "FaultPlan",
     "FaultInjector",
     "DriveFailure",
+    "ShardOutage",
     "MountFault",
     "MediaFault",
     "SolverFault",

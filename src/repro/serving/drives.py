@@ -430,7 +430,10 @@ class DrivePool:
             "mount_time": self.mount_time,
         }
         # conditional so fault-free reports stay key-for-key identical to
-        # the pre-fault-layer format
+        # the pre-fault-layer format; ``alive_drives`` rides along so that a
+        # pool failed down to zero capacity reports it (``n_drives`` counts
+        # the configured drives, dead ones included)
         if self.n_drive_failures:
             out["drive_failures"] = self.n_drive_failures
+            out["alive_drives"] = len(self.alive)
         return out

@@ -69,6 +69,7 @@ from .sim import Leg
 
 __all__ = [
     "DriveFailure",
+    "ShardOutage",
     "MountFault",
     "MediaFault",
     "SolverFault",
@@ -129,6 +130,31 @@ class DriveFailure:
             raise ValueError("failure time must be >= 0")
         if self.drive < 0:
             raise ValueError("drive id must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardOutage:
+    """Every drive of federation shard ``shard`` hard-fails at time ``at``.
+
+    The shared-fault-domain analogue of :class:`DriveFailure`: a whole
+    robotic library (one :class:`~repro.fleet.FleetServer` shard) goes dark
+    at one virtual instant — power loss, arm jam, network partition.  The
+    fleet layer expands it into per-drive hard failures on the shard (each
+    through the standard :meth:`OnlineTapeServer._fail_drive` abort/requeue
+    machinery) and then re-routes every orphaned queued request that has a
+    replica on a surviving shard.  Requests without a surviving replica
+    follow the shard's own :class:`~repro.serving.drives.RetryPolicy`
+    exhaustion path (typed raise or typed drop).
+    """
+
+    at: int
+    shard: int
+
+    def __post_init__(self) -> None:
+        if self.at < 0:
+            raise ValueError("outage time must be >= 0")
+        if self.shard < 0:
+            raise ValueError("shard index must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -601,6 +601,19 @@ class OnlineTapeServer:
 
     def run(self, trace: list[Request]) -> ServiceReport:
         """Serve a full arrival trace; returns the per-request report."""
+        self._begin(trace)
+        while self._events:
+            self._step()
+        return self._finish()
+
+    # -- stepping primitives (the fleet layer in repro.fleet drives these) ----
+    # ``run`` is begin -> step-until-drained -> finish, so a federation can
+    # interleave several servers in one shared virtual clock by always
+    # stepping the server whose next event is globally earliest.  A shard
+    # driven this way receives its arrivals one at a time (_on_arrival)
+    # instead of pre-seeded, and stays an unmodified OnlineTapeServer.
+    def _begin(self, trace: list[Request]) -> None:
+        """Initialise run state and seed the event heap (no events popped)."""
         self._events: list = []
         self._seq = 0
         n = self.n_drives if self.n_drives is not None else max(1, len(self.lib.tapes))
@@ -626,7 +639,7 @@ class OnlineTapeServer:
         self._sel_timings: dict[str, tuple[int, int]] = {}
         self._sel_active: dict[str, str] = {}
         self._sel_pending: dict[str, tuple[str, int]] = {}
-        horizon = 0
+        self._horizon = 0
 
         for req in sorted(trace):
             self._push(req.time, "arrival", req)
@@ -643,44 +656,56 @@ class OnlineTapeServer:
             window=self.window, n_trace=len(trace),
         )
 
-        while self._events:
-            now, _, kind, data = heapq.heappop(self._events)
-            horizon = max(horizon, now)
-            if kind == "arrival":
-                req: Request = data
-                tape_id = self.lib.enqueue(req.name, req)
-                self._log(ev="enqueue", t=now, req=req.req_id, tape=tape_id)
-                if self.admission == "preempt":
-                    drive = self.pool.drive_of(tape_id)
-                    if drive is not None and drive.busy and now < drive.service_end:
-                        self._preempt(drive, now)
-                if self.preempt_urgent:
-                    self._maybe_preempt_urgent(req, tape_id, now)
-                self._schedule(now)
-            elif kind == "free":
-                drive_id, epoch = data
-                drive = self.pool.drives[drive_id]
-                if epoch != drive.epoch or not drive.busy:
-                    continue  # superseded by a preemption
-                self._complete(drive)
-                self._schedule(now)
-            elif kind == "wake":
-                tape_id, when = data
-                if self._next_wake.get(tape_id) != when:
-                    continue  # superseded timer
-                del self._next_wake[tape_id]
-                self._schedule(now)
-            elif kind == "drive-fail":
-                self._fail_drive(self.pool.drives[data], now)
-                self._schedule(now)
-            elif kind == "media-abort":
-                drive_id, epoch, span = data
-                drive = self.pool.drives[drive_id]
-                if epoch != drive.epoch or not drive.busy or drive.failed:
-                    continue  # batch already gone (preempted / drive died)
-                self._media_abort(drive, now, span)
-                self._schedule(now)
+    def _next_time(self) -> int | None:
+        """Virtual time of the next queued event (None: heap drained)."""
+        return self._events[0][0] if self._events else None
 
+    def _on_arrival(self, req: Request, now: int) -> None:
+        """Admit one arriving request at ``now`` (the arrival event body)."""
+        self._horizon = max(self._horizon, now)
+        tape_id = self.lib.enqueue(req.name, req)
+        self._log(ev="enqueue", t=now, req=req.req_id, tape=tape_id)
+        if self.admission == "preempt":
+            drive = self.pool.drive_of(tape_id)
+            if drive is not None and drive.busy and now < drive.service_end:
+                self._preempt(drive, now)
+        if self.preempt_urgent:
+            self._maybe_preempt_urgent(req, tape_id, now)
+        self._schedule(now)
+
+    def _step(self) -> None:
+        """Pop and process exactly one event from the heap."""
+        now, _, kind, data = heapq.heappop(self._events)
+        self._horizon = max(self._horizon, now)
+        if kind == "arrival":
+            self._on_arrival(data, now)
+        elif kind == "free":
+            drive_id, epoch = data
+            drive = self.pool.drives[drive_id]
+            if epoch != drive.epoch or not drive.busy:
+                return  # superseded by a preemption
+            self._complete(drive)
+            self._schedule(now)
+        elif kind == "wake":
+            tape_id, when = data
+            if self._next_wake.get(tape_id) != when:
+                return  # superseded timer
+            del self._next_wake[tape_id]
+            self._schedule(now)
+        elif kind == "drive-fail":
+            self._fail_drive(self.pool.drives[data], now)
+            self._schedule(now)
+        elif kind == "media-abort":
+            drive_id, epoch, span = data
+            drive = self.pool.drives[drive_id]
+            if epoch != drive.epoch or not drive.busy or drive.failed:
+                return  # batch already gone (preempted / drive died)
+            self._media_abort(drive, now, span)
+            self._schedule(now)
+
+    def _finish(self) -> ServiceReport:
+        """Drain unservable leftovers and assemble the final report."""
+        horizon = self._horizon
         self._drain_unservable(horizon)
         horizon = max([horizon] + [d.busy_until for d in self.pool.alive])
         fault_stats = None

@@ -12,13 +12,21 @@ Acceptance bars:
   restarts (replay -> memo hits without re-solving), tolerates torn/foreign
   lines, and ``compact()``/``clear()`` behave;
 * both shipped backends satisfy the runtime-checkable
-  :class:`~repro.core.CacheBackend` protocol.
+  :class:`~repro.core.CacheBackend` protocol;
+* the journal is single-writer: a second live writer on the same path is
+  refused with :class:`~repro.core.CacheLockedError` (two appenders would
+  interleave torn lines), while a lockfile left by a dead process is taken
+  over silently.
 """
 
 import json
+import os
+
+import pytest
 
 from repro.core import (
     CacheBackend,
+    CacheLockedError,
     ExecutionContext,
     JsonlCacheBackend,
     SolveCache,
@@ -251,6 +259,61 @@ def test_shipped_backends_satisfy_protocol(tmp_path):
     assert isinstance(SolveCache(), CacheBackend)
     backend = JsonlCacheBackend(tmp_path / "p.jsonl")
     assert isinstance(backend, CacheBackend)
+    backend.close()
+
+
+# ---------------------------------------------------------------------------
+# single-writer lockfile: concurrent appenders are refused, stale locks
+# are taken over
+# ---------------------------------------------------------------------------
+def test_jsonl_backend_refuses_second_concurrent_writer(tmp_path):
+    path = str(tmp_path / "memo.jsonl")
+    first = JsonlCacheBackend(path)
+    with pytest.raises(CacheLockedError) as exc:
+        JsonlCacheBackend(path)
+    assert exc.value.path == path
+    assert exc.value.pid == os.getpid()
+    # the refused constructor must not have stolen or removed the lock
+    assert os.path.exists(path + ".lock")
+    first.close()
+
+
+def test_jsonl_backend_close_releases_the_lock(tmp_path, rng):
+    path = str(tmp_path / "memo.jsonl")
+    first = JsonlCacheBackend(path)
+    inst = random_instance(rng, lo=2, hi=6)
+    solve(inst, policy="dp", context=ExecutionContext(cache=first))
+    first.close()
+    assert not os.path.exists(path + ".lock")
+    second = JsonlCacheBackend(path)  # reopen after close: allowed
+    assert second.loaded == 1
+    second.close()
+
+
+def test_jsonl_backend_takes_over_stale_lock(tmp_path, monkeypatch):
+    import repro.core.cache as cache_mod
+
+    path = str(tmp_path / "memo.jsonl")
+    # a lockfile whose owner pid is dead (monkeypatched probe — a real pid
+    # could be recycled by the OS mid-test)
+    (tmp_path / "memo.jsonl.lock").write_text("99999\n")
+    monkeypatch.setattr(cache_mod, "_pid_alive", lambda pid: False)
+    backend = JsonlCacheBackend(path)
+    assert (tmp_path / "memo.jsonl.lock").read_text().strip() == str(os.getpid())
+    backend.close()
+    # a *live* foreign owner is refused
+    (tmp_path / "memo.jsonl.lock").write_text("99999\n")
+    monkeypatch.setattr(cache_mod, "_pid_alive", lambda pid: True)
+    with pytest.raises(CacheLockedError) as exc:
+        JsonlCacheBackend(path)
+    assert exc.value.pid == 99999
+
+
+def test_jsonl_backend_takes_over_corrupt_lock(tmp_path):
+    path = str(tmp_path / "memo.jsonl")
+    (tmp_path / "memo.jsonl.lock").write_text("not-a-pid\n")
+    backend = JsonlCacheBackend(path)  # corrupt lockfile counts as stale
+    assert (tmp_path / "memo.jsonl.lock").read_text().strip() == str(os.getpid())
     backend.close()
 
 

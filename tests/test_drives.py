@@ -13,7 +13,7 @@ online loop — including the ISSUE acceptance bar:
 import pytest
 
 from repro.core import ExecutionContext
-from repro.serving.drives import DriveCosts, DrivePool
+from repro.serving.drives import DriveCosts, DrivePool, LRUScheduler, MountView
 from repro.serving.queue import (
     ADMISSIONS,
     LEGACY_ADMISSIONS,
@@ -120,6 +120,52 @@ def test_all_drives_failed_pool_cannot_serve():
     assert pool.alive == []
     assert not pool.can_serve("A")
     assert pool.n_drive_failures == 2
+
+
+def test_all_drives_failed_stats_report_zero_capacity():
+    """A pool failed down to nothing must say so: ``n_drives`` counts the
+    configured drives (dead included), so ``alive_drives`` rides along with
+    the failure counter — regression for stats() reading as a healthy
+    2-drive pool after every drive died."""
+    pool = DrivePool(2, COSTS)
+    pool.acquire("A")
+    for d in list(pool.drives):
+        pool.fail_drive(d)
+    s = pool.stats()
+    assert s["n_drives"] == 2
+    assert s["drive_failures"] == 2
+    assert s["alive_drives"] == 0
+    # mount accounting from before the failures is preserved
+    assert s["mounts"] == 1
+    # partial failure reports the survivors
+    half = DrivePool(2, COSTS)
+    half.fail_drive(half.drives[0])
+    assert half.stats()["alive_drives"] == 1
+
+
+def test_dead_drives_never_reach_eviction_selection():
+    """Mount-scheduler eviction must only ever pick among surviving free
+    drives — a failed drive is out of ``drive_of``/``can_serve``/``acquire``
+    even if it still holds state, and a pool failed down to zero capacity
+    answers ``can_serve`` False for every cartridge rather than handing the
+    scheduler an empty candidate list."""
+    pool = DrivePool(3, COSTS, scheduler=LRUScheduler())
+    pool.acquire("A", now=10)
+    pool.acquire("B", now=20)
+    pool.fail_drive(pool.drives[0])  # the LRU drive (held "A") dies
+    # eviction selection sees only the survivors: drive 2 (empty) wins over
+    # unmounting drive 1, never the dead-but-least-recently-used drive 0
+    view = MountView(now=30, costs=pool.costs)
+    drive, delay = pool.acquire("C", now=30, view=view)
+    assert drive.drive_id == 2 and delay == COSTS.switch
+    assert pool.drive_of("A") is None  # extracted by the failure
+    # fail the rest: zero capacity, nothing is servable, stats() says why
+    for d in list(pool.drives):
+        pool.fail_drive(d)
+    assert pool.alive == []
+    assert not pool.can_serve("A")
+    assert not pool.can_serve("C")  # even the just-mounted cartridge
+    assert pool.stats()["alive_drives"] == 0
 
 
 def test_fault_free_pool_stats_hide_failure_key():

@@ -1,0 +1,549 @@
+"""Fleet federation: placement, replica routing, outages, journal merge.
+
+Acceptance bars:
+
+* **differential pin** — a one-shard ``single`` federation on the seeded
+  240-request constrained-pool trace is *bit-identical* to a standalone
+  :class:`~repro.serving.queue.OnlineTapeServer` for every pinned admission
+  policy (same sha over served timelines, same total sojourn, byte-identical
+  write-ahead journal): the fleet layer adds nothing to the default path;
+* placement strategies route only to replica holders, deterministically,
+  and conserve requests (served + failed == trace) with and without an
+  injected :class:`~repro.serving.ShardOutage`;
+* a whole-shard outage re-routes orphaned queued requests to surviving
+  replicas (marked ``faulted``) and ``replica-affinity`` completes at least
+  as many requests as oblivious ``static-hash``;
+* **journal-merge determinism** — truncating any shard's journal at *every*
+  cut point and running :func:`~repro.fleet.recover_fleet` re-executes the
+  federation byte-identically (all shard journals complete to the
+  uninterrupted bytes, the merged report matches);
+* trace schema v2: the optional ``library`` field round-trips, v1 files
+  keep their exact bytes, and a v1 file smuggling the field is rejected.
+"""
+
+import dataclasses
+import hashlib
+from pathlib import Path
+
+import pytest
+
+from repro.core import ExecutionContext, FleetOptions
+from repro.data.traces import (
+    TRACE_SCHEMA,
+    TRACE_SCHEMA_V2,
+    TraceRecord,
+    qos_poisson_trace,
+    read_trace,
+    write_trace,
+)
+from repro.fleet import (
+    PLACEMENTS,
+    FleetServer,
+    FleetView,
+    ReplicaMap,
+    demo_fleet,
+    fleet_catalog,
+    get_placement,
+    list_placements,
+    merge_journals,
+    merge_reports,
+    recover_fleet,
+    register_placement,
+    serve_fleet_trace,
+    shard_journal_path,
+)
+from repro.serving import (
+    DriveCosts,
+    JournalReplayError,
+    RetryPolicy,
+    ShardOutage,
+    demo_library,
+    poisson_trace,
+    serve_trace,
+)
+
+pytestmark = pytest.mark.fleet
+
+SEED = 20260731
+COSTS = DriveCosts(mount=150_000, unmount=60_000, load_seek=30_000)
+
+#: the PR-8 no-fault pins from test_faults.NO_FAULT_BASELINE: the one-shard
+#: ``single`` federation must reproduce them bit-for-bit.
+NO_FAULT_BASELINE = {
+    "fifo": ("1a79c55063c3f802", 56_368_550_889),
+    "accumulate": ("df9ed258ac816c37", 3_809_190_213),
+    "preempt": ("668366586042762a", 7_347_259_813),
+    "fifo-global": ("1a79c55063c3f802", 56_368_550_889),
+    "per-drive-accumulate": ("df9ed258ac816c37", 3_809_190_213),
+    "batched": ("df9ed258ac816c37", 3_809_190_213),
+}
+
+
+def build_library():
+    return demo_library(SEED)
+
+
+def build_trace(n_requests=240, rate=250_000):
+    return poisson_trace(
+        build_library(), n_requests=n_requests, mean_interarrival=rate, seed=SEED
+    )
+
+
+def build_fleet(n_shards=3, replicas=2):
+    return demo_fleet(SEED, n_shards=n_shards, replicas=replicas)
+
+
+def fleet_trace(libs, rmap, n_requests=120, rate=30_000):
+    return poisson_trace(
+        fleet_catalog(libs, rmap), n_requests=n_requests,
+        mean_interarrival=rate, seed=SEED,
+    )
+
+
+def _served_sha(report):
+    served = tuple(
+        (r.req_id, r.arrival, r.dispatched, r.completed) for r in report.served
+    )
+    return hashlib.sha256(repr(served).encode()).hexdigest()[:16]
+
+
+def _timeline(report):
+    return [
+        (r.req_id, r.arrival, r.dispatched, r.completed, r.faulted)
+        for r in report.served
+    ] + [(f.req_id, f.failed_at, f.reason) for f in report.failed]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the one-shard `single` fleet is bit-identical to no fleet
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", sorted(NO_FAULT_BASELINE))
+def test_single_placement_matches_standalone_pin(admission):
+    sha, total = NO_FAULT_BASELINE[admission]
+    fr = serve_fleet_trace(
+        [build_library()], build_trace(), admission, placement="single",
+        window=400_000, policy="dp", n_drives=2, drive_costs=COSTS,
+    )
+    assert (_served_sha(fr.merged), fr.merged.total_sojourn) == (sha, total)
+    standalone = serve_trace(
+        build_library(), build_trace(), admission, window=400_000,
+        policy="dp", n_drives=2, drive_costs=COSTS,
+    )
+    assert _timeline(fr.merged) == _timeline(standalone)
+    assert _timeline(fr.shards[0]) == _timeline(standalone)
+    assert fr.placement == "single" and fr.n_shards == 1
+    assert fr.routes == {0: len(build_trace())} and fr.n_rerouted == 0
+    # the merged summary is the standalone summary plus the fleet block
+    merged_summary = fr.summary()
+    assert merged_summary.pop("fleet")["n_shards"] == 1
+    assert merged_summary == standalone.summary()
+
+
+def test_single_placement_journal_is_byte_identical(tmp_path):
+    """The degenerate federation's write-ahead journal must be the
+    standalone server's journal, byte for byte."""
+    solo = tmp_path / "solo.journal"
+    serve_trace(
+        build_library(), build_trace(), "accumulate", window=400_000,
+        policy="dp", n_drives=2, drive_costs=COSTS, journal=str(solo),
+    )
+    base = tmp_path / "fleet.journal"
+    serve_fleet_trace(
+        [build_library()], build_trace(), "accumulate", placement="single",
+        window=400_000, policy="dp", n_drives=2, drive_costs=COSTS,
+        journal=str(base),
+    )
+    assert Path(shard_journal_path(base, 0)).read_bytes() == solo.read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# replica map
+# ---------------------------------------------------------------------------
+def test_replica_map_from_demo_fleet():
+    libs, rmap = build_fleet(n_shards=3, replicas=2)
+    assert len(rmap) == 48
+    for name, holders in rmap.holders_of.items():
+        assert len(holders) == 2
+        assert list(holders) == sorted(set(holders))
+        # every replica is the same logical object: identical stored size
+        sizes = {libs[s].tape_of(name).files[name].size for s in holders}
+        assert len(sizes) == 1
+    # file i's construction-time origin shard i % n_shards always holds it;
+    # ReplicaMap.primary is the lowest-indexed holder
+    for i in range(48):
+        name = f"obj{i:04d}"
+        assert i % 3 in rmap.holders(name)
+        assert rmap.primary(name) == min(rmap.holders(name))
+    rmap.validate(libs)
+
+
+def test_replica_map_validation_errors():
+    libs, _ = build_fleet(n_shards=2, replicas=1)
+    with pytest.raises(ValueError, match="no replica holders"):
+        ReplicaMap({"f": ()})
+    with pytest.raises(ValueError, match="sorted and unique"):
+        ReplicaMap({"f": (1, 0)})
+    with pytest.raises(ValueError, match="negative"):
+        ReplicaMap({"f": (-1,)})
+    with pytest.raises(ValueError, match="only 2 shard"):
+        ReplicaMap({"obj0000": (0, 5)}).validate(libs)
+    with pytest.raises(ValueError, match="does not store"):
+        ReplicaMap({"obj0000": (0, 1)}).validate(libs)  # obj0000 lives on 0
+    with pytest.raises(ValueError, match="not stored on any shard"):
+        ReplicaMap.from_libraries(libs).holders("nope")
+
+
+def test_fleet_catalog_maps_primaries():
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    cat = fleet_catalog(libs, rmap)
+    assert cat.location["obj0000"] == libs[0].location["obj0000"]
+    assert cat.location["obj0001"] == libs[1].location["obj0001"]
+    assert set(cat.location) == set(rmap.holders_of)
+
+
+def test_demo_fleet_validates_replication():
+    with pytest.raises(ValueError, match="replicas"):
+        demo_fleet(SEED, n_shards=2, replicas=3)
+    with pytest.raises(ValueError, match="n_shards"):
+        demo_fleet(SEED, n_shards=0)
+
+
+# ---------------------------------------------------------------------------
+# placement registry
+# ---------------------------------------------------------------------------
+def test_placement_registry():
+    assert list_placements() == sorted(PLACEMENTS)
+    assert {"single", "static-hash", "least-loaded", "replica-affinity"} <= set(
+        PLACEMENTS
+    )
+    assert get_placement("static-hash").name == "static-hash"
+    inst = get_placement("least-loaded")
+    assert get_placement(inst) is inst  # instances pass through
+    with pytest.raises(ValueError, match="unknown placement"):
+        get_placement("round-robin")
+    with pytest.raises(TypeError, match="not a PlacementStrategy"):
+        get_placement(42)
+
+
+def test_register_custom_placement():
+    class EverySecond:
+        name = "every-second"
+        dynamic = False
+
+        def pick(self, name, candidates, view):
+            return candidates[-1]
+
+    try:
+        register_placement(EverySecond)
+        assert get_placement("every-second").pick("f", (0, 1), None) == 1
+    finally:
+        PLACEMENTS.pop("every-second", None)
+    with pytest.raises(ValueError, match="string name"):
+        register_placement(object)
+
+
+def test_static_hash_is_stable_and_feasible():
+    pl = get_placement("static-hash")
+    view = FleetView(now=0, shards=())
+    for name in ("obj0000", "obj0017", "anything"):
+        picks = {pl.pick(name, (0, 2, 5), view) for _ in range(3)}
+        assert len(picks) == 1 and picks <= {0, 2, 5}
+    # a different candidate set re-ranges the same hash
+    assert pl.pick("obj0000", (3,), view) == 3
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+def test_single_with_many_shards_raises():
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    with pytest.raises(ValueError, match="one-shard NoOp default"):
+        FleetServer(libs, placement="single", replica_map=rmap)
+
+
+def test_context_fleet_options_must_agree_on_shard_count():
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    ctx = ExecutionContext(fleet=FleetOptions(n_shards=3, placement="least-loaded"))
+    with pytest.raises(ValueError, match="context.fleet says 3"):
+        FleetServer(libs, replica_map=rmap, context=ctx)
+    # an agreeing context supplies the placement when none is given
+    ctx = ExecutionContext(fleet=FleetOptions(n_shards=2, placement="least-loaded"))
+    fleet = FleetServer(libs, replica_map=rmap, context=ctx)
+    assert fleet.placement.name == "least-loaded"
+
+
+def test_outage_validation():
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    with pytest.raises(ValueError, match="only 2 shard"):
+        FleetServer(libs, placement="static-hash", replica_map=rmap,
+                    outages=(ShardOutage(at=10, shard=5),))
+    with pytest.raises(TypeError, match="ShardOutage"):
+        FleetServer(libs, placement="static-hash", replica_map=rmap,
+                    outages=("shard-1",))
+
+
+def test_fleet_options_validate():
+    with pytest.raises(ValueError):
+        FleetOptions(n_shards=0)
+    with pytest.raises(ValueError):
+        FleetOptions(n_shards=2, replicas=0)
+    with pytest.raises(ValueError):
+        FleetOptions(n_shards=2, replicas=3)
+    opts = FleetOptions(n_shards=2, replicas=2).replace(placement="static-hash")
+    assert opts.placement == "static-hash" and opts.n_shards == 2
+
+
+def test_unknown_file_fails_fast():
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    trace = fleet_trace(libs, rmap, n_requests=4)
+    ghost = dataclasses.replace(trace[0], name="ghost", req_id=999)
+    with pytest.raises(ValueError, match="not stored on any shard"):
+        serve_fleet_trace(libs, trace + [ghost], placement="static-hash",
+                          replica_map=rmap, n_drives=2)
+
+
+# ---------------------------------------------------------------------------
+# routing: determinism, feasibility, conservation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("placement", ["static-hash", "least-loaded",
+                                       "replica-affinity"])
+def test_placements_conserve_and_repeat(placement):
+    libs, rmap = build_fleet()
+    trace = fleet_trace(libs, rmap)
+    runs = []
+    for _ in range(2):
+        libs, rmap = build_fleet()
+        fr = serve_fleet_trace(
+            libs, trace, "accumulate", placement=placement, replica_map=rmap,
+            window=400_000, n_drives=2, drive_costs=COSTS,
+        )
+        assert fr.n_served + fr.n_failed == len(trace)
+        assert fr.n_failed == 0  # healthy fleet loses nothing
+        assert sum(fr.routes.values()) == len(trace)
+        # every shard served only files it actually holds
+        for i, shard_report in enumerate(fr.shards):
+            for r in shard_report.served:
+                assert i in rmap.holders(r.name)
+        runs.append((_timeline(fr.merged), fr.routes, _served_sha(fr.merged)))
+    assert runs[0] == runs[1]  # same trace + config => bit-identical
+
+
+def test_merged_report_sums_shards():
+    libs, rmap = build_fleet()
+    trace = fleet_trace(libs, rmap)
+    fr = serve_fleet_trace(
+        libs, trace, "accumulate", placement="least-loaded", replica_map=rmap,
+        window=400_000, n_drives=2, drive_costs=COSTS,
+    )
+    assert fr.n_served == sum(r.n_served for r in fr.shards)
+    assert fr.merged.horizon == max(r.horizon for r in fr.shards)
+    assert fr.total_sojourn == sum(r.total_sojourn for r in fr.shards)
+    assert len(fr.merged.batches) == sum(len(r.batches) for r in fr.shards)
+    # served rows are globally ordered by (completed, req_id)
+    keys = [(r.completed, r.req_id) for r in fr.merged.served]
+    assert keys == sorted(keys)
+    pool = fr.merged.pool_stats
+    assert pool["n_drives"] == sum(r.pool_stats["n_drives"] for r in fr.shards)
+
+
+def test_merge_reports_rejects_mixed_configs():
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    trace = fleet_trace(libs, rmap, n_requests=24)
+    a = serve_trace(libs[0], [r for r in trace if 0 == rmap.primary(r.name)],
+                    "accumulate", window=400_000, n_drives=2, drive_costs=COSTS)
+    b = serve_trace(libs[1], [r for r in trace if 1 == rmap.primary(r.name)],
+                    "fifo", n_drives=2, drive_costs=COSTS)
+    with pytest.raises(ValueError, match="disagrees on admission"):
+        merge_reports([a, b])
+    with pytest.raises(ValueError, match="at least one"):
+        merge_reports([])
+
+
+# ---------------------------------------------------------------------------
+# shared fault domain: a whole shard goes dark
+# ---------------------------------------------------------------------------
+def test_outage_reroutes_orphans_to_surviving_replicas():
+    outages = (ShardOutage(at=1_500_000, shard=1),)
+    results = {}
+    for placement in ("static-hash", "replica-affinity"):
+        libs, rmap = build_fleet()
+        trace = fleet_trace(libs, rmap)
+        results[placement] = serve_fleet_trace(
+            libs, trace, "accumulate", placement=placement, replica_map=rmap,
+            outages=outages, window=400_000, n_drives=2, drive_costs=COSTS,
+            retry=RetryPolicy(on_exhausted="drop"),
+        )
+    affinity, static = results["replica-affinity"], results["static-hash"]
+    # the outage orphaned queued work that had replicas elsewhere
+    assert affinity.n_rerouted > 0
+    rerouted = [r for r in affinity.merged.served if r.faulted]
+    assert len(rerouted) >= affinity.n_rerouted  # every orphan completed
+    # replica routing strictly dominates oblivious hashing under the outage
+    assert affinity.n_served > static.n_served
+    assert affinity.n_failed == 0
+    assert static.n_failed > 0  # kept hashing into the dark shard
+    # the dark shard dispatched nothing after the outage instant
+    for r in affinity.shards[1].served:
+        assert r.dispatched < outages[0].at
+    assert affinity.shards[1].pool_stats["alive_drives"] == 0
+    assert affinity.shards[1].pool_stats["drive_failures"] == 2
+    # conservation still holds, failures included
+    for fr in results.values():
+        assert fr.n_served + fr.n_failed == len(trace)
+
+
+def test_outage_before_arrivals_routes_away_immediately():
+    """An outage at t strikes before same-instant arrivals are routed, so a
+    dynamic placement never routes a live arrival into the dark shard."""
+    libs, rmap = build_fleet(n_shards=2, replicas=2)
+    trace = fleet_trace(libs, rmap, n_requests=40)
+    fr = serve_fleet_trace(
+        libs, trace, "accumulate", placement="least-loaded", replica_map=rmap,
+        outages=(ShardOutage(at=0, shard=0),), window=400_000, n_drives=2,
+        drive_costs=COSTS, retry=RetryPolicy(on_exhausted="drop"),
+    )
+    # with 2-way replication every file survives on shard 1
+    assert fr.n_served == len(trace) and fr.n_failed == 0
+    assert fr.shards[0].n_served == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: journal-merge determinism from every cut point (satellite)
+# ---------------------------------------------------------------------------
+def _journaled_run(tmp_path, libs, rmap, trace, outages, journal=None):
+    return serve_fleet_trace(
+        libs, trace, "accumulate", placement="replica-affinity",
+        replica_map=rmap, outages=outages, window=400_000, n_drives=2,
+        drive_costs=COSTS, retry=RetryPolicy(on_exhausted="drop"),
+        journal=journal,
+    )
+
+
+def test_recover_fleet_from_every_cut_point(tmp_path):
+    n_shards = 2
+    libs, rmap = build_fleet(n_shards=n_shards, replicas=2)
+    trace = fleet_trace(libs, rmap, n_requests=60)
+    outages = (ShardOutage(at=1_500_000, shard=0),)
+    base = tmp_path / "fleet.journal"
+    reference = _journaled_run(tmp_path, libs, rmap, trace, outages, str(base))
+    ref_bytes = {
+        i: Path(shard_journal_path(base, i)).read_bytes()
+        for i in range(n_shards)
+    }
+    ref_timeline = _timeline(reference.merged)
+    for shard in range(n_shards):
+        n = len(ref_bytes[shard])
+        for cut in (0, 10, n // 3, n // 2, n - 5, n):
+            for i in range(n_shards):  # restore both, then tear one
+                Path(shard_journal_path(base, i)).write_bytes(ref_bytes[i])
+            Path(shard_journal_path(base, shard)).write_bytes(
+                ref_bytes[shard][:cut]
+            )
+            libs, rmap = build_fleet(n_shards=n_shards, replicas=2)
+            recovered = recover_fleet(
+                libs, trace, str(base), "accumulate",
+                placement="replica-affinity", replica_map=rmap,
+                outages=outages, window=400_000, n_drives=2,
+                drive_costs=COSTS, retry=RetryPolicy(on_exhausted="drop"),
+            )
+            assert _timeline(recovered.merged) == ref_timeline, (
+                f"shard {shard} cut at byte {cut} diverged"
+            )
+            for i in range(n_shards):
+                assert (
+                    Path(shard_journal_path(base, i)).read_bytes()
+                    == ref_bytes[i]
+                ), f"shard {i} journal not byte-identical (cut {cut})"
+
+
+def test_recover_fleet_rejects_foreign_journal(tmp_path):
+    libs, rmap = build_fleet(n_shards=2, replicas=2)
+    trace = fleet_trace(libs, rmap, n_requests=60)
+    base = tmp_path / "fleet.journal"
+    _journaled_run(tmp_path, libs, rmap, trace, (), str(base))
+    libs, rmap = build_fleet(n_shards=2, replicas=2)
+    with pytest.raises(JournalReplayError):
+        recover_fleet(
+            libs, fleet_trace(libs, rmap, n_requests=60, rate=25_000),
+            str(base), "accumulate", placement="replica-affinity",
+            replica_map=rmap, window=400_000, n_drives=2, drive_costs=COSTS,
+            retry=RetryPolicy(on_exhausted="drop"),
+        )
+
+
+def test_merge_journals_is_deterministic(tmp_path):
+    n_shards = 2
+    libs, rmap = build_fleet(n_shards=n_shards, replicas=2)
+    trace = fleet_trace(libs, rmap, n_requests=60)
+    base = tmp_path / "fleet.journal"
+    _journaled_run(tmp_path, libs, rmap, trace,
+                   (ShardOutage(at=1_500_000, shard=0),), str(base))
+    stream = merge_journals(base, n_shards)
+    assert stream == merge_journals(base, n_shards)
+    assert all("shard" in ev for ev in stream)
+    assert {ev["shard"] for ev in stream} == {0, 1}
+    assert stream[0]["ev"] == "start" and stream[-1]["ev"] == "end"
+    # timed events are globally ordered by (t, shard)
+    timed = [ev for ev in stream if ev["ev"] not in ("start", "end")]
+    keys = [(ev["t"], ev["shard"]) for ev in timed]
+    assert keys == sorted(keys)
+    with pytest.raises(ValueError, match="n_shards"):
+        merge_journals(base, 0)
+
+
+# ---------------------------------------------------------------------------
+# trace schema v2: the optional origin-library label (satellite)
+# ---------------------------------------------------------------------------
+def test_v1_trace_bytes_are_unchanged(tmp_path):
+    recs = qos_poisson_trace(build_library(), n_requests=12,
+                             mean_interarrival=50_000, seed=SEED)
+    assert all(r.library is None for r in recs)
+    path = write_trace(tmp_path / "t.jsonl", recs)
+    text = path.read_text()
+    assert TRACE_SCHEMA in text.splitlines()[0]
+    assert "library" not in text  # absent field stays absent on disk
+    assert read_trace(path) == recs
+
+
+def test_v2_trace_round_trips_library_labels(tmp_path):
+    recs = qos_poisson_trace(
+        build_library(), n_requests=12, mean_interarrival=50_000, seed=SEED,
+        libraries=("shard0", "shard1", "shard2"),
+    )
+    assert all(r.library in {"shard0", "shard1", "shard2"} for r in recs)
+    path = write_trace(tmp_path / "t.jsonl", recs)
+    assert TRACE_SCHEMA_V2 in path.read_text().splitlines()[0]
+    assert read_trace(path) == recs
+
+
+def test_v1_file_with_library_field_is_rejected(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text(
+        '{"schema":"ltsp-trace/v1"}\n'
+        '{"arrival":0,"tape":"t0","file":"f","library":"shard0"}\n'
+    )
+    with pytest.raises(ValueError, match="needs a 'ltsp-trace/v2' header"):
+        read_trace(path)
+    with pytest.raises(ValueError, match="non-empty label"):
+        TraceRecord(arrival=0, tape="t0", file="f", library="")
+
+
+def test_library_draw_is_independent_of_the_workload():
+    plain = qos_poisson_trace(build_library(), n_requests=24,
+                              mean_interarrival=50_000, seed=SEED)
+    labelled = qos_poisson_trace(
+        build_library(), n_requests=24, mean_interarrival=50_000, seed=SEED,
+        libraries=("a", "b"),
+    )
+    # the label draw is a separate seeded stream: arrivals, files, classes
+    # and deadlines are untouched
+    assert [dataclasses.replace(r, library=None) for r in labelled] == plain
+    again = qos_poisson_trace(
+        build_library(), n_requests=24, mean_interarrival=50_000, seed=SEED,
+        libraries=("a", "b"),
+    )
+    assert labelled == again  # seeded: deterministic
+    assert {r.library for r in labelled} == {"a", "b"}
+    with pytest.raises(ValueError, match="non-empty"):
+        qos_poisson_trace(build_library(), n_requests=4,
+                          mean_interarrival=50_000, seed=SEED, libraries=())
