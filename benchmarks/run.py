@@ -81,8 +81,35 @@ REGRESSION_TOLERANCE = 0.25
 RECORD: dict = {}
 
 
+#: set by ``--obs``: a repro.obs.MetricsRegistry every timed serving cell
+#: feeds; ``--record`` then lands its snapshot as ``RECORD["obs_metrics"]``.
+OBS_METRICS = None
+
+
 def _emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _timed_serve(label: str, run):
+    """Run one timed serving cell: ``(report, summary, wall_s)``.
+
+    The serving benches (online / overload / fleet) each repeated the same
+    time-it / summarise block per swept cell; this is that block, shared.
+    With ``--obs`` the cell also lands in the metrics registry as exact-int
+    counters and a wall-time histogram (integer microseconds — the registry
+    rejects floats by design).
+    """
+    t0 = time.perf_counter()
+    report = run()
+    dt = time.perf_counter() - t0
+    s = report.summary()
+    if OBS_METRICS is not None:
+        OBS_METRICS.inc("bench_cells_total", bench=label)
+        OBS_METRICS.inc(
+            "bench_requests_served_total", int(report.n_served), bench=label
+        )
+        OBS_METRICS.observe("bench_wall_us", int(dt * 1e6), bench=label)
+    return report, s, dt
 
 
 def _timed_solve(solver, inst):
@@ -637,17 +664,15 @@ def bench_online_serving(full: bool = False):
         per_admission: dict[str, float] = {}
         for admission in LEGACY_ADMISSIONS:
             lib = build_library()
-            t0 = time.perf_counter()
-            report = serve_trace(
+            # verify=True inside summary(): the oracle raised on any lie
+            report, s, dt = _timed_serve("online", lambda: serve_trace(
                 lib,
                 trace,
                 admission,
                 window=window if admission == "accumulate" else 0,
                 policy="dp",
                 context=lib.context,
-            )
-            dt = time.perf_counter() - t0
-            s = report.summary()  # verify=True: the oracle raised on any lie
+            ))
             assert s["n_served"] == n_requests
             per_admission[admission] = s["mean_sojourn"]
             rows.append({"rate": rate, "wall_s": dt, **s})
@@ -692,14 +717,11 @@ def bench_online_serving(full: bool = False):
             per_mode = {}
             for warm_start in (True, False):
                 lib = build_library()
-                t0 = time.perf_counter()
-                report = serve_trace(
+                report, s, dt = _timed_serve("online/warm", lambda: serve_trace(
                     lib, trace, admission,
                     window=window if admission == "accumulate" else 0,
                     policy="dp", context=lib.context, warm_start=warm_start,
-                )
-                dt = time.perf_counter() - t0
-                s = report.summary()
+                ))
                 assert s["n_served"] == n_requests and s["all_verified"]
                 per_mode[warm_start] = s
                 warm_rows.append({"rate": rate, "wall_s": dt, **s})
@@ -754,8 +776,7 @@ def bench_online_serving(full: bool = False):
     for admission in POOL_ADMISSIONS:
         for n_drives in (1, 2, n_tapes):
             lib = build_library()
-            t0 = time.perf_counter()
-            report = serve_trace(
+            report, s, dt = _timed_serve("online/pool", lambda: serve_trace(
                 lib,
                 trace,
                 admission,
@@ -764,9 +785,7 @@ def bench_online_serving(full: bool = False):
                 n_drives=n_drives,
                 drive_costs=costs,
                 context=lib.context,
-            )
-            dt = time.perf_counter() - t0
-            s = report.summary()
+            ))
             assert s["n_served"] == n_requests and s["all_verified"]
             per_cell[(admission, n_drives)] = s["mean_sojourn"]
             pool_rows.append({"rate": rate, "wall_s": dt, **s})
@@ -803,8 +822,7 @@ def bench_online_serving(full: bool = False):
         missed: dict[str, int] = {}
         for admission in qos_admissions:
             lib = build_library()
-            t0 = time.perf_counter()
-            report = serve_trace(
+            report, s, dt = _timed_serve("online/qos", lambda: serve_trace(
                 lib,
                 qtrace,
                 admission,
@@ -812,9 +830,7 @@ def bench_online_serving(full: bool = False):
                 policy="dp",
                 qos=qos,
                 context=lib.context,
-            )
-            dt = time.perf_counter() - t0
-            s = report.summary()
+            ))
             assert s["n_served"] == n_requests and s["all_verified"]
             missed[admission] = report.n_missed  # exact virtual-time int
             qos_rows.append({
@@ -845,14 +861,11 @@ def bench_online_serving(full: bool = False):
     for admission in ("per-drive-accumulate", "slack-accumulate"):
         for sched in ("greedy", "lru", "lookahead"):
             lib = build_library()
-            t0 = time.perf_counter()
-            report = serve_trace(
+            report, s, dt = _timed_serve("online/sched", lambda: serve_trace(
                 lib, qtrace, admission, window=window, policy="dp",
                 n_drives=2, drive_costs=costs, qos=qos,
                 mount_scheduler=sched, context=lib.context,
-            )
-            dt = time.perf_counter() - t0
-            s = report.summary()
+            ))
             assert s["n_served"] == n_requests and s["all_verified"]
             sched_rows.append({"wall_s": dt, **s})
             _emit(
@@ -907,14 +920,11 @@ def bench_online_serving(full: bool = False):
         plan = FaultPlan(drive_failures=fail_points[:n_failures])
         for arm, retry in retry_arms.items():
             lib = build_library()
-            t0 = time.perf_counter()
-            report = serve_trace(
+            report, s, dt = _timed_serve("online/avail", lambda: serve_trace(
                 lib, trace, "per-drive-accumulate", window=window,
                 policy="dp", n_drives=avail_drives, drive_costs=costs,
                 context=lib.context, faults=plan or None, retry=retry,
-            )
-            dt = time.perf_counter() - t0
-            s = report.summary()
+            ))
             assert report.n_served + report.n_failed == n_requests, (
                 "requests must be conserved: served or typed-failed"
             )
@@ -1070,14 +1080,11 @@ def bench_overload_serving(full: bool = False):
         ):
             lib = build_library()
             ctx = lib.context.replace(budget=budget)
-            t0 = time.perf_counter()
-            report = serve_trace(
+            report, s, dt = _timed_serve("overload", lambda: serve_trace(
                 lib, qtrace, "slack-accumulate", window=window, qos=qos,
                 policy=policy, selector=selector, n_drives=2,
                 drive_costs=costs, context=ctx, warm_start=False,
-            )
-            dt = time.perf_counter() - t0
-            s = report.summary()
+            ))
             assert s["n_served"] == n_requests
             missed[arm] = report.n_missed
             if arm == "adaptive":
@@ -1186,15 +1193,12 @@ def bench_fleet_serving(full: bool = False):
             misses: dict[str, int] = {}
             for pl in placements:
                 libs, rmap = build_fleet()  # fresh shards per arm
-                t0 = time.perf_counter()
-                fr = serve_fleet_trace(
+                fr, s, dt = _timed_serve("fleet", lambda: serve_fleet_trace(
                     libs, qtrace, "slack-accumulate", placement=pl,
                     replica_map=rmap, outages=outages, window=window,
                     n_drives=2, drive_costs=costs, qos=qos,
                     retry=RetryPolicy(on_exhausted="drop"),
-                )
-                dt = time.perf_counter() - t0
-                s = fr.summary()
+                ))
                 # a dropped deadline-carrying request is a missed deadline
                 misses[pl] = fr.n_missed + fr.n_failed
                 fleet_rows.append({
@@ -1402,7 +1406,19 @@ def main() -> None:
         help="compare the fresh snapshot against a checked-in one and exit "
              "nonzero on >25%% interpret solve-throughput regression",
     )
+    ap.add_argument(
+        "--obs", action="store_true",
+        help="feed every timed serving cell into a repro.obs "
+             "MetricsRegistry; with --record the snapshot gains an "
+             "'obs_metrics' block (off by default so recorded bytes are "
+             "unchanged)",
+    )
     args = ap.parse_args()
+    if args.obs:
+        from repro.obs import MetricsRegistry
+
+        global OBS_METRICS
+        OBS_METRICS = MetricsRegistry()
     benches = {
         "profiles": bench_performance_profiles,
         "time": bench_time_to_solution,
@@ -1424,6 +1440,10 @@ def main() -> None:
     for name in benches:
         if name in selected:
             benches[name](args.full)
+    if OBS_METRICS is not None:
+        # key order: after every bench block, so obs-off records keep their
+        # exact bytes and obs-on records only append
+        RECORD["obs_metrics"] = OBS_METRICS.snapshot()
     if args.record:
         snapshot = {
             "schema": "ltsp-bench/pr2",

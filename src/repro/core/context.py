@@ -31,7 +31,13 @@ a dozen signatures.  :class:`ExecutionContext` bundles all of it:
   thresholds of the ``depth-threshold`` selector, and the hysteresis tick
   count that keeps per-tick policy choices from flapping.  ``None``
   (default) prices nothing and charges nothing — every pre-budget timeline
-  is reproduced bit for bit.
+  is reproduced bit for bit;
+* ``obs`` — an optional :class:`~repro.obs.Observability` bundle (tracer +
+  metrics registry + kernel profile, see :mod:`repro.obs`): instrumentation
+  hooks throughout the solver, cache, drive pool, serving loop, and fleet
+  record into it.  ``None`` (default) records nothing, and every hook hands
+  over already-computed exact integers, so instrumented and uninstrumented
+  runs are bit-identical.
 
 Contexts are frozen: derive variants with :meth:`ExecutionContext.replace`::
 
@@ -54,6 +60,7 @@ import warnings
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (solver imports us)
+    from ..obs import Observability
     from .cache import CacheBackend
 
 __all__ = [
@@ -189,6 +196,7 @@ class ExecutionContext:
     numeric_policy: str = "strict"
     budget: ComputeBudget | None = None
     fleet: FleetOptions | None = None
+    obs: "Observability | None" = None
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -206,6 +214,15 @@ class ExecutionContext:
             raise TypeError(f"budget must be a ComputeBudget, got {self.budget!r}")
         if self.fleet is not None and not isinstance(self.fleet, FleetOptions):
             raise TypeError(f"fleet must be a FleetOptions, got {self.fleet!r}")
+        if self.obs is not None:
+            # lazy import: repro.obs pulls in serving helpers at call time,
+            # and contexts are constructed during core package import
+            from ..obs import Observability
+
+            if not isinstance(self.obs, Observability):
+                raise TypeError(
+                    f"obs must be an Observability bundle, got {self.obs!r}"
+                )
 
     def replace(self, **changes) -> "ExecutionContext":
         """A copy with the given fields changed (contexts are immutable)."""

@@ -242,6 +242,11 @@ class FleetServer:
         ]
         self.routes: dict[int, int] = {i: 0 for i in range(len(self.shards))}
         self.n_rerouted = 0
+        # observability (opt-in): shards record under their own index, the
+        # router under a "router" lane; unset obs changes nothing
+        self.obs = ctx.obs if ctx is not None else None
+        for i, sh in enumerate(self.shards):
+            sh._obs_shard = i
 
     # -- routing --------------------------------------------------------------
     def _view(self, now: int, name: str, candidates: tuple[int, ...]) -> FleetView:
@@ -277,6 +282,11 @@ class FleetServer:
         cands = self.replicas.holders(req.name)
         dest = self.placement.pick(req.name, cands, self._view(now, req.name, cands))
         self.routes[dest] += 1
+        if self.obs is not None:
+            self.obs.event(
+                "route", now, track="router", shard=dest, req=req.req_id
+            )
+            self.obs.inc("fleet_routed_total", shard=str(dest))
         self.shards[dest]._on_arrival(self._routed(req, dest), now)
 
     # -- shared fault domain --------------------------------------------------
@@ -290,6 +300,9 @@ class FleetServer:
         """
         now = outage.at
         sh = self.shards[outage.shard]
+        if self.obs is not None:
+            self.obs.inc("fleet_outages_total")
+            self.obs.event("outage", now, track="router", shard=outage.shard)
         for drive in sorted(sh.pool.alive, key=lambda d: d.drive_id):
             sh._fail_drive(drive, now)
         alive = {i for i, s in enumerate(self.shards) if s.pool.alive}
@@ -313,6 +326,11 @@ class FleetServer:
             dest = self.placement.pick(r.name, cands, self._view(now, r.name, cands))
             self.routes[dest] += 1
             self.n_rerouted += 1
+            if self.obs is not None:
+                self.obs.inc("fleet_rerouted_total", shard=str(dest))
+                self.obs.event(
+                    "reroute", now, track="router", shard=dest, req=r.req_id
+                )
             self.shards[dest]._faulted.add(r.req_id)
             self.shards[dest]._on_arrival(self._routed(r, dest), now)
 
@@ -326,6 +344,13 @@ class FleetServer:
             reports = self._run_static(trace)
         else:
             reports = self._run_lockstep(trace)
+        if self.obs is not None:
+            for i, rep in enumerate(reports):
+                self.obs.gauge("shard_served", rep.n_served, shard=str(i))
+                self.obs.gauge("shard_failed", rep.n_failed, shard=str(i))
+                self.obs.gauge(
+                    "shard_routed", self.routes.get(i, 0), shard=str(i)
+                )
         return FleetReport(
             shards=tuple(reports),
             merged=merge_reports(reports),

@@ -69,6 +69,7 @@ planner entirely (one tight launch, no grouping pass).
 from __future__ import annotations
 
 import math
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -297,11 +298,12 @@ def ltsp_solve_instance(
     cand_tile: int = DEFAULT_CAND_TILE,
     disjoint: bool = False,
     numeric_policy: str = "strict",
+    profile=None,
 ) -> tuple[int, list[tuple[int, int]]]:
     """Device-solved ``(opt_cost, detours)`` for one instance (exact)."""
     return ltsp_solve_batch([inst], span=span, interpret=interpret,
                             cand_tile=cand_tile, disjoint=disjoint,
-                            numeric_policy=numeric_policy)[0]
+                            numeric_policy=numeric_policy, profile=profile)[0]
 
 
 def _solve_packed(
@@ -367,6 +369,7 @@ def ltsp_solve_batch(
     disjoint: bool = False,
     numeric_policy: str = "strict",
     capture: bool = False,
+    profile=None,
 ) -> list[tuple[int, list[tuple[int, int]]]]:
     """Solve several instances in a few size-bucketed device launches.
 
@@ -391,6 +394,12 @@ def ltsp_solve_batch(
     instance ``i``'s dense value/argmin planes — the raw material for
     warm-starting the next solve of a perturbed sibling (see
     :func:`ltsp_solve_batch_warm`).
+
+    ``profile`` takes an optional :class:`~repro.obs.KernelProfile`: every
+    device launch records its padded bucket shape, the exact
+    real-vs-padded DP cell counts, whether its jit signature was cold, and
+    (when the profile captures wall time) the host wall time around the
+    launch — pure host-side accounting, results unchanged.
     """
     if not instances:
         return ([], []) if capture else []
@@ -409,16 +418,44 @@ def ltsp_solve_batch(
     stores: list[DenseStore | None] = [None] * len(instances)
 
     def solve(idxs, R_pad, S_pad, B_pad, dtype=jnp.int32, interp=None):
+        interp_eff = interpret if interp is None else interp
+        t0 = (
+            time.perf_counter_ns()
+            if profile is not None and profile.wall
+            else None
+        )
         out, subs = _solve_packed(
             [instances[i] for i in idxs],
             [scaled[i] for i in idxs],
             [gs[i] for i in idxs],
             R_pad, S_pad, B_pad, span,
-            interpret if interp is None else interp, cand_tile,
+            interp_eff, cand_tile,
             disjoint=disjoint, dtype=dtype, capture=capture,
         )
         for i, st in zip(idxs, subs):
             stores[i] = st
+        if profile is not None:
+            # mirror prepare_batch's padding defaults so the record reports
+            # the launch shape that actually ran
+            sub = [scaled[i] for i in idxs]
+            B_eff = len(sub) if B_pad is None else max(B_pad, len(sub))
+            R_eff = max(s.n_req for s in sub) if R_pad is None else R_pad
+            S_eff = _pad_s(max(s.n for s in sub) + 1 if S_pad is None else S_pad)
+            profile.record(
+                signature=(
+                    R_eff, S_eff, B_eff, np.dtype(dtype).name, interp_eff,
+                    span, disjoint, cand_tile,
+                ),
+                n_instances=len(sub),
+                R_pad=R_eff,
+                S_pad=S_eff,
+                B_pad=B_eff,
+                real_cells=sum(s.n_req * s.n_req * (s.n + 1) for s in sub),
+                interpret=interp_eff,
+                wall_ns=(
+                    time.perf_counter_ns() - t0 if t0 is not None else None
+                ),
+            )
         return out
 
     def done(results):
@@ -466,11 +503,12 @@ def ltsp_solve_instance_warm(
     interpret: bool = True,
     cand_tile: int = DEFAULT_CAND_TILE,
     numeric_policy: str = "strict",
+    profile=None,
 ) -> tuple[int, list[tuple[int, int]], WarmState | None, WarmStats]:
     """Warm-startable single-instance solve (see :func:`ltsp_solve_batch_warm`)."""
     results, warms, stats = ltsp_solve_batch_warm(
         [inst], [warm], span=span, interpret=interpret,
-        cand_tile=cand_tile, numeric_policy=numeric_policy,
+        cand_tile=cand_tile, numeric_policy=numeric_policy, profile=profile,
     )
     (cost, dets) = results[0]
     return cost, dets, warms[0], stats[0]
@@ -484,6 +522,7 @@ def ltsp_solve_batch_warm(
     bucketed: bool = True,
     cand_tile: int = DEFAULT_CAND_TILE,
     numeric_policy: str = "strict",
+    profile=None,
 ) -> tuple[
     list[tuple[int, list[tuple[int, int]]]],
     list[WarmState | None],
@@ -538,7 +577,7 @@ def ltsp_solve_batch_warm(
         solved, stores = ltsp_solve_batch(
             [instances[i] for i in cold], span=span, interpret=interpret,
             bucketed=bucketed, cand_tile=cand_tile,
-            numeric_policy=numeric_policy, capture=True,
+            numeric_policy=numeric_policy, capture=True, profile=profile,
         )
         for i, res, store in zip(cold, solved, stores):
             results[i] = res

@@ -71,6 +71,18 @@ swaps the in-process solve memo for a persistent
 same path replays the journal into memo hits, the restart story for a
 serving fleet.
 
+**Observability** — ``--tape-trace-out PATH`` attaches the opt-in
+:class:`~repro.obs.Observability` bundle and exports the run's
+virtual-time span log as byte-deterministic JSONL at ``PATH`` plus a
+Chrome ``trace_event`` file at ``PATH + ".chrome.json"`` (one Perfetto
+track per drive/queue/router, one process per fleet shard);
+``--tape-metrics-out PATH`` writes the exact-int counter/histogram
+registry as a Prometheus text snapshot whose sojourn/miss totals match
+the printed report exactly.  Both record exactly one run (single
+admission / single placement).  Leaving them unset attaches nothing:
+timelines, journals, and tables are bit-identical to an uninstrumented
+run.
+
 **Fault injection & crash recovery** — ``--tape-fault-profile light|heavy``
 injects a seeded :class:`~repro.serving.faults.FaultPlan` (drive hard-
 failures, transient mount faults; ``heavy`` adds media read errors and
@@ -179,6 +191,25 @@ def _restore_from_tape(params, policy: str, backend: str) -> None:
     )
 
 
+def _export_obs(obs, args) -> None:
+    """Write the observability exporters a run's flags asked for.
+
+    JSONL + Chrome trace to ``--tape-trace-out`` (the Chrome file rides
+    next to the span log at ``PATH + ".chrome.json"``), Prometheus text
+    to ``--tape-metrics-out``.  Shared by the queue and fleet modes.
+    """
+    from ..obs.export import write_chrome_trace, write_prometheus, write_spans_jsonl
+
+    if args.tape_trace_out:
+        n = write_spans_jsonl(obs.tracer, args.tape_trace_out)
+        chrome = args.tape_trace_out + ".chrome.json"
+        write_chrome_trace(obs.tracer, chrome)
+        print(f"trace: {n} span(s) -> {args.tape_trace_out} (+ {chrome})")
+    if args.tape_metrics_out:
+        write_prometheus(obs.metrics, args.tape_metrics_out)
+        print(f"metrics -> {args.tape_metrics_out}")
+
+
 def _serve_tape_queue(args) -> int:
     """Drive the online tape-serving subsystem on one arrival trace.
 
@@ -248,6 +279,15 @@ def _serve_tape_queue(args) -> int:
         print("--tape-journal records exactly one run; pick a single "
               "--tape-admission")
         return 2
+    obs = None
+    if args.tape_trace_out or args.tape_metrics_out:
+        if len(admissions) != 1:
+            print("--tape-trace-out/--tape-metrics-out record exactly one "
+                  "run; pick a single --tape-admission")
+            return 2
+        from ..obs import Observability
+
+        obs = Observability.enabled()
     costs = DriveCosts(
         mount=args.tape_mount_cost,
         unmount=args.tape_unmount_cost,
@@ -309,6 +349,8 @@ def _serve_tape_queue(args) -> int:
     for admission in admissions:
         lib = build_library()
         ctx = lib.context.replace(backend=args.tape_backend)
+        if obs is not None:
+            ctx = ctx.replace(obs=obs)
         if journal is not None:
             ctx = ctx.replace(cache=journal)
         if args.tape_budget is not None:
@@ -365,6 +407,8 @@ def _serve_tape_queue(args) -> int:
         )
     if journal is not None:
         journal.close()
+    if obs is not None:
+        _export_obs(obs, args)
     if args.slo_target is not None:
         if not any(s.deadline is not None for s in qos.values()):
             print("--slo-target needs a deadline-annotated trace "
@@ -419,6 +463,15 @@ def _serve_tape_fleet(args) -> int:
         print("placement 'single' is the one-shard NoOp default; pick a "
               "routing strategy (or --fleet-shards 1)")
         return 2
+    obs = None
+    if args.tape_trace_out or args.tape_metrics_out:
+        if len(placements) != 1:
+            print("--tape-trace-out/--tape-metrics-out record exactly one "
+                  "run; pick a single --fleet-placement")
+            return 2
+        from ..obs import Observability
+
+        obs = Observability.enabled()
 
     def build_fleet():
         return demo_fleet(
@@ -487,6 +540,7 @@ def _serve_tape_fleet(args) -> int:
             fleet=FleetOptions(
                 n_shards=n_shards, placement=pl, replicas=args.fleet_replicas
             ),
+            obs=obs,
         )
         t0 = time.time()
         fr = serve_fleet_trace(
@@ -518,6 +572,8 @@ def _serve_tape_fleet(args) -> int:
             + "/".join(str(fr.routes[i]) for i in range(n_shards))
             + ")"
         )
+    if obs is not None:
+        _export_obs(obs, args)
     return 0
 
 
@@ -600,6 +656,15 @@ def main() -> None:
                     help="retry budget per fault site (mount attempts, media "
                          "read attempts, solver attempts per backend tier); "
                          "exhausted budgets drop requests as typed failures")
+    ap.add_argument("--tape-trace-out", default=None, metavar="PATH",
+                    help="attach the observability tracer and export the "
+                         "virtual-time span log as JSONL at PATH plus a "
+                         "Chrome trace_event file at PATH + '.chrome.json' "
+                         "(single-admission/-placement runs only)")
+    ap.add_argument("--tape-metrics-out", default=None, metavar="PATH",
+                    help="attach the observability metrics registry and "
+                         "export a Prometheus text snapshot at PATH "
+                         "(single-admission/-placement runs only)")
     ap.add_argument("--tape-journal", default=None, metavar="PATH",
                     help="write-ahead event journal; if PATH already holds a "
                          "(possibly torn) journal from a crashed run, the "

@@ -12,6 +12,20 @@ routing, shard-wide outages, and merged SLO accounting) by driving the
 event loop's stepping primitives in shared exact virtual time — each shard
 stays an unmodified :class:`~repro.serving.queue.OnlineTapeServer`.
 
+**Observability.**  The serving loop is instrumented end to end through
+the opt-in :mod:`repro.obs` bundle: attach one via
+``ExecutionContext(obs=Observability.enabled())`` and the event loop,
+drive pool, and cache emit virtual-time spans (queue waits, mounts,
+batches — one trace track per drive) plus exact-int counters and
+histograms that reconcile with :class:`~repro.serving.sim.ServiceReport`
+/ :func:`~repro.serving.qos.slo_report` integers with ``==``, never
+approximately.  With ``obs`` unset (the default) every hook is a no-op
+on a shared null bundle and the serving path is pinned bit-identical to
+the uninstrumented stack — same timelines, same journal bytes.  Export
+the collected data with :mod:`repro.obs.export` (byte-deterministic
+JSONL span logs, Prometheus text, Chrome ``trace_event`` JSON) or from
+the CLI via ``launch/serve.py --tape-trace-out/--tape-metrics-out``.
+
 The model-serving step builder (:mod:`.serve`) is deliberately *not*
 re-exported: it pulls in the neural-network stack, which tape-serving
 callers don't need.

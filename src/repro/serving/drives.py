@@ -342,6 +342,9 @@ class DrivePool:
         self.n_unmounts = 0
         self.mount_time = 0  # total charged mount/unmount/seek time
         self.n_drive_failures = 0
+        # optional Observability bundle (set by the serving loop when the
+        # context carries one); reads pre-computed ints only — never state
+        self.obs = None
 
     @property
     def n_drives(self) -> int:
@@ -367,6 +370,9 @@ class DrivePool:
         drive.mounted = None
         drive.busy = False
         self.n_drive_failures += 1
+        if self.obs is not None:
+            self.obs.inc("drive_failures_total")
+            self.obs.gauge("alive_drives", len(self.alive))
 
     def drive_of(self, tape_id: str) -> PoolDrive | None:
         """The drive holding ``tape_id``, if any (cartridge exclusivity)."""
@@ -404,6 +410,8 @@ class DrivePool:
         if holder is not None:
             assert not holder.busy, f"{tape_id} is mid-batch in drive {holder.drive_id}"
             holder.last_used = now
+            if self.obs is not None:
+                self.obs.inc("drive_holder_hits_total")
             return holder, 0
         free = [d for d in self.drives if not d.busy and not d.failed]
         assert free, "acquire() without a free drive; check can_serve() first"
@@ -412,28 +420,39 @@ class DrivePool:
         drive = self.scheduler.pick(free, view)
         assert not drive.busy, "scheduler picked a busy drive"
         delay = 0
-        if drive.mounted is not None:
+        evicted = drive.mounted is not None
+        if evicted:
             delay += self.costs.unmount
             self.n_unmounts += 1
         delay += self.costs.switch
         self.n_mounts += 1
         self.mount_time += delay
+        if self.obs is not None:
+            self.obs.inc("drive_mounts_total")
+            if evicted:
+                self.obs.inc("drive_evictions_total")
+            self.obs.inc("mount_time_total", delay)
         drive.mounted = tape_id
         drive.last_used = now
         return drive, delay
 
     def stats(self) -> dict[str, int]:
+        """Pool counters with a stable schema for metric scrapes.
+
+        ``alive_drives`` is always present (``n_drives`` counts the
+        configured drives, dead ones included) so scrapers never branch on
+        key existence; ``drive_failures`` stays conditional so fault-free
+        reports keep the pre-fault-layer key set.  Human-facing ``summary()``
+        surfaces preserve the old conditional ``alive_drives`` shape — see
+        :meth:`~repro.serving.sim.ServiceReport.summary`.
+        """
         out = {
             "n_drives": self.n_drives,
             "mounts": self.n_mounts,
             "unmounts": self.n_unmounts,
             "mount_time": self.mount_time,
+            "alive_drives": len(self.alive),
         }
-        # conditional so fault-free reports stay key-for-key identical to
-        # the pre-fault-layer format; ``alive_drives`` rides along so that a
-        # pool failed down to zero capacity reports it (``n_drives`` counts
-        # the configured drives, dead ones included)
         if self.n_drive_failures:
             out["drive_failures"] = self.n_drive_failures
-            out["alive_drives"] = len(self.alive)
         return out

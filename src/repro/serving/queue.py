@@ -157,6 +157,19 @@ observable event to a :class:`~repro.serving.faults.EventJournal`
 write-ahead log; :func:`repro.serving.faults.recover_server` resumes a
 killed run from it, bit-identical.  With all three unset, every code path
 and report is bit-identical to the fault-unaware server.
+
+Observability (opt-in)
+----------------------
+An :class:`~repro.obs.Observability` bundle on the context
+(``context.replace(obs=Observability.enabled())``) makes the server record
+*where virtual time goes*: mount / solve-delay / batch spans per drive
+lane, arrival / preempt / fault instants, and exact-int counters and
+histograms (queue depth, sojourns, deadline outcomes, retry backoff, DP
+cell work) into the bundle's tracer and metrics registry — exported by
+:mod:`repro.obs.export` as JSONL, Prometheus text, and Chrome trace JSON.
+Every hook records integers the loop already computed, after the journal
+write, so with ``obs`` unset (the default) timelines, reports, and
+journals are bit-identical to the uninstrumented server.
 """
 
 from __future__ import annotations
@@ -344,6 +357,11 @@ class OnlineTapeServer:
         # per-(cartridge, policy) WarmState store for runs without a cache
         # backend; with one, states live on the backend (get_warm/put_warm)
         self._warm_local: dict[tuple, object] = {}
+        # observability (opt-in, see repro.obs): every hook below is guarded
+        # by ``obs is not None`` and records already-computed exact integers,
+        # so an unset obs reproduces the uninstrumented run bit for bit
+        self.obs = self.context.obs
+        self._obs_shard = 0  # the fleet layer stamps each shard's index here
 
     # -- event plumbing ------------------------------------------------------
     def _push(self, when: int, kind: str, data) -> None:
@@ -465,6 +483,14 @@ class OnlineTapeServer:
                     faulted=req.req_id in self._faulted,
                 )
             )
+            if self.obs is not None:
+                self.obs.inc("requests_served_total")
+                self.obs.observe("sojourn", completed - req.time)
+                spec = self.qos.get(req.req_id)
+                if spec is not None and spec.deadline is not None:
+                    self.obs.inc("deadlines_total")
+                    if completed > spec.deadline:
+                        self.obs.inc("deadline_misses_total")
 
     def _fail_requests(self, reqs: list[Request], reason: str, now: int) -> None:
         for req in reqs:
@@ -477,6 +503,12 @@ class OnlineTapeServer:
                     failed_at=now,
                     reason=reason,
                 )
+            )
+        if self.obs is not None and reqs:
+            self.obs.inc("requests_failed_total", len(reqs), reason=reason)
+            self.obs.event(
+                "drop", now, track="queue", shard=self._obs_shard,
+                reason=reason, n=len(reqs),
             )
 
     def _requeue(self, pending: list[Request], reason: str, now: int) -> list[int]:
@@ -526,6 +558,11 @@ class OnlineTapeServer:
         drive.legs = ()
         self.pool.fail_drive(drive)
         self._log(ev="drive-fail", t=now, drive=drive.drive_id, requeued=requeued)
+        if self.obs is not None:
+            self.obs.event(
+                "drive-fail", now, track=f"drive{drive.drive_id}",
+                shard=self._obs_shard, requeued=len(requeued),
+            )
 
     def _media_abort(self, drive: PoolDrive, now: int, span: tuple) -> None:
         """A read pass hit a bad media span: abort at the touch instant.
@@ -566,6 +603,12 @@ class OnlineTapeServer:
             ev="abort", t=now, drive=drive.drive_id, reason="media-error",
             requeued=requeued,
         )
+        if self.obs is not None:
+            self.obs.inc("media_aborts_total")
+            self.obs.event(
+                "media-abort", now, track=f"drive{drive.drive_id}",
+                shard=self._obs_shard,
+            )
         self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
 
     def _acquire(
@@ -596,6 +639,11 @@ class OnlineTapeServer:
                     return None
                 extra += self.retry.backoff(retries)
                 self._retry_delay += self.retry.backoff(retries)
+                if self.obs is not None:
+                    self.obs.inc("mount_retries_total")
+                    self.obs.inc(
+                        "retry_backoff_total", self.retry.backoff(retries)
+                    )
         drive, delay = self.pool.acquire(tid, now=now, view=view)
         return drive, delay + extra, retries
 
@@ -620,6 +668,11 @@ class OnlineTapeServer:
         self.pool = DrivePool(
             n, self.drive_costs, scheduler=self.mount_scheduler, retry=self.retry
         )
+        if self.obs is not None:
+            self.pool.obs = self.obs
+            cache = self.context.cache
+            if cache is not None and hasattr(cache, "obs"):
+                cache.obs = self.obs
         self._served: list[ServedRequest] = []
         self._batches: list[BatchRecord] = []
         self._next_wake: dict[str, int] = {}  # tape_id -> pending window timer
@@ -665,6 +718,15 @@ class OnlineTapeServer:
         self._horizon = max(self._horizon, now)
         tape_id = self.lib.enqueue(req.name, req)
         self._log(ev="enqueue", t=now, req=req.req_id, tape=tape_id)
+        if self.obs is not None:
+            self.obs.event(
+                "arrival", now, track="queue", shard=self._obs_shard,
+                req=req.req_id, tape=tape_id,
+            )
+            self.obs.inc("requests_arrived_total")
+            self.obs.observe(
+                "queue_depth", sum(len(q) for q in self.lib.queues.values())
+            )
         if self.admission == "preempt":
             drive = self.pool.drive_of(tape_id)
             if drive is not None and drive.busy and now < drive.service_end:
@@ -1153,6 +1215,33 @@ class OnlineTapeServer:
             reqs=[r.req_id for r in batch], delay=delay, cost=res.cost,
             makespan=replay.makespan,
         )
+        if self.obs is not None:
+            track = f"drive{drive.drive_id}"
+            if delay:
+                self.obs.span(
+                    "mount", now, now + delay, track=track,
+                    shard=self._obs_shard, tape=tape.tape_id,
+                )
+            if solve_delay:
+                self.obs.span(
+                    "solve-delay", now + delay, start, track=track,
+                    shard=self._obs_shard,
+                )
+            self.obs.span(
+                "batch", start, drive.service_end, track=track,
+                shard=self._obs_shard, tape=tape.tape_id,
+                n_requests=len(batch), policy=pol,
+                cells=stats.cells_evaluated,
+            )
+            self.obs.inc("batches_total")
+            self.obs.inc("mount_delay_total", delay)
+            self.obs.inc("solve_delay_total", solve_delay)
+            self.obs.inc("cells_evaluated_total", stats.cells_evaluated)
+            self.obs.inc("cells_reused_total", stats.cells_reused)
+            if self.selector is not None:
+                self.obs.inc("selector_decisions_total", policy=pol)
+            if degraded_to:
+                self.obs.inc("degraded_dispatches_total", backend=degraded_to)
         if self._injector is not None:
             hit = self._injector.media_fault(tape.tape_id, replay.legs)
             if hit is not None:
@@ -1253,6 +1342,12 @@ class OnlineTapeServer:
             ev="abort", t=now, drive=drive.drive_id, reason=reason,
             requeued=[r.req_id for r in pending],
         )
+        if self.obs is not None:
+            self.obs.inc("preemptions_total", reason=reason)
+            self.obs.event(
+                "preempt", now, track=f"drive{drive.drive_id}",
+                shard=self._obs_shard, reason=reason,
+            )
         self._push(drive.busy_until, "free", (drive.drive_id, drive.epoch))
 
 

@@ -501,6 +501,14 @@ class ServiceReport:
 
     def summary(self) -> dict:
         """Machine-readable row for benchmarks (``--record``)."""
+        # DrivePool.stats() now always reports alive_drives, but this row's
+        # key shape (and order) is pinned by recorded benchmark JSON: keep
+        # alive_drives out of fault-free rows and after drive_failures
+        # otherwise, exactly as the pre-observability pool reported it.
+        pool = dict(self.pool_stats) if self.pool_stats else {}
+        alive = pool.pop("alive_drives", None)
+        if "drive_failures" in pool and alive is not None:
+            pool["alive_drives"] = alive
         out = {
             "admission": self.admission,
             "policy": self.policy,
@@ -525,7 +533,7 @@ class ServiceReport:
             "cells_per_batch": (
                 self.cells_evaluated / len(self.batches) if self.batches else 0.0
             ),
-            **(dict(self.pool_stats) if self.pool_stats else {}),
+            **pool,
             **({"cache": dict(self.cache_stats)} if self.cache_stats else {}),
         }
         if self.qos:

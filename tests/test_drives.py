@@ -80,6 +80,7 @@ def test_pool_allocation_is_deterministic_and_counts_mounts():
         "mounts": 3,
         "unmounts": 1,
         "mount_time": 3 * COSTS.switch + COSTS.unmount,
+        "alive_drives": 2,
     }
 
 
@@ -174,6 +175,52 @@ def test_fault_free_pool_stats_hide_failure_key():
     pool = DrivePool(2, COSTS)
     pool.acquire("A")
     assert "drive_failures" not in pool.stats()
+
+
+def test_pool_stats_always_report_alive_drives():
+    """``stats()`` reports ``alive_drives`` unconditionally — a monitoring
+    consumer polling a healthy pool must not need a fault to learn its
+    capacity (the old shape only grew the key after the first failure)."""
+    pool = DrivePool(3, COSTS)
+    assert pool.stats()["alive_drives"] == 3
+    pool.acquire("A")
+    s = pool.stats()
+    assert s["alive_drives"] == 3 and "drive_failures" not in s
+    pool.fail_drive(pool.drives[0])
+    assert pool.stats()["alive_drives"] == 2
+
+
+def test_report_summary_keeps_old_conditional_alive_drives_shape():
+    """Compat pin: ``ServiceReport.summary()`` keeps the *old* conditional
+    surface even though ``stats()`` is now unconditional — fault-free rows
+    carry no ``alive_drives`` key, and faulted rows order it *after*
+    ``drive_failures``, exactly as the pre-observability pool reported it
+    (the recorded benchmark JSON pins these row bytes)."""
+    lib = build_library()
+    report = serve_trace(
+        lib, build_trace(24), "per-drive-accumulate", window=400_000,
+        policy="dp", n_drives=2, drive_costs=COSTS, context=lib.context,
+    )
+    s = report.summary()  # pool stats splat flat into the summary row
+    assert "alive_drives" not in s
+    keys = list(s)
+    assert keys[keys.index("n_drives"):keys.index("mount_time") + 1] == \
+        ["n_drives", "mounts", "unmounts", "mount_time"]
+    # a faulted run keeps the key, in the old position
+    from repro.serving.faults import DriveFailure, FaultPlan
+    from repro.serving.drives import RetryPolicy
+
+    lib = build_library()
+    report = serve_trace(
+        lib, build_trace(24), "per-drive-accumulate", window=400_000,
+        policy="dp", n_drives=2, drive_costs=COSTS, context=lib.context,
+        faults=FaultPlan(drive_failures=(DriveFailure(at=1, drive=0),)),
+        retry=RetryPolicy(on_exhausted="drop"),
+    )
+    s = report.summary()
+    keys = list(s)
+    assert keys[keys.index("drive_failures") + 1] == "alive_drives"
+    assert s["alive_drives"] == 1 and s["drive_failures"] == 1
 
 
 # ---------------------------------------------------------------------------

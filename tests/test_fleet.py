@@ -346,6 +346,82 @@ def test_merged_report_sums_shards():
     assert pool["n_drives"] == sum(r.pool_stats["n_drives"] for r in fr.shards)
 
 
+def test_merge_reports_with_empty_shard_reports():
+    """A shard that saw no arrivals merges as a no-op: counters add zero,
+    the horizon stays the busy shard's, and an all-empty federation merges
+    to an exactly-empty report (not an error)."""
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    trace = fleet_trace(libs, rmap, n_requests=24)
+    busy = serve_trace(libs[0], [r for r in trace if 0 == rmap.primary(r.name)],
+                       "accumulate", window=400_000, n_drives=2,
+                       drive_costs=COSTS)
+    idle = serve_trace(libs[1], [], "accumulate", window=400_000, n_drives=2,
+                       drive_costs=COSTS)
+    merged = merge_reports([busy, idle])
+    assert merged.n_served == busy.n_served and merged.n_failed == 0
+    assert merged.horizon == busy.horizon
+    assert merged.total_sojourn == busy.total_sojourn
+    assert _timeline(merged) == _timeline(busy)
+    # pool stats still sum: the idle pool contributes its configured drives
+    assert merged.pool_stats["n_drives"] == 4
+    assert merged.pool_stats["mounts"] == busy.pool_stats["mounts"]
+    # an all-empty federation is a valid (empty) report
+    empty = merge_reports([idle, idle])
+    assert empty.n_served == 0 and empty.horizon == 0 and empty.served == []
+
+
+def test_merge_reports_zero_completions_nonzero_drops():
+    """A federation that drops *everything* (every shard dark at t=0) still
+    merges exactly: zero served rows, every request a typed failure, and
+    the summary's sojourn quantiles read as zeros instead of dividing by
+    an empty distribution."""
+    libs, rmap = build_fleet(n_shards=2, replicas=1)
+    trace = fleet_trace(libs, rmap, n_requests=24)
+    fr = serve_fleet_trace(
+        libs, trace, "accumulate", placement="static-hash", replica_map=rmap,
+        outages=(ShardOutage(at=0, shard=0), ShardOutage(at=0, shard=1)),
+        window=400_000, n_drives=2, drive_costs=COSTS,
+        retry=RetryPolicy(on_exhausted="drop"),
+    )
+    merged = fr.merged
+    assert merged.n_served == 0 and merged.n_failed == len(trace)
+    assert merged.total_sojourn == 0
+    # failed rows re-sort under the single-server order (failed_at, req_id)
+    keys = [(f.failed_at, f.req_id) for f in merged.failed]
+    assert keys == sorted(keys)
+    s = fr.summary()
+    assert s["n_served"] == 0 and s["mean_sojourn"] == 0
+    assert s["p50_sojourn"] == 0 and s["p99_sojourn"] == 0
+
+
+def test_merge_reports_sums_fault_stats():
+    """Merged ``fault_stats`` is the key-wise sum of the per-shard dicts,
+    and stays absent when absent on every shard."""
+    libs, rmap = build_fleet()
+    trace = fleet_trace(libs, rmap)
+    fr = serve_fleet_trace(
+        libs, trace, "accumulate", placement="replica-affinity",
+        replica_map=rmap, outages=(ShardOutage(at=1_500_000, shard=1),),
+        window=400_000, n_drives=2, drive_costs=COSTS,
+        retry=RetryPolicy(on_exhausted="drop"),
+    )
+    per_shard = [r.fault_stats for r in fr.shards if r.fault_stats]
+    assert per_shard, "the outage must have produced fault accounting"
+    want: dict = {}
+    for d in per_shard:
+        for k, v in d.items():
+            want[k] = want.get(k, 0) + v
+    assert fr.merged.fault_stats == want
+    # fault-free federation: the section stays absent, not zero-filled
+    libs, rmap = build_fleet()
+    calm = serve_fleet_trace(
+        libs, trace, "accumulate", placement="replica-affinity",
+        replica_map=rmap, window=400_000, n_drives=2, drive_costs=COSTS,
+    )
+    assert calm.merged.fault_stats is None
+    assert all(r.fault_stats is None for r in calm.shards)
+
+
 def test_merge_reports_rejects_mixed_configs():
     libs, rmap = build_fleet(n_shards=2, replicas=1)
     trace = fleet_trace(libs, rmap, n_requests=24)
